@@ -1,0 +1,3 @@
+"""Benchmark harness: one module per paper table/figure + framework
+benchmarks (kernels, offload, pipeline).  Results are cached under
+``benchmarks/cache`` so reruns are incremental."""

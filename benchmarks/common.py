@@ -1,0 +1,201 @@
+"""Shared benchmark infrastructure: cached traces, cached training cells,
+cached UVM simulations."""
+from __future__ import annotations
+
+import functools
+import hashlib
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (
+    DeltaVocab, PredictorConfig, PredictorService, build_dataset,
+    cluster_trace, delta_convergence, revised_config, train_predictor,
+)
+from repro.traces import GPUModel, generate_benchmark
+from repro.uvm import (
+    LearnedPrefetcher, NoPrefetcher, TreePrefetcher, UVMConfig, UVMSimulator,
+)
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "cache")
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+ALL_BENCHMARKS = ["AddVectors", "ATAX", "Backprop", "BICG", "Hotspot", "MVT",
+                  "NW", "Pathfinder", "Srad-v2", "StreamTriad", "2DCONV"]
+PREDICTOR_BENCHMARKS = ["AddVectors", "ATAX", "Backprop", "BICG", "Hotspot",
+                        "MVT", "NW", "Pathfinder", "Srad-v2"]
+
+STEPS = 60 if QUICK else 150
+SERVICE_STEPS = 60 if QUICK else 150
+
+
+def _cache_path(key: str) -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    h = hashlib.sha256(key.encode()).hexdigest()[:20]
+    return os.path.join(CACHE_DIR, f"{h}.json")
+
+
+def cached(key: str, fn):
+    path = _cache_path(key)
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    result = fn()
+    result["_seconds"] = time.time() - t0
+    result["_key"] = key
+    with open(path, "w") as f:
+        json.dump(result, f, default=float)
+    return result
+
+
+@functools.lru_cache(maxsize=16)
+def get_trace(name: str):
+    return GPUModel().run(generate_benchmark(name))
+
+
+# The paper simulates a fixed instruction budget per benchmark (Table 10),
+# not whole-workload completion: arrays are only partially touched within
+# the window, which is exactly what exposes the tree prefetcher's
+# over-fetching (its accuracy is 0.79 there, not ~1.0).  UVM evaluation
+# therefore runs on the leading 60% window of each trace.
+EVAL_WINDOW = 0.6
+
+
+@functools.lru_cache(maxsize=16)
+def get_eval_trace(name: str):
+    tr, _ = get_trace(name).split(EVAL_WINDOW)
+    return tr
+
+
+def train_cell(bench: str, *, cluster: str = "sm", distance: int = 1,
+               arch: str = "transformer", attention: str = "full",
+               revised: bool = False, quantize: bool = False,
+               shuffle: bool = False, features: Optional[tuple] = None,
+               n_layers: int = 2, n_heads: int = 4, steps: int = None,
+               drop_feature: Optional[str] = None,
+               single_feature: Optional[str] = None) -> Dict:
+    """Train one predictor configuration on one benchmark; cached."""
+    steps = steps or STEPS
+    if revised:
+        # the 12-dim revised model is ~100x cheaper per step than the
+        # 200-dim transformer but needs more steps to converge
+        steps = max(steps, 400)
+    key = json.dumps(dict(
+        v=8, bench=bench, cluster=cluster, distance=distance, arch=arch,
+        attention=attention, revised=revised, quantize=quantize,
+        shuffle=shuffle, features=features, n_layers=n_layers,
+        n_heads=n_heads, steps=steps, drop=drop_feature,
+        single=single_feature), sort_keys=True)
+
+    def compute():
+        from repro.core.model import EMB_DIMS, REVISED_FEATURES
+        trace = get_trace(bench)
+        ct = cluster_trace(trace, cluster)
+        vocab = DeltaVocab.build(ct, distance=distance)
+        conv = delta_convergence(ct)
+        feats = features
+        if feats is None:
+            feats = REVISED_FEATURES if revised else tuple(EMB_DIMS)
+        if drop_feature:
+            feats = tuple(f for f in feats if f != drop_feature)
+        if single_feature:
+            feats = (single_feature,)
+        if revised:
+            import dataclasses as _dc
+            cfg = revised_config(vocab.n_classes, conv, quantize=quantize)
+            if attention != "hlsh":
+                # explicit attention override (ablations)
+                cfg = _dc.replace(cfg, attention=attention)
+        else:
+            cfg = PredictorConfig(
+                n_classes=vocab.n_classes, arch=arch, attention=attention,
+                features=feats, n_layers=n_layers, n_heads=n_heads,
+                quantize=quantize)
+        data = build_dataset(ct, vocab, features=list(cfg.features),
+                             distance=distance, shuffle_tokens=shuffle,
+                             max_train=10000, max_eval=3000)
+        res = train_predictor(cfg, data, steps=steps)
+        return {"bench": bench, "convergence": conv,
+                "n_classes": vocab.n_classes,
+                "f1": res.metrics["f1"], "top1": res.metrics["top1"],
+                "top10": res.metrics.get("top10"),
+                "train_seconds": res.train_seconds,
+                "d_model": cfg.d_model}
+
+    return cached(key, compute)
+
+
+@functools.lru_cache(maxsize=32)
+def _service_predictions(bench: str, steps: int):
+    trace = get_eval_trace(bench)
+    svc = PredictorService(steps=steps)
+    res = svc.fit(trace)
+    preds = svc.predict_trace()
+    return trace, preds, svc, res
+
+
+def uvm_cell(bench: str, prefetcher: str, *,
+             prediction_us: float = 1.0,
+             device_pages: Optional[int] = None,
+             timeline: bool = False) -> Dict:
+    """Run the UVM simulator for (benchmark, prefetcher); cached (except when
+    a timeline is requested)."""
+    key = json.dumps(dict(v=8, bench=bench, pf=prefetcher,
+                          us=prediction_us, dp=device_pages,
+                          steps=SERVICE_STEPS), sort_keys=True)
+
+    def compute():
+        trace = get_eval_trace(bench)
+        cfg = UVMConfig(prediction_overhead_us=prediction_us,
+                        device_pages=device_pages)
+        sim = UVMSimulator(cfg, record_timeline=timeline)
+        if prefetcher == "tree":
+            pf = TreePrefetcher()
+        elif prefetcher == "none":
+            pf = NoPrefetcher()
+        elif prefetcher == "learned":
+            _, preds, _, _ = _service_predictions(bench, SERVICE_STEPS)
+            pf = LearnedPrefetcher(
+                preds,
+                extra_latency_cycles=prediction_us * cfg.cycles_per_us)
+        else:
+            raise ValueError(prefetcher)
+        st = sim.run(trace, pf)
+        out = {
+            "bench": bench, "prefetcher": prefetcher,
+            "ipc": st.ipc, "hit_rate": st.hit_rate,
+            "accuracy": st.accuracy, "coverage": st.coverage,
+            "unity": st.unity, "pcie_bytes": st.pcie_bytes,
+            "cycles": st.cycles, "faults": st.faults, "late": st.late,
+            "n_accesses": st.n_accesses,
+            "simulated_instructions": st.n_instructions,
+        }
+        if timeline and st.timeline is not None:
+            out["timeline"] = st.timeline.tolist()
+        return out
+
+    if timeline:
+        return compute()
+    return cached(key, compute)
+
+
+def geomean(xs: List[float]) -> float:
+    xs = np.asarray(xs, dtype=np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))
+
+
+def print_table(title: str, rows: List[Dict], cols: List[str]) -> None:
+    print(f"\n== {title} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(_fmt(r.get(c)) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)

@@ -1,0 +1,36 @@
+"""Paper Fig 10: IPC sensitivity to prediction overhead (1/2/5/10 us),
+normalized to the UVMSmart (tree) runtime."""
+from __future__ import annotations
+
+from benchmarks.common import (ALL_BENCHMARKS, geomean, print_table,
+                               uvm_cell)
+
+LATENCIES = [1.0, 2.0, 5.0, 10.0]
+
+
+def run():
+    rows = []
+    means = {}
+    for us in LATENCIES:
+        gains = []
+        for b in ALL_BENCHMARKS:
+            tree = uvm_cell(b, "tree")
+            ours = uvm_cell(b, "learned", prediction_us=us)
+            gain = ours["ipc"] / tree["ipc"]
+            gains.append(gain)
+            rows.append({"bench": b, "latency_us": us,
+                         "ipc_normalized": gain})
+        means[us] = geomean(gains)
+    for us, g in means.items():
+        rows.append({"bench": "GEOMEAN", "latency_us": us,
+                     "ipc_normalized": g})
+    return rows
+
+
+def main():
+    print_table("Fig 10: prediction-overhead sensitivity (IPC vs UVMSmart)",
+                run(), ["bench", "latency_us", "ipc_normalized"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Paper Figs 11-12: CPU-GPU interconnect usage.  Fig 11's BICG timeline is
+emitted as a CSV sidecar; Fig 12 is the normalized per-benchmark usage."""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import (ALL_BENCHMARKS, CACHE_DIR, geomean,
+                               print_table, uvm_cell)
+from repro.uvm.metrics import pcie_gbs_timeline
+
+
+def run():
+    rows = []
+    ratios = []
+    for b in ALL_BENCHMARKS:
+        tree = uvm_cell(b, "tree")
+        ours = uvm_cell(b, "learned")
+        ratio = ours["pcie_bytes"] / max(tree["pcie_bytes"], 1)
+        ratios.append(ratio)
+        rows.append({"bench": b, "pcie_U_mb": tree["pcie_bytes"] / 1e6,
+                     "pcie_R_mb": ours["pcie_bytes"] / 1e6,
+                     "normalized": ratio})
+    rows.append({"bench": "GEOMEAN", "pcie_U_mb": float("nan"),
+                 "pcie_R_mb": float("nan"), "normalized": geomean(ratios)})
+    return rows
+
+
+def bicg_timeline():
+    """Fig 11: PCIe GB/s over time for BICG under both runtimes."""
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    out = os.path.join(CACHE_DIR, "fig11_bicg_timeline.csv")
+    lines = ["prefetcher,cycle,gbs"]
+    for pf in ("tree", "learned"):
+        r = uvm_cell("BICG", pf, timeline=True)
+        tl = pcie_gbs_timeline(np.asarray(r["timeline"]), core_mhz=1481.0)
+        for cyc, gbs in tl[:2000]:
+            lines.append(f"{pf},{cyc:.0f},{gbs:.3f}")
+    with open(out, "w") as f:
+        f.write("\n".join(lines))
+    return out
+
+
+def main():
+    print_table("Fig 12: normalized PCIe usage", run(),
+                ["bench", "pcie_U_mb", "pcie_R_mb", "normalized"])
+    print("Fig 11 timeline ->", bicg_timeline())
+
+
+if __name__ == "__main__":
+    main()

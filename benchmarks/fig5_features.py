@@ -1,0 +1,27 @@
+"""Paper Fig 5 / §5.3: single-feature prediction (which features carry the
+signal — page delta, page address and PC dominate)."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, train_cell
+
+BENCHES = ["NW", "Backprop"]
+FEATURES = ["dp", "paddr", "pc", "bbaddr", "cta", "warp", "sm", "kernel"]
+
+
+def run():
+    rows = []
+    for b in BENCHES:
+        for f in FEATURES:
+            r = train_cell(b, single_feature=f, distance=1, steps=150)
+            rows.append({"bench": b, "feature": f, "f1": r["f1"],
+                         "top1": r["top1"]})
+    return rows
+
+
+def main():
+    print_table("Fig 5: single-feature prediction", run(),
+                ["bench", "feature", "f1", "top1"])
+
+
+if __name__ == "__main__":
+    main()

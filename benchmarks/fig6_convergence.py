@@ -1,0 +1,35 @@
+"""Paper Fig 6: page-delta convergence vs order sensitivity.
+
+High-convergence benchmarks (one dominant delta) lose nothing when input
+token order is shuffled — they don't need self-attention (the revised
+predictor's bypass indicator); low-convergence benchmarks degrade."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, train_cell
+
+BENCHES = ["ATAX", "BICG", "MVT", "NW", "Backprop", "Srad-v2"]
+
+
+def run():
+    rows = []
+    for b in BENCHES:
+        ordered = train_cell(b, distance=1)
+        shuffled = train_cell(b, distance=1, shuffle=True)
+        conv = ordered["convergence"]
+        rows.append({
+            "bench": b, "convergence": conv,
+            "top1_ordered": ordered["top1"],
+            "top1_shuffled": shuffled["top1"],
+            "degradation": ordered["top1"] - shuffled["top1"],
+        })
+    return rows
+
+
+def main():
+    print_table("Fig 6: delta convergence vs shuffle sensitivity", run(),
+                ["bench", "convergence", "top1_ordered", "top1_shuffled",
+                 "degradation"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig 9: CNN / LSTM / MLP / Transformer / revised-HLSH comparison."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, train_cell
+
+BENCHES = ["ATAX", "Backprop", "NW", "Srad-v2"]
+MODELS = [("transformer", {}), ("lstm", {}), ("cnn", {}), ("mlp", {}),
+          ("hlsh", {"revised": True})]
+
+
+def run():
+    rows = []
+    for name, kw in MODELS:
+        for b in BENCHES:
+            arch = "transformer" if name in ("transformer", "hlsh") else name
+            r = train_cell(b, arch=arch, distance=1, **kw)
+            rows.append({"bench": b, "model": name,
+                         "f1": r["f1"], "top1": r["top1"]})
+    return rows
+
+
+def main():
+    print_table("Fig 9: predictor comparison", run(),
+                ["bench", "model", "f1", "top1"])
+
+
+if __name__ == "__main__":
+    main()

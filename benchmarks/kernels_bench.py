@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: Pallas kernels (interpret mode on CPU — a
+correctness/shape harness; wall-times are meaningful only on TPU) vs the
+pure-jnp oracles, plus the oracle's XLA-CPU throughput as the runnable
+number."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    # flash attention oracle throughput at serving shapes
+    for (b, h, hkv, s, d) in [(1, 8, 2, 1024, 64), (1, 16, 4, 2048, 128)]:
+        q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+        f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, True))
+        us = _time(f, q, k, v)
+        flops = 4.0 * b * h * s * s * d
+        rows.append({"kernel": f"attn_b{b}h{h}s{s}d{d}", "us_per_call": us,
+                     "derived_gflops": flops / us / 1e3})
+    # int4 matmul oracle
+    for (m, kk, n) in [(256, 1024, 1024)]:
+        x = jnp.asarray(rng.normal(size=(m, kk)), jnp.float32)
+        w = jnp.asarray(rng.integers(0, 256, (kk, n // 2)).astype(np.uint8))
+        f = jax.jit(lambda x, w: ref.int4_matmul_ref(x, w, 0.05))
+        us = _time(f, x, w)
+        rows.append({"kernel": f"int4_{m}x{kk}x{n}", "us_per_call": us,
+                     "derived_gflops": 2.0 * m * kk * n / us / 1e3})
+    return rows
+
+
+def main():
+    print_table("Kernel micro-benchmarks (XLA-CPU oracle timings)", run(),
+                ["kernel", "us_per_call", "derived_gflops"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Beyond-paper benchmark: learned KV-block offload prefetching during
+serving (the paper's technique as a framework feature, DESIGN §3.3)."""
+from __future__ import annotations
+
+from benchmarks.common import print_table
+from repro.offload import OffloadPrefetcher, PagedKVStore
+from repro.offload.paged_store import BLOCK_TOKENS
+
+
+def _run(n_requests: int, gen: int, capacity: int, prefetch: bool,
+         evict: str = "lru"):
+    store = PagedKVStore(n_requests=n_requests, max_len=4096,
+                         hbm_capacity_blocks=capacity, evict=evict)
+    pf = OffloadPrefetcher(store) if prefetch else None
+    start = 512
+    for step in range(gen):
+        pos = start + step
+        if pf is not None:
+            pf.step(pos)
+        store.on_decode_step(pos)
+    return store.stats()
+
+
+def run():
+    rows = []
+    for cap_frac, cap in (("tight", 64), ("roomy", 160)):
+        for evict in ("lru", "pin"):
+            for prefetch in (False, True):
+                st = _run(n_requests=8, gen=256, capacity=cap,
+                          prefetch=prefetch, evict=evict)
+                rows.append({"capacity": f"{cap}blk({cap_frac})",
+                             "evict": evict, "prefetch": prefetch,
+                             "hit_rate": st["hit_rate"],
+                             "prefetch_acc": st["prefetch_accuracy"],
+                             "host_mb": st["host_bytes"] / 1e6})
+    return rows
+
+
+def main():
+    print_table("Offload: learned KV-block prefetch (serving)", run(),
+                ["capacity", "evict", "prefetch", "hit_rate",
+                 "prefetch_acc", "host_mb"])
+
+
+if __name__ == "__main__":
+    main()

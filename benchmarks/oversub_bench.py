@@ -1,0 +1,48 @@
+"""Beyond-paper study: prefetching under GPU memory *oversubscription*.
+
+The paper evaluates without oversubscription (§7.1) and warns that
+aggressive prefetching risks thrashing when memory is scarce (§2.3).  This
+suite measures exactly that: device capacity swept from 1.5x down to 0.5x
+the working set, for on-demand / tree / learned prefetching."""
+from __future__ import annotations
+
+from benchmarks.common import get_eval_trace, print_table, uvm_cell
+
+
+BENCHES = ["Hotspot", "Backprop"]
+FRACTIONS = [1.5, 0.75, 0.5]
+
+
+def run():
+    rows = []
+    for b in BENCHES:
+        ws = get_eval_trace(b).working_set_pages
+        for frac in FRACTIONS:
+            cap = int(ws * frac)
+            for pf in ("none", "tree", "learned"):
+                r = uvm_cell(b, pf, device_pages=cap)
+                rows.append({
+                    "bench": b, "capacity_x": frac, "prefetcher": pf,
+                    "hit_rate": r["hit_rate"],
+                    "pcie_mb": r["pcie_bytes"] / 1e6,
+                    "ipc": r["ipc"],
+                })
+    # normalize IPC within (bench, fraction) to the tree runtime
+    by = {}
+    for r in rows:
+        by.setdefault((r["bench"], r["capacity_x"]), {})[r["prefetcher"]] = r
+    for (bench, frac), d in by.items():
+        tree_ipc = d.get("tree", {}).get("ipc", 1.0)
+        for r in d.values():
+            r["ipc_vs_tree"] = r["ipc"] / max(tree_ipc, 1e-9)
+    return rows
+
+
+def main():
+    print_table("Oversubscription: capacity sweep (beyond paper)", run(),
+                ["bench", "capacity_x", "prefetcher", "hit_rate", "pcie_mb",
+                 "ipc_vs_tree"])
+
+
+if __name__ == "__main__":
+    main()

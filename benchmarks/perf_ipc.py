@@ -1,0 +1,40 @@
+"""Paper §7.4 headline: IPC improvement of our solution vs UVMSmart
+(geomean over the 11 benchmarks), plus hit-rate and traffic summaries."""
+from __future__ import annotations
+
+from benchmarks.common import ALL_BENCHMARKS, geomean, print_table, uvm_cell
+
+
+def run():
+    rows = []
+    gains, hits_u, hits_r, traffic = [], [], [], []
+    for b in ALL_BENCHMARKS:
+        tree = uvm_cell(b, "tree")
+        ours = uvm_cell(b, "learned")
+        g = ours["ipc"] / tree["ipc"]
+        gains.append(g)
+        hits_u.append(tree["hit_rate"])
+        hits_r.append(ours["hit_rate"])
+        traffic.append(ours["pcie_bytes"] / max(tree["pcie_bytes"], 1))
+        rows.append({"bench": b, "ipc_U": tree["ipc"], "ipc_R": ours["ipc"],
+                     "ipc_gain": g})
+    rows.append({"bench": "GEOMEAN", "ipc_U": float("nan"),
+                 "ipc_R": float("nan"), "ipc_gain": geomean(gains)})
+    summary = {
+        "ipc_gain_geomean": geomean(gains),
+        "hit_U_mean": sum(hits_u) / len(hits_u),
+        "hit_R_mean": sum(hits_r) / len(hits_r),
+        "traffic_ratio_geomean": geomean(traffic),
+    }
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print_table("Performance: IPC vs UVMSmart", rows,
+                ["bench", "ipc_U", "ipc_R", "ipc_gain"])
+    print("summary:", summary)
+
+
+if __name__ == "__main__":
+    main()

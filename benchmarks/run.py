@@ -1,0 +1,75 @@
+"""Run every benchmark table/figure.  Prints ``name,us_per_call,derived``
+summary CSV at the end (per-table CSVs above it).
+
+    PYTHONPATH=src python -m benchmarks.run            # full
+    REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --only table1,perf
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (fig5_features, fig6_convergence, fig9_predictors,
+                        oversub_bench,
+                        fig10_latency, fig12_pcie, kernels_bench,
+                        offload_bench, perf_ipc, table1_transformer,
+                        table2_clustering, table3_distance, table4_fc,
+                        table5_hlsh, table67_memory, table8_revised,
+                        table10_hitrate, table11_unity)
+
+SUITES = [
+    ("table1", table1_transformer.main),
+    ("table2", table2_clustering.main),
+    ("table3", table3_distance.main),
+    ("table4", table4_fc.main),
+    ("table5", table5_hlsh.main),
+    ("table67", table67_memory.main),
+    ("table8", table8_revised.main),
+    ("fig5", fig5_features.main),
+    ("fig6", fig6_convergence.main),
+    ("fig9", fig9_predictors.main),
+    ("fig10", fig10_latency.main),
+    ("table10", table10_hitrate.main),
+    ("table11", table11_unity.main),
+    ("fig12", fig12_pcie.main),
+    ("perf", perf_ipc.main),
+    ("kernels", kernels_bench.main),
+    ("offload", offload_bench.main),
+    ("oversub", oversub_bench.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    summary = []
+    failed = []
+    for name, fn in SUITES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            status = "ok"
+        except Exception:
+            traceback.print_exc()
+            status = "FAILED"
+            failed.append(name)
+        summary.append((name, (time.time() - t0) * 1e6, status))
+
+    print("\n== summary ==")
+    print("name,us_per_call,derived")
+    for name, us, status in summary:
+        print(f"{name},{us:.0f},{status}")
+    if failed:
+        raise SystemExit(f"failed suites: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper-vs-reproduction summary: reads the benchmark cache and prints the
+EXPERIMENTS.md headline tables with the paper's published numbers alongside.
+
+    PYTHONPATH=src python -m benchmarks.summarize
+"""
+from __future__ import annotations
+
+from benchmarks import (fig10_latency, perf_ipc, table1_transformer,
+                        table2_clustering, table5_hlsh, table8_revised,
+                        table11_unity, table67_memory)
+from benchmarks.common import geomean
+
+# paper Table 1 (f1, top1)
+PAPER_T1 = {
+    "AddVectors": (0.9785, 0.9767), "ATAX": (0.9904, 0.9943),
+    "Backprop": (0.9175, 0.8893), "BICG": (0.9932, 0.9959),
+    "Hotspot": (0.7611, 0.7676), "MVT": (0.9889, 0.9936),
+    "NW": (0.97, 0.964), "Pathfinder": (0.9128, 0.9119),
+    "Srad-v2": (0.9708, 0.9707),
+}
+# paper headline system numbers (§7)
+PAPER_SYS = {"ipc_gain_geomean": 1.1089, "hit_U_mean": 0.7610,
+             "hit_R_mean": 0.8902, "traffic_ratio_geomean": 0.8895,
+             "unity_U": 0.85, "unity_R": 0.90}
+
+
+def main() -> None:
+    print("## Paper vs reproduction — predictor accuracy (Table 1)\n")
+    print("| bench | paper f1 | ours f1 | paper top1 | ours top1 |")
+    print("|---|---|---|---|---|")
+    rows = table1_transformer.run()
+    for r in rows:
+        pf1, pt1 = PAPER_T1.get(r["bench"], (float("nan"),) * 2)
+        print(f"| {r['bench']} | {pf1:.4f} | {r['f1']:.4f} | {pt1:.4f} | "
+              f"{r['top1']:.4f} |")
+    ours_t1 = geomean([r["top1"] for r in rows])
+    paper_t1 = geomean([v[1] for v in PAPER_T1.values()])
+    print(f"\nmean top-1: paper {paper_t1:.4f} vs ours {ours_t1:.4f}\n")
+
+    print("## Clustering ablation (Table 2): SM-id must win\n")
+    t2 = table2_clustering.run()
+    print("| bench | cluster | ours top1 |")
+    print("|---|---|---|")
+    for r in t2:
+        print(f"| {r['bench']} | {r['cluster']} | {r['top1']:.4f} |")
+
+    print("\n## HLSH vs full attention (Table 5)\n")
+    t5 = table5_hlsh.run()
+    print("| bench | attention | ours top1 |")
+    print("|---|---|---|")
+    for r in t5:
+        print(f"| {r['bench']} | {r['attention']} | {r['top1']:.4f} |")
+
+    print("\n## Revised predictor (Table 8) + memory (Tables 6-7)\n")
+    t8 = table8_revised.run()
+    t67 = {r["bench"]: r for r in table67_memory.run()}
+    print("| bench | top1 T | top1 R | full MB | revised MB |")
+    print("|---|---|---|---|---|")
+    for r in t8:
+        m = t67.get(r["bench"], {})
+        print(f"| {r['bench']} | {r['top1_T']:.4f} | {r['top1_R']:.4f} | "
+              f"{m.get('full_total_mb', 0):.1f} | "
+              f"{m.get('revised_total_mb', 0):.2f} |")
+
+    print("\n## System headline (vs UVMSmart)\n")
+    _, summary = perf_ipc.run()
+    print("| metric | paper | ours |")
+    print("|---|---|---|")
+    print(f"| IPC gain (geomean) | {PAPER_SYS['ipc_gain_geomean']:.4f} | "
+          f"{summary['ipc_gain_geomean']:.4f} |")
+    print(f"| hit rate U (mean) | {PAPER_SYS['hit_U_mean']:.4f} | "
+          f"{summary['hit_U_mean']:.4f} |")
+    print(f"| hit rate R (mean) | {PAPER_SYS['hit_R_mean']:.4f} | "
+          f"{summary['hit_R_mean']:.4f} |")
+    print(f"| PCIe traffic R/U (geomean) | "
+          f"{PAPER_SYS['traffic_ratio_geomean']:.4f} | "
+          f"{summary['traffic_ratio_geomean']:.4f} |")
+    t11 = table11_unity.run()
+    for tag in ("U", "R"):
+        mean = [r for r in t11 if r["bench"] == "MEAN"
+                and r["prefetcher"] == tag][0]["unity"]
+        print(f"| unity {tag} (mean) | {PAPER_SYS['unity_' + tag]:.2f} | "
+              f"{mean:.4f} |")
+
+    print("\n## Prediction-overhead sensitivity (Fig 10, IPC vs UVMSmart)\n")
+    f10 = fig10_latency.run()
+    print("| latency us | paper | ours (geomean) |")
+    print("|---|---|---|")
+    paper_f10 = {1.0: 1.10, 2.0: 1.06, 5.0: 1.00, 10.0: 0.90}
+    for us in (1.0, 2.0, 5.0, 10.0):
+        g = [r for r in f10 if r["bench"] == "GEOMEAN"
+             and r["latency_us"] == us][0]["ipc_normalized"]
+        print(f"| {us} | {paper_f10[us]:.2f} | {g:.4f} |")
+
+
+if __name__ == "__main__":
+    main()

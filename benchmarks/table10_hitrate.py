@@ -1,0 +1,24 @@
+"""Paper Table 10: device-memory page hit rate, UVMSmart (U) vs ours (R)."""
+from __future__ import annotations
+
+from benchmarks.common import ALL_BENCHMARKS, print_table, uvm_cell
+
+
+def run():
+    rows = []
+    for b in ALL_BENCHMARKS:
+        tree = uvm_cell(b, "tree")
+        ours = uvm_cell(b, "learned")
+        rows.append({"bench": b, "hit_U": tree["hit_rate"],
+                     "hit_R": ours["hit_rate"],
+                     "simulated_inst": int(tree["simulated_instructions"])})
+    return rows
+
+
+def main():
+    print_table("Table 10: page hit rate (U=UVMSmart, R=ours)", run(),
+                ["bench", "hit_U", "hit_R", "simulated_inst"])
+
+
+if __name__ == "__main__":
+    main()

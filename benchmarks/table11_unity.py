@@ -1,0 +1,38 @@
+"""Paper Table 11: Unity = cbrt(accuracy * coverage * hit-rate)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ALL_BENCHMARKS, print_table, uvm_cell
+
+
+def run():
+    rows = []
+    for pf, tag in (("tree", "U"), ("learned", "R")):
+        for b in ALL_BENCHMARKS:
+            r = uvm_cell(b, pf)
+            rows.append({"bench": b, "prefetcher": tag,
+                         "acc": r["accuracy"], "cov": r["coverage"],
+                         "hit": r["hit_rate"], "unity": r["unity"]})
+    for tag in ("U", "R"):
+        us = [r["unity"] for r in rows if r["prefetcher"] == tag]
+        rows.append({"bench": "MEAN", "prefetcher": tag,
+                     "acc": float(np.mean([r["acc"] for r in rows
+                                           if r["prefetcher"] == tag])),
+                     "cov": float(np.mean([r["cov"] for r in rows
+                                           if r["prefetcher"] == tag])),
+                     "hit": float(np.mean([r["hit"] for r in rows
+                                           if r["prefetcher"] == tag])),
+                     "unity": float(np.mean(us))})
+    rows.append({"bench": "Ideal", "prefetcher": "-", "acc": 1.0, "cov": 1.0,
+                 "hit": 1.0, "unity": 1.0})
+    return rows
+
+
+def main():
+    print_table("Table 11: Unity", run(),
+                ["bench", "prefetcher", "acc", "cov", "hit", "unity"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table 1: unconstrained Transformer UVM page prediction accuracy."""
+from __future__ import annotations
+
+from benchmarks.common import PREDICTOR_BENCHMARKS, print_table, train_cell
+
+
+def run(benches=None):
+    rows = []
+    for b in benches or PREDICTOR_BENCHMARKS:
+        r = train_cell(b, cluster="sm", distance=1)
+        rows.append({"bench": b, "f1": r["f1"], "top1": r["top1"],
+                     "top10": r["top10"]})
+    return rows
+
+
+def main():
+    print_table("Table 1: Transformer-based UVM page prediction",
+                run(), ["bench", "f1", "top1", "top10"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Table 2: prediction accuracy under different trace clusterings."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, train_cell
+
+BENCHES = ["AddVectors", "NW"]
+CLUSTERS = ["pc", "kernel", "sm", "cta", "warp"]
+
+
+def run():
+    rows = []
+    for cluster in CLUSTERS:
+        for b in BENCHES:
+            r = train_cell(b, cluster=cluster, distance=1)
+            rows.append({"bench": b, "cluster": cluster,
+                         "f1": r["f1"], "top1": r["top1"]})
+    return rows
+
+
+def main():
+    print_table("Table 2: clustering ablation", run(),
+                ["bench", "cluster", "f1", "top1"])
+
+
+if __name__ == "__main__":
+    main()

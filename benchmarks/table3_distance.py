@@ -1,0 +1,25 @@
+"""Paper Table 3: prediction accuracy at different prediction distances."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, train_cell
+
+BENCHES = ["Backprop", "Srad-v2", "ATAX", "NW"]
+
+
+def run():
+    rows = []
+    for dist in (1, 30):
+        for b in BENCHES:
+            r = train_cell(b, cluster="sm", distance=dist)
+            rows.append({"bench": b, "distance": dist,
+                         "f1": r["f1"], "top1": r["top1"]})
+    return rows
+
+
+def main():
+    print_table("Table 3: prediction distance", run(),
+                ["bench", "distance", "f1", "top1"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Table 4: Transformer vs a single FC layer (shuffled inputs).
+High-convergence benchmarks (ATAX, BICG) survive the FC-only predictor;
+NW / Backprop need attention."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, train_cell
+
+BENCHES = ["ATAX", "BICG", "NW", "Backprop"]
+
+
+def run():
+    rows = []
+    for arch in ("transformer", "fc"):
+        for b in BENCHES:
+            r = train_cell(b, arch=arch, shuffle=True, distance=1)
+            rows.append({"bench": b, "predictor": arch,
+                         "f1": r["f1"], "top1": r["top1"]})
+    return rows
+
+
+def main():
+    print_table("Table 4: Transformer vs FC (shuffled)", run(),
+                ["bench", "predictor", "f1", "top1"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Paper Table 5: full attention vs the proposed HLSH attention."""
+from __future__ import annotations
+
+from benchmarks.common import print_table, train_cell
+
+BENCHES = ["ATAX", "BICG", "NW", "Backprop"]
+
+
+def run():
+    rows = []
+    for attn in ("full", "hlsh"):
+        for b in BENCHES:
+            r = train_cell(b, attention=attn, shuffle=True, distance=1)
+            rows.append({"bench": b, "attention": attn,
+                         "f1": r["f1"], "top1": r["top1"]})
+    return rows
+
+
+def main():
+    print_table("Table 5: full vs HLSH attention", run(),
+                ["bench", "attention", "f1", "top1"])
+
+
+if __name__ == "__main__":
+    main()

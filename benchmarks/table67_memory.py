@@ -1,0 +1,52 @@
+"""Paper Tables 6-7: memory footprint of the full Transformer predictor vs
+the revised (3-feature, 1-layer, HLSH, 4-bit) predictor."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (PREDICTOR_BENCHMARKS, get_trace, print_table)
+from repro.core import (DeltaVocab, PredictorConfig, cluster_trace,
+                        delta_convergence, init_params, revised_config)
+from repro.core.model import count_activation_elems
+from repro.core.quantize import footprint_report
+
+BATCH = 128
+
+
+def run():
+    rows = []
+    for b in PREDICTOR_BENCHMARKS:
+        trace = get_trace(b)
+        ct = cluster_trace(trace, "sm")
+        vocab = DeltaVocab.build(ct)
+        conv = delta_convergence(ct)
+
+        full_cfg = PredictorConfig(n_classes=vocab.n_classes)
+        full_p = init_params(full_cfg, jax.random.PRNGKey(0))
+        full = footprint_report(full_p, count_activation_elems(full_cfg),
+                                BATCH, bits=32)
+
+        rev_cfg = revised_config(vocab.n_classes, conv)
+        rev_p = init_params(rev_cfg, jax.random.PRNGKey(0))
+        rev = footprint_report(rev_p, count_activation_elems(rev_cfg),
+                               BATCH, bits=4)
+
+        rows.append({
+            "bench": b,
+            "full_params_mb": full["params_bytes"] / 1e6,
+            "full_total_mb": full["total_bytes"] / 1e6,
+            "revised_params_mb": rev["params_bytes"] / 1e6,
+            "revised_total_mb": rev["total_bytes"] / 1e6,
+            "ratio": full["total_bytes"] / max(rev["total_bytes"], 1),
+        })
+    return rows
+
+
+def main():
+    print_table("Tables 6-7: memory footprint (full vs revised)", run(),
+                ["bench", "full_params_mb", "full_total_mb",
+                 "revised_params_mb", "revised_total_mb", "ratio"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Table 8: unconstrained Transformer vs the revised predictor
+(3 features, 1 layer, 1 head, HLSH + bypass, 4-bit QAT)."""
+from __future__ import annotations
+
+from benchmarks.common import PREDICTOR_BENCHMARKS, print_table, train_cell
+
+
+def run():
+    rows = []
+    for b in PREDICTOR_BENCHMARKS:
+        full = train_cell(b, cluster="sm", distance=1)
+        rev = train_cell(b, cluster="sm", distance=1, revised=True,
+                         quantize=True)
+        rows.append({"bench": b, "f1_T": full["f1"], "top1_T": full["top1"],
+                     "f1_R": rev["f1"], "top1_R": rev["top1"],
+                     "convergence": rev["convergence"]})
+    return rows
+
+
+def main():
+    print_table("Table 8: Transformer (T) vs revised predictor (R)", run(),
+                ["bench", "f1_T", "top1_T", "f1_R", "top1_R", "convergence"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""End-to-end serving driver: decode batched requests against a model from
+the zoo with the paged KV store + learned offload prefetcher (the paper's
+technique as a first-class framework feature).
+
+    PYTHONPATH=src python examples/serve_llm_offload.py --arch smollm-135m
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+    serve.main(["--arch", args.arch, "--reduced",
+                "--requests", str(args.requests),
+                "--prompt-len", "64", "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Train and compare UVM page predictors on one benchmark:
+the unconstrained Transformer (paper §4) vs the revised HLSH predictor
+(paper §6), reporting Table-1/Table-8-style metrics + memory footprints.
+
+    PYTHONPATH=src python examples/train_prefetcher.py --bench NW --steps 200
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.core import (DeltaVocab, PredictorConfig, build_dataset,
+                        cluster_trace, delta_convergence, init_params,
+                        revised_config, train_predictor)
+from repro.core.model import REVISED_FEATURES, EMB_DIMS, count_activation_elems
+from repro.core.quantize import footprint_report
+from repro.traces import GPUModel, generate_benchmark
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="NW")
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    trace = GPUModel().run(generate_benchmark(args.bench))
+    ct = cluster_trace(trace, "sm")
+    vocab = DeltaVocab.build(ct)
+    conv = delta_convergence(ct)
+    print(f"{args.bench}: {len(trace)} requests, {vocab.n_classes} delta "
+          f"classes, convergence {conv:.3f}")
+
+    results = {}
+    for name, cfg, feats in [
+        ("transformer", PredictorConfig(n_classes=vocab.n_classes),
+         tuple(EMB_DIMS)),
+        ("revised", revised_config(vocab.n_classes, conv, quantize=True),
+         REVISED_FEATURES),
+    ]:
+        data = build_dataset(ct, vocab, features=list(feats))
+        res = train_predictor(cfg, data, steps=args.steps)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        bits = 4 if cfg.quantize else 32
+        fp = footprint_report(params, count_activation_elems(cfg), 128,
+                              bits=bits)
+        results[name] = (res, fp, cfg)
+        print(f"  {name:12s} top1={res.metrics['top1']:.4f} "
+              f"f1={res.metrics['f1']:.4f} "
+              f"params={fp['params_bytes']/1e6:.2f}MB "
+              f"total={fp['total_bytes']/1e6:.2f}MB "
+              f"attention={cfg.attention}")
+
+    t, r = results["transformer"], results["revised"]
+    print(f"\nrevised predictor keeps "
+          f"{r[0].metrics['top1']/max(t[0].metrics['top1'],1e-9)*100:.1f}% "
+          f"of top-1 accuracy at "
+          f"{t[1]['total_bytes']/max(r[1]['total_bytes'],1):.0f}x less memory")
+
+
+if __name__ == "__main__":
+    main()

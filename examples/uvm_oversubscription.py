@@ -1,0 +1,51 @@
+"""Beyond-paper ablation: prefetching under GPU memory *oversubscription*
+(the paper evaluates without oversubscription; aggressive prefetch then
+risks thrashing — §2.3).  Sweeps device capacity from 2x down to 0.5x the
+working set.
+
+    PYTHONPATH=src python examples/uvm_oversubscription.py --bench Hotspot
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import PredictorService
+from repro.traces import GPUModel, generate_benchmark
+from repro.uvm import (LearnedPrefetcher, NoPrefetcher, TreePrefetcher,
+                       UVMConfig, UVMSimulator)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="Hotspot")
+    ap.add_argument("--steps", type=int, default=120)
+    args = ap.parse_args()
+
+    trace = GPUModel().run(generate_benchmark(args.bench))
+    ws = trace.working_set_pages
+    svc = PredictorService(steps=args.steps)
+    svc.fit(trace)
+    preds = svc.predict_trace()
+
+    print(f"{args.bench}: working set {ws} pages")
+    print(f"{'capacity':>10s} {'policy':>10s} {'ipc':>8s} {'hit':>7s} "
+          f"{'evicted':>8s} {'pcie MB':>8s}")
+    for frac in (2.0, 1.0, 0.75, 0.5):
+        cap = int(ws * frac)
+        cfg = UVMConfig(device_pages=cap)
+        sim = UVMSimulator(cfg)
+        for name, pf in [
+            ("on-demand", NoPrefetcher()),
+            ("tree", TreePrefetcher()),
+            ("learned", LearnedPrefetcher(
+                preds, extra_latency_cycles=cfg.prediction_overhead_cycles)),
+        ]:
+            st = sim.run(trace, pf)
+            print(f"{frac:>9.2f}x {name:>10s} {st.ipc:8.2f} "
+                  f"{st.hit_rate:7.3f} {st.pages_evicted:8d} "
+                  f"{st.pcie_bytes/1e6:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

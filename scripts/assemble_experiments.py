@@ -1,0 +1,45 @@
+"""Assemble EXPERIMENTS.md: inject generated tables into the markers.
+
+    PYTHONPATH=src python scripts/assemble_experiments.py
+"""
+import io
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(mod):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-m", mod], cwd=ROOT, env=env,
+                         capture_output=True, text=True, timeout=3600)
+    if out.returncode != 0:
+        print(out.stderr[-2000:], file=sys.stderr)
+        raise SystemExit(f"{mod} failed")
+    return out.stdout
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    paper = run("benchmarks.summarize")
+    report_path = os.path.join(ROOT, "experiments", "report.md")
+    report = open(report_path).read() if os.path.exists(report_path) else ""
+    # split the report: dry-run+roofline vs perf
+    perf_idx = report.find("## Perf iterations")
+    dry = report[:perf_idx] if perf_idx >= 0 else report
+    perf = report[perf_idx:] if perf_idx >= 0 else ""
+
+    text = text.replace("<!-- PAPER_RESULTS -->",
+                        "# §Results — paper reproduction\n\n" + paper)
+    text = text.replace("<!-- DRYRUN -->",
+                        "# §Dry-run and §Roofline\n\n" + dry)
+    text = text.replace("<!-- PERF -->", perf)
+    with open(path, "w") as f:
+        f.write(text)
+    print("EXPERIMENTS.md assembled:", len(text), "chars")
+
+
+if __name__ == "__main__":
+    main()

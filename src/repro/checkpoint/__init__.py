@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: sharded npz, atomic commit, async writes,
+elastic restore."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

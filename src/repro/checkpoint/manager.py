@@ -1,0 +1,144 @@
+"""Checkpoint manager built for preemptible fleets.
+
+* **Atomic**: checkpoints are written to ``step_<n>.tmp/`` and committed via
+  a single directory rename — a killed writer never corrupts the latest
+  checkpoint.
+* **Async**: ``save_async`` snapshots device arrays to host (blocking only on
+  the copy) and writes in a background thread; the train loop never waits on
+  the filesystem.
+* **Elastic restore**: arrays are stored unsharded (gathered); ``restore``
+  re-shards onto whatever mesh the new job runs with — N pods can restart as
+  M pods.
+* **Integrity**: a manifest with per-array checksums validates restores.
+* **Pipeline state**: the data-iterator state dict rides along, so resume is
+  exact, not approximate.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._errors: list = []
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, params: Any,
+             extra: Optional[Dict[str, Any]] = None) -> str:
+        """Synchronous atomic save."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), params)
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, params: Any,
+                   extra: Optional[Dict[str, Any]] = None) -> None:
+        """Snapshot to host memory now; write in the background."""
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), params)
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+        self._q.put((step, host, extra or {}))
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._errors:
+            raise RuntimeError(f"async checkpoint failures: {self._errors}")
+
+    def _drain(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                self._write(*item)
+            except Exception as e:  # pragma: no cover
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    # ------------------------------------------------------------------
+    def _write(self, step: int, host_params: Any,
+               extra: Dict[str, Any]) -> str:
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        leaves, treedef = jax.tree.flatten(host_params)
+        manifest = {"step": step, "n_leaves": len(leaves),
+                    "treedef": str(treedef), "extra": extra,
+                    "checksums": []}
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(leaf)
+            path = os.path.join(tmp, f"leaf_{i:05d}.npy")
+            np.save(path, arr)
+            manifest["checksums"].append(_checksum(arr))
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic commit
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure of ``template``; if ``shardings`` is
+        given (possibly for a *different* mesh than the writer's), arrays are
+        placed with those shardings — elastic re-mesh on load."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        leaves, treedef = jax.tree.flatten(template)
+        if len(leaves) != manifest["n_leaves"]:
+            raise ValueError(
+                f"checkpoint has {manifest['n_leaves']} leaves, template "
+                f"has {len(leaves)}")
+        loaded = []
+        for i in range(len(leaves)):
+            arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+            if _checksum(arr) != manifest["checksums"][i]:
+                raise IOError(f"checksum mismatch on leaf {i} (step {step})")
+            loaded.append(arr)
+        if shardings is not None:
+            sh_leaves = jax.tree.leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            loaded = [jax.device_put(a, s) for a, s in zip(loaded, sh_leaves)]
+        restored = jax.tree.unflatten(treedef, loaded)
+        return restored, manifest["extra"]
+
+
+def _checksum(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()[:16]

@@ -1,0 +1,28 @@
+"""The paper's core: deep-learning UVM page prediction.
+
+Pipeline: GMMU trace -> clustering (SM / SM+warp) -> feature tokens -> delta
+vocabulary -> sliding-window sequence dataset -> Transformer (or revised
+HLSH) predictor -> per-access top-1 page predictions -> LearnedPrefetcher.
+"""
+from repro.core.features import (
+    cluster_trace, delta_convergence, ClusteredTrace, FEATURE_NAMES,
+    CLUSTER_KEYS,
+)
+from repro.core.vocab import DeltaVocab, encode_features, FEATURE_BUCKETS
+from repro.core.dataset import build_dataset, SequenceDataset, SEQ_LEN
+from repro.core.model import (
+    PredictorConfig, revised_config, init_params, apply,
+    EMB_DIMS, REVISED_FEATURES,
+)
+from repro.core.train import train_predictor, evaluate, predict_logits, TrainResult
+from repro.core.service import PredictorService, pretrain_corpus
+
+__all__ = [
+    "cluster_trace", "delta_convergence", "ClusteredTrace", "FEATURE_NAMES",
+    "CLUSTER_KEYS", "DeltaVocab", "encode_features", "FEATURE_BUCKETS",
+    "build_dataset", "SequenceDataset", "SEQ_LEN",
+    "PredictorConfig", "revised_config", "init_params", "apply",
+    "EMB_DIMS", "REVISED_FEATURES",
+    "train_predictor", "evaluate", "predict_logits", "TrainResult",
+    "PredictorService", "pretrain_corpus",
+]

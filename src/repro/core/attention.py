@@ -1,0 +1,122 @@
+"""Attention variants for the predictor: full softmax attention, Reformer-style
+LSH attention, and the paper's HLSH (Hamming-based LSH) attention
+(Algorithm 1) in a TPU-friendly mask formulation.
+
+The paper's algorithm erases rows (Hamming score >= HTOP: near-orthogonal to
+everything -> negligible dot products) and lets near-duplicate rows
+(score <= HBOT) share one representative's attention output.  Data-dependent
+erase/copy is gather/scatter-heavy; on TPU we realize identical semantics
+with a multiplicative *keep mask* on Q/K plus an output *share map* applied
+as a take-along-axis — the Pallas kernel (repro.kernels.hlsh_attention)
+additionally skips fully-masked blocks.
+
+These jnp implementations are the reference oracles for the kernels and are
+used directly by the (tiny) predictor models.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   ) -> jnp.ndarray:
+    """(B, N, D) softmax(QK^T/sqrt(D))V."""
+    d = q.shape[-1]
+    logits = jnp.einsum("bnd,bmd->bnm", q, k) / jnp.sqrt(jnp.float32(d))
+    return jnp.einsum("bnm,bmd->bnd", jax.nn.softmax(logits, axis=-1), v)
+
+
+def lsh_hash(x: jnp.ndarray, n_hashes: int, n_buckets: int,
+             key: jax.Array) -> jnp.ndarray:
+    """Angular LSH (Reformer): random rotations + argmax over [xR; -xR].
+    Returns (B, N, n_hashes) int32 bucket ids."""
+    d = x.shape[-1]
+    r = jax.random.normal(key, (d, n_hashes, n_buckets // 2), x.dtype)
+    proj = jnp.einsum("bnd,dhr->bnhr", x, r)
+    proj = jnp.concatenate([proj, -proj], axis=-1)
+    return jnp.argmax(proj, axis=-1).astype(jnp.int32)
+
+
+def lsh_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  key: jax.Array, n_hashes: int = 4, n_buckets: int = 8,
+                  ) -> jnp.ndarray:
+    """Reformer-flavored LSH attention (shared-QK): attention is restricted
+    to pairs that collide in at least one hash round.  O(N^2) as written (the
+    mask is materialized) — the semantics, not the complexity, is what the
+    predictor needs at seq_len 30; the complexity story lives in the Pallas
+    kernel's block skipping."""
+    d = q.shape[-1]
+    qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)
+    buckets = lsh_hash(qn, n_hashes, n_buckets, key)       # (B,N,H)
+    same = (buckets[:, :, None, :] == buckets[:, None, :, :]).any(-1)
+    logits = jnp.einsum("bnd,bmd->bnm", q, k) / jnp.sqrt(jnp.float32(d))
+    logits = jnp.where(same, logits, -1e9)
+    return jnp.einsum("bnm,bmd->bnd", jax.nn.softmax(logits, axis=-1), v)
+
+
+class HLSHPlan(NamedTuple):
+    """The data-dependent part of HLSH, computed once per sequence:
+    keep mask (B, N) and output share map (B, N) of source indices."""
+    keep: jnp.ndarray
+    share_src: jnp.ndarray
+    hscore: jnp.ndarray
+
+
+def hlsh_plan(qk: jnp.ndarray, key: jax.Array, n_hashes: int = 8,
+              n_buckets: int = 8, htop: float = 0.9, hbot: float = 0.1,
+              ) -> HLSHPlan:
+    """Algorithm 1, lines 1-3: LSH bucketing, Hamming scoring against a
+    random half of the entries, geometric-mean reduction, and the
+    erase/share decisions."""
+    b, n, _ = qk.shape
+    k_hash, k_sel = jax.random.split(key)
+    qn = qk / (jnp.linalg.norm(qk, axis=-1, keepdims=True) + 1e-6)
+    h = lsh_hash(qn, n_hashes, n_buckets, k_hash)          # (B,N,H)
+    # random seq_len/2 sample of K^LSH entries (shared across batch: the
+    # selection is data-independent, paper line 2 samples per batch)
+    m = max(n // 2, 1)
+    sel = jax.random.choice(k_sel, n, (m,), replace=False)
+    h_sel = h[:, sel]                                       # (B,M,H)
+    ham = (h[:, :, None, :] != h_sel[:, None, :, :]).sum(-1)  # (B,N,M)
+    # geometric mean over the sampled entries (line 3)
+    hscore = jnp.exp(jnp.mean(jnp.log(ham.astype(jnp.float32) + 1.0),
+                              axis=2)) - 1.0               # (B,N)
+    erase = hscore >= htop * n_hashes
+    low = hscore <= hbot * n_hashes
+    # first low entry is the representative (lines 9-16)
+    any_low = low.any(axis=1, keepdims=True)
+    base = jnp.argmax(low, axis=1)                          # (B,)
+    is_base = jnp.arange(n)[None, :] == base[:, None]
+    keep = (~erase) & (~low | is_base)
+    idx = jnp.broadcast_to(jnp.arange(n)[None, :], (b, n))
+    share_src = jnp.where(low & any_low, base[:, None], idx)
+    return HLSHPlan(keep=keep, share_src=share_src, hscore=hscore)
+
+
+def hlsh_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                   key: jax.Array, n_hashes: int = 8, n_buckets: int = 8,
+                   htop: float = 0.9, hbot: float = 0.1) -> jnp.ndarray:
+    """Paper Algorithm 1 (mask formulation).  Shared-QK callers pass q=k."""
+    plan = hlsh_plan(q, key, n_hashes, n_buckets, htop, hbot)
+    return hlsh_apply(q, k, v, plan)
+
+
+def hlsh_apply(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               plan: HLSHPlan) -> jnp.ndarray:
+    d = q.shape[-1]
+    keep = plan.keep[..., None].astype(q.dtype)
+    qm = q * keep
+    km = k * keep
+    logits = jnp.einsum("bnd,bmd->bnm", qm, km) / jnp.sqrt(jnp.float32(d))
+    out = jnp.einsum("bnm,bmd->bnd", jax.nn.softmax(logits, axis=-1), v)
+    # copy the representative's output into the erased near-duplicates
+    return jnp.take_along_axis(out, plan.share_src[..., None], axis=1)
+
+
+def hlsh_erased_fraction(plan: HLSHPlan) -> jnp.ndarray:
+    """Fraction of rows whose dot products were skipped — the work saving the
+    Pallas kernel turns into skipped blocks."""
+    return 1.0 - plan.keep.mean()

@@ -1,0 +1,285 @@
+"""Predictor models (paper §4, §6, §7.2).
+
+* ``transformer`` — the unconstrained encoder-only predictor: 13-feature
+  embedding concat (200 dims), sinusoidal positions, 2 encoder layers,
+  multi-head full attention, last-token classification head.
+* ``revised`` is the same architecture family configured per §6: 3 features
+  (paddr, dp, pc; 12 embedding dims), 1 layer, 1 head, HLSH attention with a
+  convergence-based bypass, optional 4-bit quantization-aware training.
+* ``fc`` / ``mlp`` / ``cnn`` / ``lstm`` — the comparison predictors of
+  Table 4 and Fig 9.
+
+Pure-functional: ``init_params(cfg, key)`` -> pytree;
+``apply(cfg, params, x)`` -> logits.  x is (B, seq, n_features) int32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import attention as attn_lib
+from repro.core.quantize import fake_quant, fake_quant_tensor
+from repro.core.vocab import FEATURE_BUCKETS
+
+# embedding width per feature; the full 13(+kernel)-feature concat is 200
+# dims, matching the paper's embedding output of 200 x 30.
+EMB_DIMS: Dict[str, int] = {
+    "pc": 24, "hit": 4, "warp": 12, "sm": 12, "tpc": 8, "cta": 12,
+    "kernel": 8, "paddr": 32, "bbaddr": 16, "raddr": 8, "inarr": 8,
+    "dp": 32, "dbb": 16, "dr": 8,
+}
+# revised predictor (§6): 3 features, 12 total embedding dims
+REVISED_EMB_DIMS: Dict[str, int] = {"paddr": 4, "dp": 6, "pc": 2}
+REVISED_FEATURES = ("paddr", "dp", "pc")
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorConfig:
+    n_classes: int
+    arch: str = "transformer"          # transformer|fc|mlp|cnn|lstm
+    attention: str = "full"            # full|hlsh|lsh|bypass
+    features: Tuple[str, ...] = tuple(EMB_DIMS)
+    seq_len: int = 30
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff_mult: int = 4
+    quantize: bool = False
+    revised_dims: bool = False         # use the 12-dim embedding set
+    n_hashes: int = 8
+    n_buckets: int = 8
+    htop: float = 0.9
+    hbot: float = 0.1
+    lsh_seed: int = 7
+    hidden: int = 128                  # lstm/cnn/mlp width
+
+    @property
+    def emb_dims(self) -> Dict[str, int]:
+        base = REVISED_EMB_DIMS if self.revised_dims else EMB_DIMS
+        return {f: base[f] for f in self.features}
+
+    @property
+    def d_model(self) -> int:
+        return sum(self.emb_dims.values())
+
+
+def revised_config(n_classes: int, convergence: float,
+                   bypass_threshold: float = 0.7,
+                   quantize: bool = True) -> PredictorConfig:
+    """§6: SM+warp clustering is handled upstream; here: 3 features, 1 layer,
+    1 head, HLSH attention, and the bypass indicator — if one page delta
+    dominates the training data, attention is skipped entirely."""
+    bypass = convergence >= bypass_threshold
+    return PredictorConfig(
+        n_classes=n_classes, arch="transformer",
+        attention="bypass" if bypass else "hlsh",
+        features=REVISED_FEATURES, revised_dims=True,
+        n_layers=1, n_heads=1, quantize=quantize,
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    s = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * s
+
+
+def init_params(cfg: PredictorConfig, key: jax.Array):
+    keys = iter(jax.random.split(key, 64))
+    p: Dict = {"emb": {}}
+    for f, dim in cfg.emb_dims.items():
+        p["emb"][f] = jax.random.normal(next(keys),
+                                        (FEATURE_BUCKETS[f], dim)) * 0.02
+    d = cfg.d_model
+    if cfg.arch == "transformer":
+        p["layers"] = []
+        for _ in range(cfg.n_layers):
+            ff = d * cfg.d_ff_mult
+            p["layers"].append({
+                "wq": _dense_init(next(keys), (d, d)),
+                "wk": _dense_init(next(keys), (d, d)),
+                "wv": _dense_init(next(keys), (d, d)),
+                "wo": _dense_init(next(keys), (d, d)),
+                "ln1": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+                "w1": _dense_init(next(keys), (d, ff)),
+                "b1": jnp.zeros(ff),
+                "w2": _dense_init(next(keys), (ff, d)),
+                "b2": jnp.zeros(d),
+                "ln2": {"g": jnp.ones(d), "b": jnp.zeros(d)},
+            })
+        p["head"] = _dense_init(next(keys), (d, cfg.n_classes))
+        p["head_b"] = jnp.zeros(cfg.n_classes)
+    elif cfg.arch == "fc":
+        p["head"] = _dense_init(next(keys), (cfg.seq_len * d, cfg.n_classes))
+        p["head_b"] = jnp.zeros(cfg.n_classes)
+    elif cfg.arch == "mlp":
+        h = cfg.hidden
+        p["w1"] = _dense_init(next(keys), (cfg.seq_len * d, h))
+        p["b1"] = jnp.zeros(h)
+        p["w2"] = _dense_init(next(keys), (h, h))
+        p["b2"] = jnp.zeros(h)
+        p["head"] = _dense_init(next(keys), (h, cfg.n_classes))
+        p["head_b"] = jnp.zeros(cfg.n_classes)
+    elif cfg.arch == "cnn":
+        h = cfg.hidden
+        p["c1"] = _dense_init(next(keys), (3, d, h), scale=0.1)
+        p["c2"] = _dense_init(next(keys), (3, h, h), scale=0.1)
+        p["head"] = _dense_init(next(keys), (h, cfg.n_classes))
+        p["head_b"] = jnp.zeros(cfg.n_classes)
+    elif cfg.arch == "lstm":
+        h = cfg.hidden
+        p["wx"] = _dense_init(next(keys), (d, 4 * h))
+        p["wh"] = _dense_init(next(keys), (h, 4 * h))
+        p["bh"] = jnp.zeros(4 * h)
+        p["head"] = _dense_init(next(keys), (h, cfg.n_classes))
+        p["head_b"] = jnp.zeros(cfg.n_classes)
+    else:
+        raise ValueError(f"unknown arch {cfg.arch}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _maybe_qw(cfg: PredictorConfig, w: jnp.ndarray) -> jnp.ndarray:
+    return fake_quant_tensor(w) if cfg.quantize else w
+
+
+def _maybe_qa(cfg: PredictorConfig, a: jnp.ndarray) -> jnp.ndarray:
+    return fake_quant(a) if cfg.quantize else a
+
+
+def _embed(cfg: PredictorConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    outs = []
+    for j, f in enumerate(cfg.features):
+        tab = _maybe_qw(cfg, params["emb"][f])
+        outs.append(tab[x[:, :, j]])
+    return jnp.concatenate(outs, axis=-1)          # (B, S, d_model)
+
+
+def _positional(seq_len: int, d: int) -> jnp.ndarray:
+    pos = np.arange(seq_len)[:, None]
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d)
+    enc = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(enc, jnp.float32)
+
+
+def _layernorm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = x.var(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+
+def _heads(x: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3) \
+            .reshape(b * n_heads, s, d // n_heads)
+
+
+def _unheads(x: jnp.ndarray, n_heads: int, b: int) -> jnp.ndarray:
+    bh, s, dh = x.shape
+    return x.reshape(b, n_heads, s, dh).transpose(0, 2, 1, 3) \
+            .reshape(b, s, n_heads * dh)
+
+
+def _attention(cfg: PredictorConfig, q, k, v) -> jnp.ndarray:
+    if cfg.attention == "full":
+        return attn_lib.full_attention(q, k, v)
+    key = jax.random.PRNGKey(cfg.lsh_seed)
+    if cfg.attention == "lsh":
+        return attn_lib.lsh_attention(q, k, v, key, cfg.n_hashes,
+                                      cfg.n_buckets)
+    if cfg.attention == "hlsh":
+        return attn_lib.hlsh_attention(q, k, v, key, cfg.n_hashes,
+                                       cfg.n_buckets, cfg.htop, cfg.hbot)
+    raise ValueError(f"unknown attention {cfg.attention}")
+
+
+def _encoder_layer(cfg: PredictorConfig, lp, h: jnp.ndarray) -> jnp.ndarray:
+    b = h.shape[0]
+    if cfg.attention != "bypass":
+        if cfg.attention == "hlsh":
+            # shared-QK structure (Reformer / paper Algorithm 1)
+            q = k = h @ _maybe_qw(cfg, lp["wq"])
+        else:
+            q = h @ _maybe_qw(cfg, lp["wq"])
+            k = h @ _maybe_qw(cfg, lp["wk"])
+        v = h @ _maybe_qw(cfg, lp["wv"])
+        qh, kh, vh = (_heads(t, cfg.n_heads) for t in (q, k, v))
+        o = _unheads(_attention(cfg, qh, kh, vh), cfg.n_heads, b)
+        o = o @ _maybe_qw(cfg, lp["wo"])
+        h = _layernorm(_maybe_qa(cfg, h + o), lp["ln1"]["g"], lp["ln1"]["b"])
+    ff = jax.nn.relu(h @ _maybe_qw(cfg, lp["w1"]) + lp["b1"])
+    ff = _maybe_qa(cfg, ff)
+    ff = ff @ _maybe_qw(cfg, lp["w2"]) + lp["b2"]
+    return _layernorm(_maybe_qa(cfg, h + ff), lp["ln2"]["g"], lp["ln2"]["b"])
+
+
+def apply(cfg: PredictorConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, seq, n_features) int32 -> logits (B, n_classes)."""
+    h = _embed(cfg, params, x)
+    b, s, d = h.shape
+    if cfg.arch == "transformer":
+        h = h + _positional(s, d)
+        h = _maybe_qa(cfg, h)
+        for lp in params["layers"]:
+            h = _encoder_layer(cfg, lp, h)
+        last = h[:, -1]
+        return last @ _maybe_qw(cfg, params["head"]) + params["head_b"]
+    if cfg.arch == "fc":
+        flat = h.reshape(b, s * d)
+        return flat @ _maybe_qw(cfg, params["head"]) + params["head_b"]
+    if cfg.arch == "mlp":
+        z = jax.nn.relu(h.reshape(b, s * d) @ params["w1"] + params["b1"])
+        z = jax.nn.relu(z @ params["w2"] + params["b2"])
+        return z @ params["head"] + params["head_b"]
+    if cfg.arch == "cnn":
+        z = jax.lax.conv_general_dilated(
+            h, params["c1"], (1,), "SAME",
+            dimension_numbers=("NWC", "WIO", "NWC"))
+        z = jax.nn.relu(z)
+        z = jax.lax.conv_general_dilated(
+            z, params["c2"], (1,), "SAME",
+            dimension_numbers=("NWC", "WIO", "NWC"))
+        z = jax.nn.relu(z).max(axis=1)
+        return z @ params["head"] + params["head_b"]
+    if cfg.arch == "lstm":
+        hdim = params["wh"].shape[0]
+
+        def step(carry, xt):
+            hprev, cprev = carry
+            gates = xt @ params["wx"] + hprev @ params["wh"] + params["bh"]
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * cprev + jax.nn.sigmoid(i) * jnp.tanh(g)
+            hnew = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (hnew, c), None
+
+        init = (jnp.zeros((b, hdim)), jnp.zeros((b, hdim)))
+        (hl, _), _ = jax.lax.scan(step, init, h.transpose(1, 0, 2))
+        return hl @ params["head"] + params["head_b"]
+    raise ValueError(f"unknown arch {cfg.arch}")
+
+
+def count_activation_elems(cfg: PredictorConfig) -> int:
+    """Per-example activation element count for the footprint report
+    (Tables 6-7): embeddings + every encoder-layer intermediate."""
+    s, d = cfg.seq_len, cfg.d_model
+    total = s * d  # embeddings (+ positions in place)
+    if cfg.arch == "transformer":
+        per_layer = s * d * 4          # q,k,v,o
+        if cfg.attention != "bypass":
+            per_layer += s * s * cfg.n_heads   # attention matrix
+        per_layer += s * d * cfg.d_ff_mult + s * d * 2  # ffn + norms
+        total += cfg.n_layers * per_layer
+    total += cfg.n_classes
+    return total

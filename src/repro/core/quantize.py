@@ -1,0 +1,69 @@
+"""Quantization (paper §6): clamp weights and activations to [-8, +8] on a
+4-bit integer grid, trained with straight-through estimation; plus int4
+pack/unpack used by the quantized inference path (repro.kernels.int4_matmul)
+and the memory-footprint estimator behind Tables 6-7.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QMIN, QMAX = -8.0, 7.0   # 16 levels, step 1.0, representable in 4 bits
+
+
+def fake_quant(x: jnp.ndarray, step: float = 1.0) -> jnp.ndarray:
+    """Round to the 4-bit grid in [-8, +8] with a straight-through gradient."""
+    q = jnp.clip(jnp.round(x / step), QMIN, QMAX) * step
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def fake_quant_tensor(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-tensor symmetric 4-bit fake quant: the grid step adapts to the
+    tensor's dynamic range (weights are much smaller than 1; a unit grid
+    would zero them out).  Activations, which normalization keeps O(1),
+    use the paper's literal [-8, 8] unit grid via ``fake_quant``."""
+    s = jnp.maximum(jnp.max(jnp.abs(x)), 1e-6) / (-QMIN)
+    q = jnp.clip(jnp.round(x / s), QMIN, QMAX) * s
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def quantize_int4(x: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Real int4 quantization: returns packed uint8 (two nibbles each) and
+    the per-tensor scale."""
+    s = max(float(np.max(np.abs(x))), 1e-6) / (-QMIN)
+    q = np.clip(np.round(x / s), QMIN, QMAX).astype(np.int8)
+    u = (q - int(QMIN)).astype(np.uint8)           # 0..15
+    flat = u.reshape(-1)
+    if flat.size % 2:
+        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
+    packed = (flat[0::2] << 4) | flat[1::2]
+    return packed, s
+
+
+def dequantize_int4(packed: np.ndarray, scale: float, size: int,
+                    shape) -> np.ndarray:
+    hi = (packed >> 4).astype(np.int8)
+    lo = (packed & 0xF).astype(np.int8)
+    flat = np.empty(packed.size * 2, np.int8)
+    flat[0::2] = hi
+    flat[1::2] = lo
+    return ((flat[:size] + int(QMIN)) * scale).reshape(shape).astype(np.float32)
+
+
+def param_bytes(params, bits: int = 32) -> int:
+    leaves = jax.tree.leaves(params)
+    n = sum(int(np.prod(x.shape)) for x in leaves)
+    return n * bits // 8
+
+
+def footprint_report(params, activation_elems: int, batch_size: int,
+                     bits: int = 32) -> dict:
+    """Tables 6-7 style footprint: parameter bytes + forward/backward
+    activation bytes (activations are counted twice: stored for backward)."""
+    p = param_bytes(params, bits)
+    act = activation_elems * batch_size * 2 * bits // 8
+    return {"params_bytes": p, "activations_bytes": act,
+            "total_bytes": p + act}

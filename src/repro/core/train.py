@@ -1,0 +1,110 @@
+"""Training loop for the predictors (in-repo AdamW, jitted steps)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as model_lib
+from repro.core.dataset import SequenceDataset, batches
+from repro.core.metrics import topk_accuracy, weighted_f1
+from repro.optimizer import AdamW, linear_warmup_cosine
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Dict
+    cfg: model_lib.PredictorConfig
+    metrics: Dict[str, float]
+    steps: int
+    train_seconds: float
+
+
+def _loss_fn(cfg, params, x, y):
+    logits = model_lib.apply(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return nll
+
+
+def train_predictor(cfg: model_lib.PredictorConfig, data: SequenceDataset,
+                    *, steps: int = 400, batch_size: int = 128,
+                    lr: float = 3e-3, seed: int = 0,
+                    params=None, eval_topk: int = 10,
+                    log_every: int = 0) -> TrainResult:
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model_lib.init_params(cfg, key)
+    opt = AdamW(weight_decay=1e-4, clip_norm=1.0)
+    opt_state = opt.init(params)
+    sched = linear_warmup_cosine(lr, warmup_steps=min(50, steps // 10 + 1),
+                                 total_steps=steps)
+
+    @jax.jit
+    def step_fn(params, opt_state, x, y, step):
+        loss, grads = jax.value_and_grad(
+            lambda p: _loss_fn(cfg, p, x, y))(params)
+        params, opt_state = opt.update(grads, params, opt_state, sched(step))
+        return params, opt_state, loss
+
+    t0 = time.time()
+    it = batches(data.x_train, data.y_train, batch_size, seed=seed,
+                 epochs=max(1, steps * batch_size // max(len(data.x_train), 1) + 1))
+    n_done = 0
+    for x, y in it:
+        params, opt_state, loss = step_fn(params, opt_state,
+                                          jnp.asarray(x), jnp.asarray(y),
+                                          jnp.asarray(n_done))
+        n_done += 1
+        if log_every and n_done % log_every == 0:
+            print(f"  step {n_done}/{steps} loss={float(loss):.4f}")
+        if n_done >= steps:
+            break
+    train_seconds = time.time() - t0
+
+    metrics = evaluate(cfg, params, data, topk=eval_topk)
+    return TrainResult(params=params, cfg=cfg, metrics=metrics,
+                       steps=n_done, train_seconds=train_seconds)
+
+
+def evaluate(cfg, params, data: SequenceDataset, topk: int = 10,
+             split: str = "test", batch_size: int = 512) -> Dict[str, float]:
+    x = getattr(data, f"x_{split}")
+    y = getattr(data, f"y_{split}")
+    logits = predict_logits(cfg, params, x, batch_size)
+    return {
+        "top1": topk_accuracy(logits, y, 1),
+        f"top{topk}": topk_accuracy(logits, y, topk),
+        "f1": weighted_f1(logits, y),
+        "n": float(len(y)),
+    }
+
+
+_APPLY_CACHE: dict = {}
+
+
+def _jitted_apply(cfg):
+    fn = _APPLY_CACHE.get(cfg)
+    if fn is None:
+        fn = jax.jit(lambda p, xb: model_lib.apply(cfg, p, xb))
+        _APPLY_CACHE[cfg] = fn
+    return fn
+
+
+def predict_logits(cfg, params, x: np.ndarray,
+                   batch_size: int = 512) -> np.ndarray:
+    apply_j = _jitted_apply(cfg)
+    outs = []
+    for i in range(0, len(x), batch_size):
+        xb = x[i:i + batch_size]
+        pad = 0
+        if len(xb) < batch_size:
+            pad = batch_size - len(xb)
+            xb = np.concatenate([xb, np.zeros((pad,) + xb.shape[1:], xb.dtype)])
+        o = np.asarray(apply_j(params, jnp.asarray(xb)))
+        outs.append(o[:batch_size - pad] if pad else o)
+    return np.concatenate(outs)

@@ -1,0 +1,4 @@
+"""Data pipeline substrate."""
+from repro.data.lm_pipeline import TokenPipeline
+
+__all__ = ["TokenPipeline"]

@@ -1,0 +1,9 @@
+"""Distributed runtime: mesh axes, sharding rules, activation constraints,
+fault tolerance, and collective-overlap configuration."""
+from repro.distributed.sharding import (
+    param_shardings, batch_shardings, constrain, opt_shardings,
+    MESH_AXES, batch_axes_for,
+)
+
+__all__ = ["param_shardings", "batch_shardings", "constrain",
+           "opt_shardings", "MESH_AXES", "batch_axes_for"]

@@ -1,0 +1,80 @@
+"""Fault tolerance & elasticity planning for 1000+-node fleets.
+
+What runs *in-band* in this repo:
+* atomic/async checkpointing + exact data-pipeline resume
+  (repro.checkpoint) — restart-from-preemption works end to end;
+* elastic re-mesh on restore (checkpoints are mesh-agnostic);
+* gradient compression for the slow DCN pod axis (repro.optimizer).
+
+What is *planned* here (policy objects a cluster controller would drive —
+they are pure logic, unit-tested, and wired into launch.train's loop):
+* heartbeat-based failure detection with grace windows,
+* straggler mitigation by deadline: micro-batches of the slowest k hosts are
+  re-dispatched to spares; persistent stragglers are excluded at the next
+  elastic re-mesh point,
+* re-mesh planning: given surviving hosts, pick the largest (pod, data,
+  model) mesh that preserves model-axis divisibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Tracks per-host heartbeats; hosts silent past ``timeout_s`` are dead,
+    hosts slower than ``straggler_factor`` x median step time are stragglers."""
+
+    timeout_s: float = 60.0
+    straggler_factor: float = 1.5
+
+    def __post_init__(self) -> None:
+        self.last_seen: Dict[int, float] = {}
+        self.step_times: Dict[int, float] = {}
+
+    def beat(self, host: int, step_time_s: float,
+             now: Optional[float] = None) -> None:
+        self.last_seen[host] = time.monotonic() if now is None else now
+        # EWMA of step time
+        prev = self.step_times.get(host, step_time_s)
+        self.step_times[host] = 0.8 * prev + 0.2 * step_time_s
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+    def stragglers(self) -> List[int]:
+        if len(self.step_times) < 2:
+            return []
+        times = sorted(self.step_times.values())
+        median = times[len(times) // 2]
+        return [h for h, t in self.step_times.items()
+                if t > self.straggler_factor * median]
+
+
+def plan_backup_dispatch(stragglers: List[int], spares: List[int]
+                         ) -> Dict[int, int]:
+    """Deadline-based straggler mitigation: map each straggler's micro-batch
+    onto a spare host (first-finisher wins, loser's result is dropped)."""
+    return {s: spare for s, spare in zip(stragglers, spares)}
+
+
+def plan_remesh(n_hosts_alive: int, chips_per_host: int,
+                model_parallel: int,
+                pods: Tuple[int, ...] = (4, 2, 1)) -> Optional[Tuple[int, int, int]]:
+    """Pick the largest (pod, data, model) mesh the surviving chips support,
+    preserving the model axis (weight layouts stay valid on restore)."""
+    chips = n_hosts_alive * chips_per_host
+    for pod in pods:
+        if chips % pod:
+            continue
+        per_pod = chips // pod
+        if per_pod % model_parallel:
+            continue
+        data = per_pod // model_parallel
+        if data >= 1:
+            return (pod, data, model_parallel)
+    return None

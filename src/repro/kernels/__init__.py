@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+* ``flash_attention`` — block-tiled online-softmax attention (LM prefill /
+  serving hot-spot), causal + non-causal, GQA-aware.
+* ``hlsh_attention`` — the paper's Hamming-LSH attention, TPU-adapted:
+  mask-based erase/share semantics with whole-block skipping driven by
+  scalar-prefetched per-block keep counts.
+* ``int4_matmul`` — packed-int4 weight matmul with fused dequantization
+  (quantized revised-predictor inference, §6).
+
+Each kernel ships a pure-jnp oracle in ``ref.py`` and a jitted public wrapper
+in ``ops.py``.  This container is CPU-only: kernels are *validated* with
+``interpret=True`` and *targeted* at TPU (explicit VMEM BlockSpecs, MXU-
+aligned tiles).
+"""
+from repro.kernels.ops import flash_attention, hlsh_attention, int4_matmul
+
+__all__ = ["flash_attention", "hlsh_attention", "int4_matmul"]

@@ -1,0 +1,123 @@
+"""Block-tiled online-softmax (Flash) attention for TPU via Pallas.
+
+Grid: (batch*heads, q_blocks, k_blocks) — the k dimension is innermost and
+"arbitrary" (sequential) so the VMEM scratch accumulators carry across k
+blocks.  GQA is handled in the K/V index maps (no materialized repeat).
+Causal masking skips strictly-future k blocks entirely and applies an iota
+mask on the diagonal block.
+
+VMEM working set per program:
+    q (bq, d) + k (bk, d) + v (bk, d) + acc (bq, d) + m/l (bq, 128)
+with the default 128/128 blocks and d<=256 this is well under 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128  # TPU lane width for the m/l scratch
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, sm_scale: float, block_q: int, block_k: int,
+                  seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: block (qi, ki) contributes iff some q_pos >= some k_pos.
+    # q rows are offset by (seq_k - seq_q) (decode: cache longer than query).
+    offset = seq_k - seq_q
+    run = True
+    if causal:
+        run = (qi * block_q + block_q - 1 + offset) >= (ki * block_k)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale   # (bq, bk)
+        if causal:
+            qpos = (qi * block_q + offset
+                    + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+            kpos = (ki * block_k
+                    + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[:, :1]                                 # (bq, 1)
+        l_prev = l_scr[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        out = acc_scr[...] / jnp.maximum(l, 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = False, block_q: int = 128,
+                           block_k: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D), H % Hkv == 0."""
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * hkv, sk, d)
+    vf = v.reshape(b * hkv, sk, d)
+
+    def kv_index(bh, qi, ki):
+        # flatten (batch, q-head) -> (batch, kv-head)
+        return ((bh // h) * hkv + (bh % h) // group, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, sm_scale=1.0 / (d ** 0.5),
+        block_q=block_q, block_k=block_k, seq_q=sq, seq_k=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), kv_index),
+            pl.BlockSpec((1, block_k, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

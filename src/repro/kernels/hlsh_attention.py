@@ -1,0 +1,133 @@
+"""HLSH (Hamming-LSH) attention — the paper's Algorithm 1, TPU-adapted.
+
+The paper erases near-orthogonal rows (Hamming score >= HTOP) and lets
+near-duplicate rows share one representative's output (<= HBOT).  On GPU this
+is gather/scatter; on TPU we keep static shapes:
+
+* erase  -> multiplicative keep-mask on Q and K rows (zero logits keep the
+  erased columns in the softmax denominator at weight e^0, exactly like the
+  paper's zeroed matrix entries);
+* share  -> take_along_axis on the output (in the ops wrapper);
+* win    -> a k-block whose keys are ALL erased needs no matmul at all: its
+  contribution is analytic (each column adds logit 0), i.e.
+      l   += exp(-m) * block_k
+      acc += exp(-m) * sum_of_v_over_that_block
+  The per-block "kept count" rides in scalar-prefetch memory (SMEM) so the
+  branch costs nothing; the per-block v-sums are a cheap O(N*D) prologue.
+
+This turns the paper's O((log N)^2) claim into its TPU-native form: whole
+128x128 MXU tiles skipped whenever the hash filter erases a full key block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _hlsh_kernel(counts_ref,                       # scalar prefetch (B, nk)
+                 q_ref, k_ref, v_ref, keepq_ref, keepk_ref, vsum_ref,
+                 o_ref, m_scr, l_scr, acc_scr, *,
+                 sm_scale: float, block_q: int, block_k: int):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.zeros_like(m_scr)   # zero logits always exist
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kept = counts_ref[bi, ki]
+
+    @pl.when(kept > 0)
+    def _dense_block():
+        q = q_ref[0].astype(jnp.float32) * keepq_ref[0][:, :1]
+        k = k_ref[0].astype(jnp.float32) * keepk_ref[0][:, :1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        m_prev = m_scr[:, :1]
+        l_prev = l_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        v = v_ref[0].astype(jnp.float32)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        l_scr[...] = jnp.broadcast_to(
+            alpha * l_prev + jnp.sum(p, axis=1, keepdims=True), l_scr.shape)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(kept == 0)
+    def _skipped_block():
+        # every key in this block is erased: all logits are exactly 0.
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        w = jnp.exp(0.0 - m_new)                      # (bq, 1)
+        acc_scr[...] = acc_scr[...] * alpha + w * vsum_ref[0]
+        l_scr[...] = jnp.broadcast_to(
+            alpha * l_scr[:, :1] + w * block_k, l_scr.shape)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[:, :1], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def hlsh_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          keep: jnp.ndarray, block_q: int = 128,
+                          block_k: int = 128,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Masked-attention core (share map applied by the caller).
+    q/k/v: (B, N, D); keep: (B, N) float {0,1}."""
+    b, n, d = q.shape
+    block_q = min(block_q, n)
+    block_k = min(block_k, n)
+    assert n % block_q == 0 and n % block_k == 0
+    nq, nk = n // block_q, n // block_k
+
+    keepf = keep.astype(jnp.float32)
+    counts = keepf.reshape(b, nk, block_k).sum(-1).astype(jnp.int32)  # (B,nk)
+    erased = (1.0 - keepf)[..., None] * v.astype(jnp.float32)
+    vsum = erased.reshape(b, nk, block_k, d).sum(axis=2)              # (B,nk,D)
+    # broadcast keep into a lane-aligned (B, N, LANES) plane for VMEM tiling
+    keep_plane = jnp.broadcast_to(keepf[..., None], (b, n, LANES))
+
+    kernel = functools.partial(_hlsh_kernel, sm_scale=1.0 / (d ** 0.5),
+                               block_q=block_q, block_k=block_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bi, qi, ki, _c: (bi, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bi, qi, ki, _c: (bi, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bi, qi, ki, _c: (bi, ki, 0)),
+            pl.BlockSpec((1, block_q, LANES), lambda bi, qi, ki, _c: (bi, qi, 0)),
+            pl.BlockSpec((1, block_k, LANES), lambda bi, qi, ki, _c: (bi, ki, 0)),
+            pl.BlockSpec((1, 1, d), lambda bi, qi, ki, _c: (bi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bi, qi, ki, _c: (bi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n, d), q.dtype),
+        interpret=interpret,
+    )(counts, q, k, v, keep_plane, keep_plane, vsum)
+    return out

@@ -1,0 +1,71 @@
+"""Packed-int4 weight matmul with fused in-VMEM dequantization.
+
+Weights live in HBM as two 4-bit codes per byte (hi nibble = even output
+column), are unpacked and dequantized inside the kernel tile-by-tile, and hit
+the MXU as f32.  Used by the quantized revised predictor's inference path
+(paper §6: [-8, +8] 4-bit weights) and as the serving-time weight-dequant
+primitive.
+
+Grid: (m_blocks, n_blocks, k_blocks), k innermost with an f32 VMEM
+accumulator.  The per-tensor scale is applied once at finalization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _int4_kernel(x_ref, w_ref, o_ref, acc_scr, *, block_n: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...].astype(jnp.float32)                  # (bm, bk)
+    w_packed = w_ref[...]                               # (bk, bn//2) uint8
+    hi = (w_packed >> 4).astype(jnp.int32) - 8
+    lo = (w_packed & 0xF).astype(jnp.int32) - 8
+    w = jnp.stack([hi, lo], axis=-1).reshape(w_packed.shape[0], block_n)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def int4_matmul_pallas(x: jnp.ndarray, w_packed: jnp.ndarray,
+                       scale: jnp.ndarray | float,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 128,
+                       interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K); w_packed: (K, N//2) uint8 -> (M, N) x.dtype."""
+    m, kdim = x.shape
+    n = w_packed.shape[1] * 2
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, kdim)
+    assert m % block_m == 0 and n % block_n == 0 and kdim % block_k == 0
+    grid = (m // block_m, n // block_n, kdim // block_k)
+
+    kernel = functools.partial(_int4_kernel, block_n=block_n)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((block_k, block_n // 2), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed)
+    return out * jnp.asarray(scale, x.dtype)

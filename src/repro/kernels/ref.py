@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = False) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k/v: (B, Hkv, Sk, D) with H % Hkv == 0 (GQA)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kx) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        sk = kx.shape[2]
+        mask = jnp.arange(sq)[:, None] + (sk - sq) >= jnp.arange(sk)[None, :]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), vx)
+
+
+def hlsh_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       keep: jnp.ndarray, share_src: jnp.ndarray,
+                       ) -> jnp.ndarray:
+    """Mask-form HLSH oracle.  q/k/v: (B, N, D); keep: (B, N) {0,1};
+    share_src: (B, N) int32 source row per output row."""
+    d = q.shape[-1]
+    keepf = keep[..., None].astype(q.dtype)
+    qm = q * keepf
+    km = k * keepf
+    logits = jnp.einsum("bnd,bmd->bnm", qm, km) / jnp.sqrt(jnp.float32(d))
+    out = jnp.einsum("bnm,bmd->bnd",
+                     jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+                     .astype(q.dtype), v)
+    return jnp.take_along_axis(out, share_src[..., None], axis=1)
+
+
+def int4_matmul_ref(x: jnp.ndarray, w_packed: jnp.ndarray,
+                    scale: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K) f32; w_packed: (K, N//2) uint8, two 4-bit codes per byte
+    (hi nibble = even n, lo nibble = odd n), code = int4 + 8; scale: ()."""
+    hi = (w_packed >> 4).astype(jnp.int32) - 8
+    lo = (w_packed & 0xF).astype(jnp.int32) - 8
+    w = jnp.stack([hi, lo], axis=-1).reshape(w_packed.shape[0], -1)
+    return x @ (w.astype(x.dtype) * scale)

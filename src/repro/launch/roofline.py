@@ -1,0 +1,150 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs            / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_accessed   / (chips * HBM_BW)
+    collective = collective_bytes     / (chips * ICI_BW)
+
+``cost_analysis`` reports whole-program FLOPs/bytes of the SPMD module
+(per-partition); collective bytes are not reported there, so they are parsed
+from the compiled HLO text: we sum result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (all-reduce
+counted twice: reduce-scatter + all-gather phases of a ring).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.MULTILINE)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-collective-kind result bytes (per partition) from HLO text.
+    ``-start`` ops are counted, matching ``-done`` ops are not (async pairs
+    would double count)."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in s:
+            continue
+        kind = m.group(2)
+        nbytes = _shape_bytes(m.group(1))
+        factor = 2.0 if kind == "all-reduce" else 1.0
+        out[kind] += nbytes * factor
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-partition HLO flops
+    hbm_bytes: float           # per-partition bytes accessed
+    coll_bytes: float          # per-partition collective bytes
+    chips: int
+    coll_detail: Optional[Dict] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline-optimistic step time: max of the three terms (perfect
+        overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_s": self.step_s,
+            "coll_detail": {k: v for k, v in (self.coll_detail or {}).items()
+                            if k != "_counts"},
+            "coll_counts": (self.coll_detail or {}).get("_counts"),
+        }
+
+
+def from_compiled(compiled, hlo_text: str, chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    total_coll = sum(v for k, v in coll.items() if k != "_counts")
+    return Roofline(flops=flops, hbm_bytes=nbytes, coll_bytes=total_coll,
+                    chips=chips, coll_detail=coll)
+
+
+def model_flops(cfg, shape, n_params_active: float) -> float:
+    """MODEL_FLOPS = 6*N*D for training (fwd+bwd), 2*N*D for inference, with
+    N = active parameter count."""
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_params_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_params_active * shape.global_batch

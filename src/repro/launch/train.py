@@ -1,0 +1,165 @@
+"""Distributed training driver.
+
+Composes: model zoo + in-repo AdamW + sharding rules + checkpointing +
+fault-tolerance hooks + optional gradient compression on the pod (DCN) axis.
+
+Usage (single host, debug):
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+        --steps 50 --batch 8 --seq 256 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch
+from repro.data import TokenPipeline
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.distributed.sharding import (
+    batch_shardings, opt_shardings, param_shardings_stacked)
+from repro.models import build_model, init_params, train_loss
+from repro.optimizer import (
+    AdamW, ErrorFeedbackState, compress_with_error_feedback,
+    init_error_feedback, linear_warmup_cosine)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    lr: float = 3e-4
+    warmup: int = 10
+    grad_compress: Optional[str] = None    # None | "int8" | "topk"
+    zero1: bool = False
+    fsdp: bool = False
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+
+
+def make_train_step(model, opt: AdamW, lr_fn, grad_compress: Optional[str]):
+    """Returns step(params, opt_state, ef_state, batch, step) ->
+    (params, opt_state, ef_state, metrics)."""
+
+    def step_fn(params, opt_state, ef_state, batch, step):
+        (loss, aux), grads = jax.value_and_grad(
+            lambda p: train_loss(model, p, batch), has_aux=True)(params)
+        if grad_compress is not None:
+            # compress the gradient that crosses the slow pod (DCN) axis;
+            # error feedback keeps the scheme unbiased over time.
+            grads, ef_state = compress_with_error_feedback(
+                grads, ef_state, mode=grad_compress)
+        params, opt_state = opt.update(grads, params, opt_state, lr_fn(step))
+        metrics = {"loss": loss, **aux}
+        return params, opt_state, ef_state, metrics
+
+    return step_fn
+
+
+def build_sharded_train(model, mesh, tc: TrainConfig, shape_batch):
+    """Lower a fully-sharded train step; returns (jitted_fn, shardings)."""
+    opt = AdamW(weight_decay=0.1, clip_norm=1.0)
+    lr_fn = linear_warmup_cosine(tc.lr, tc.warmup, tc.steps)
+    step_fn = make_train_step(model, opt, lr_fn, tc.grad_compress)
+
+    params_shape = jax.eval_shape(
+        lambda k: init_params(model, k), jax.random.PRNGKey(0))
+    p_sh = param_shardings_stacked(params_shape, mesh, fsdp=tc.fsdp)
+    opt_state_shape = jax.eval_shape(opt.init, params_shape)
+    o_sh = type(opt_state_shape)(
+        step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        mu=opt_shardings(p_sh, params_shape, mesh, zero1=tc.zero1),
+        nu=opt_shardings(p_sh, params_shape, mesh, zero1=tc.zero1),
+    )
+    ef_sh = (opt_shardings(p_sh, params_shape, mesh, zero1=tc.zero1)
+             if tc.grad_compress else None)
+    b_sh = batch_shardings(shape_batch, mesh,
+                           next(iter(shape_batch.values())).shape[0])
+    scalar_sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    fn = jax.jit(
+        step_fn,
+        in_shardings=(p_sh, o_sh, ef_sh, b_sh, scalar_sh),
+        out_shardings=(p_sh, o_sh, ef_sh, None),
+        donate_argnums=(0, 1, 2),
+    )
+    return fn, dict(params=p_sh, opt=o_sh, ef=ef_sh, batch=b_sh, optd=opt)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) config of the arch")
+    ap.add_argument("--grad-compress", choices=["int8", "topk"], default=None)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+        cfg = dataclasses.replace(cfg, name=cfg.name)
+    model = build_model(cfg)
+    tc = TrainConfig(steps=args.steps, lr=args.lr,
+                     grad_compress=args.grad_compress, zero1=args.zero1,
+                     checkpoint_dir=args.checkpoint_dir)
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh(
+        (1, n_dev), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         batch_size=args.batch)
+    sample = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+              for k, v in pipe.next_batch().items()}
+    pipe.restore({"step": 0, "seed": pipe.seed, "rank": 0, "world": 1})
+
+    with jax.sharding.set_mesh(mesh):
+        fn, sh = build_sharded_train(model, mesh, tc, sample)
+        params = init_params(model, jax.random.PRNGKey(0))
+        opt_state = sh["optd"].init(params)
+        ef_state = (init_error_feedback(params) if tc.grad_compress else None)
+
+        ckpt = (CheckpointManager(tc.checkpoint_dir)
+                if tc.checkpoint_dir else None)
+        start = 0
+        if ckpt and args.resume and ckpt.latest_step() is not None:
+            params, extra = ckpt.restore(params)
+            pipe.restore(extra["pipeline"])
+            start = extra["step"]
+            print(f"resumed from step {start}")
+
+        hb = HeartbeatMonitor()
+        for step in range(start, tc.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            params, opt_state, ef_state, metrics = fn(
+                params, opt_state, ef_state, batch,
+                jnp.asarray(step, jnp.int32))
+            dt = time.time() - t0
+            hb.beat(host=0, step_time_s=dt)
+            if step % 10 == 0 or step == tc.steps - 1:
+                print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                      f"({dt*1000:.0f} ms)")
+            if ckpt and (step + 1) % tc.checkpoint_every == 0:
+                ckpt.save_async(step + 1, params,
+                                {"step": step + 1,
+                                 "pipeline": pipe.state()})
+        if ckpt:
+            ckpt.wait()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Model zoo: the 10 assigned architectures as composable JAX model defs.
+
+Architectures are described by ``ArchConfig`` (repro.configs): a sequence of
+homogeneous *segments*, each a repeated block pattern (attention + dense FFN,
+attention + MoE, SSD, RG-LRU, local attention, ...).  Segments scan over
+stacked per-layer parameters so HLO size stays flat in depth — essential for
+the 94-layer Qwen3 multi-pod dry-run.
+"""
+from repro.models.builder import (
+    build_model, init_params, train_loss, prefill, decode, Model,
+)
+
+__all__ = ["build_model", "init_params", "train_loss", "prefill", "decode",
+           "Model"]

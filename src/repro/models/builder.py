@@ -1,0 +1,427 @@
+"""Model builder: ArchConfig -> init / train_loss / prefill / decode.
+
+Depth is organized as *segments* of a repeated block pattern; parameters are
+stacked over layers within a segment and applied with ``lax.scan`` so HLO
+size is independent of depth.  Supported block kinds:
+
+    attn   causal self-attention (GQA)        lattn  windowed self-attention
+    eattn  bidirectional (encoder)            xattn  cross-attention
+    ffn    SwiGLU MLP                         moe    top-k mixture of experts
+    ssd    Mamba-2 state-space duality        lru    RG-LRU (Griffin)
+
+Decode state: attention blocks carry (k, v) caches; ssd carries (B,H,P,N)
+states; lru carries (B,Dr) states — each stacked over the segment's layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.moe import moe_block
+from repro.models.rglru import rglru_block
+from repro.models.ssm import ssd_block
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    count: int
+    pattern: Tuple[str, ...]
+    encoder: bool = False      # bidirectional, no cache
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    segments: Tuple[Segment, ...]
+    enc_segments: Tuple[Segment, ...] = ()
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "vlm"):
+        segs = (Segment(cfg.n_layers, ("attn", "ffn")),)
+    elif cfg.family == "moe":
+        segs = (Segment(cfg.n_layers, ("attn", "moe")),)
+    elif cfg.family == "ssm":
+        segs = (Segment(cfg.n_layers, ("ssd",)),)
+    elif cfg.family == "hybrid":
+        period = cfg.pattern or ("lru", "lru", "lattn")
+        full, rem = divmod(cfg.n_layers, len(period))
+        segs = []
+        if full:
+            segs.append(Segment(full, tuple(period)))
+        if rem:
+            segs.append(Segment(1, tuple(period[:rem])))
+        segs = tuple(segs)
+    elif cfg.family == "audio":
+        segs = (Segment(cfg.n_layers, ("attn", "xattn", "ffn")),)
+        enc = (Segment(cfg.enc_layers, ("eattn", "ffn"), encoder=True),)
+        return Model(cfg, segs, enc)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return Model(cfg, segs)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(kind: str, cfg: ArchConfig, key, dtype) -> Dict:
+    d = cfg.d_model
+    hd = cfg.hd
+    ks = jax.random.split(key, 10)
+
+    def dense(k, shape):
+        scale = 1.0 / math.sqrt(shape[0] if len(shape) == 2 else shape[-2])
+        if kind == "moe" and len(shape) == 3:
+            scale = 1.0 / math.sqrt(shape[1])
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    if kind in ("attn", "lattn", "eattn", "xattn"):
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "wq": dense(ks[0], (d, cfg.n_heads, hd)),
+            "wk": dense(ks[1], (d, cfg.n_kv, hd)),
+            "wv": dense(ks[2], (d, cfg.n_kv, hd)),
+            "wo": (jax.random.normal(ks[3], (cfg.n_heads, hd, d), jnp.float32)
+                   / math.sqrt(cfg.n_heads * hd)).astype(dtype),
+        }
+    if kind == "ffn":
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "wg": dense(ks[0], (d, cfg.d_ff)),
+            "wu": dense(ks[1], (d, cfg.d_ff)),
+            "wd": dense(ks[2], (cfg.d_ff, d)),
+        }
+    if kind == "moe":
+        e, f = cfg.n_experts, cfg.d_ff
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "router": jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02,
+            "wg": dense(ks[1], (e, d, f)),
+            "wu": dense(ks[2], (e, d, f)),
+            "wd": dense(ks[3], (e, f, d)),
+        }
+    if kind == "ssd":
+        din = 2 * d
+        h = din // cfg.ssm_head_dim
+        n = cfg.ssm_state
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "wx": dense(ks[0], (d, 2 * din)),
+            "wbc": dense(ks[1], (d, 2 * n)),
+            "wdt": dense(ks[2], (d, h)),
+            "dt_bias": jnp.zeros((h,), dtype),
+            "a_log": jnp.zeros((h,), jnp.float32),
+            "wo": dense(ks[3], (din, d)),
+        }
+    if kind == "lru":
+        dr = d
+        return {
+            "ln": jnp.ones((d,), dtype),
+            "w_in": dense(ks[0], (d, dr)),
+            "w_gate": dense(ks[1], (d, dr)),
+            "w_r": dense(ks[2], (dr, dr)),
+            "w_i": dense(ks[3], (dr, dr)),
+            "b_r": jnp.zeros((dr,), dtype),
+            "b_i": jnp.zeros((dr,), dtype),
+            "lam": jnp.full((dr,), 1.0, jnp.float32),
+            "w_out": dense(ks[4], (dr, d)),
+        }
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _init_segment(seg: Segment, cfg: ArchConfig, key, dtype) -> Dict:
+    def one_layer(k):
+        kk = jax.random.split(k, len(seg.pattern))
+        return {f"b{i}_{kind}": _init_block(kind, cfg, kk[i], dtype)
+                for i, kind in enumerate(seg.pattern)}
+    keys = jax.random.split(key, seg.count)
+    per_layer = [one_layer(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+
+
+def init_params(model: Model, key) -> Dict:
+    cfg = model.cfg
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8 + len(model.segments)
+                            + len(model.enc_segments))
+    p: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype),
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+        "segments": [
+            _init_segment(seg, cfg, keys[2 + i], dtype)
+            for i, seg in enumerate(model.segments)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab),
+                                       jnp.float32)
+                     / math.sqrt(cfg.d_model)).astype(dtype)
+    if model.enc_segments:
+        off = 2 + len(model.segments)
+        p["enc_segments"] = [
+            _init_segment(seg, cfg, keys[off + i], dtype)
+            for i, seg in enumerate(model.enc_segments)
+        ]
+        p["enc_final_ln"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _apply_block(kind: str, h, bp, cfg: ArchConfig, *, mode: str,
+                 state=None, cache_index=None, enc_out=None):
+    """Returns (h, new_state)."""
+    if kind in ("attn", "lattn", "eattn"):
+        window = cfg.window if kind == "lattn" else None
+        causal = kind != "eattn"
+        want_cache = mode == "prefill" and kind != "eattn"
+        return L.attention_block(
+            h, bp, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            causal=causal, window=window,
+            cache=state, cache_index=cache_index, want_cache=want_cache,
+            f32_logits=cfg.attn_f32_logits)
+    if kind == "xattn":
+        if mode == "prefill":
+            ckv = L.cross_kv_proj(enc_out, bp)
+            y, _ = L.attention_block(
+                h, bp, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+                cross_kv=ckv, f32_logits=cfg.attn_f32_logits)
+            return y, ckv
+        ckv = state if state is not None else L.cross_kv_proj(enc_out, bp)
+        y, _ = L.attention_block(
+            h, bp, n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            cross_kv=ckv, f32_logits=cfg.attn_f32_logits)
+        return y, (ckv if mode == "decode" else None)
+    if kind == "ffn":
+        return L.swiglu_block(h, bp), None
+    if kind == "moe":
+        y, aux = moe_block(h, bp, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor,
+                           dispatch=cfg.moe_dispatch,
+                           group_tokens=cfg.moe_group_tokens)
+        return y, aux          # aux routed through "state" slot, summed later
+    if kind == "ssd":
+        return ssd_block(h, bp, head_dim=cfg.ssm_head_dim,
+                         ssm_state=cfg.ssm_state, state=state,
+                         chunk=cfg.ssd_chunk)
+    if kind == "lru":
+        return rglru_block(h, bp, state=state)
+    raise ValueError(kind)
+
+
+_STATEFUL = ("attn", "lattn", "xattn", "ssd", "lru")
+
+
+def _segment_scan(seg: Segment, seg_params, h, cfg: ArchConfig, *,
+                  mode: str, states=None, cache_index=None, enc_out=None,
+                  remat: bool):
+    """Scan one segment.  states: dict block-slot -> stacked state (or None).
+    Returns (h, new_states, aux)."""
+
+    def body(carry, xs):
+        hh = carry
+        layer_params, layer_states = xs
+        new_states = {}
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(seg.pattern):
+            key = f"b{i}_{kind}"
+            st = None if layer_states is None else layer_states.get(key)
+            hh, out = _apply_block(kind, hh, layer_params[key], cfg,
+                                   mode=mode, state=st,
+                                   cache_index=cache_index, enc_out=enc_out)
+            if kind == "moe":
+                aux = aux + out
+            elif out is not None and (mode != "train"):
+                new_states[key] = out
+        return hh, (new_states if new_states else None, aux)
+
+    if remat:
+        body = jax.checkpoint(body)
+
+    if seg.count <= 2:
+        # unrolled: exact cost accounting for the dry-run probes (XLA's
+        # cost_analysis counts a while-loop body once, so probe programs
+        # must not scan) — and no scan overhead for 1-2 layer segments.
+        outs = []
+        for i in range(seg.count):
+            layer_params = jax.tree.map(lambda x: x[i], seg_params)
+            layer_states = (None if states is None
+                            else jax.tree.map(lambda x: x[i], states))
+            h, y = body(h, (layer_params, layer_states))
+            outs.append(y)
+        new_states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[o[0] for o in outs])
+        auxs = jnp.stack([o[1] for o in outs])
+        return h, new_states, auxs.sum()
+
+    h, (new_states, auxs) = jax.lax.scan(body, h, (seg_params, states))
+    return h, new_states, auxs.sum()
+
+
+def all_segments(model: Model):
+    """Main + encoder segments, in probe order."""
+    return tuple(model.segments) + tuple(model.enc_segments)
+
+
+def with_counts(model: Model, counts) -> Model:
+    """Probe helper: same architecture with overridden segment layer counts
+    (used by the dry-run's cost-extrapolation probes).  ``counts`` covers
+    main segments then encoder segments."""
+    n = len(model.segments)
+    segs = tuple(dataclasses.replace(s, count=c)
+                 for s, c in zip(model.segments, counts[:n]))
+    enc = tuple(dataclasses.replace(s, count=c)
+                for s, c in zip(model.enc_segments, counts[n:]))
+    return Model(model.cfg, segs, enc)
+
+
+def _embed_tokens(cfg: ArchConfig, params, tokens):
+    h = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    return h * jnp.sqrt(jnp.float32(cfg.d_model)).astype(h.dtype)
+
+
+def _logits(cfg: ArchConfig, params, h):
+    h = L.rmsnorm(h, params["final_ln"])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["head"])
+    return constrain(logits, ("pod", "data"), None, "model")
+
+
+def _encode(cfg: ArchConfig, model: Model, params, frames, *, remat):
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    for seg, sp in zip(model.enc_segments, params["enc_segments"]):
+        h, _, _ = _segment_scan(seg, sp, h, cfg, mode="train", remat=remat)
+    return L.rmsnorm(h, params["enc_final_ln"])
+
+
+def _backbone(cfg, model, params, h, *, mode, states=None, cache_index=None,
+              enc_out=None, remat=True):
+    all_states = []
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, (seg, sp) in enumerate(zip(model.segments, params["segments"])):
+        st = None if states is None else states[si]
+        h = constrain(h, ("pod", "data"), None, None)
+        h, new_st, aux = _segment_scan(
+            seg, sp, h, cfg, mode=mode, states=st, cache_index=cache_index,
+            enc_out=enc_out, remat=remat)
+        all_states.append(new_st)
+        aux_total = aux_total + aux
+    return h, all_states, aux_total
+
+
+def train_loss(model: Model, params, batch: Dict[str, jnp.ndarray],
+               aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token CE (+ MoE load-balance aux).  batch:
+    tokens (B, S) int32; vlm: + patches (B, P, d); audio: + frames (B, F, d).
+    """
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    h = _embed_tokens(cfg, params, tokens)
+    n_text = tokens.shape[1]
+    enc_out = None
+    if cfg.family == "vlm":
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    if cfg.family == "audio":
+        enc_out = _encode(cfg, model, params, batch["frames"],
+                          remat=cfg.remat)
+    h = constrain(h, ("pod", "data"), None, None)
+    h, _, aux = _backbone(cfg, model, params, h, mode="train",
+                          enc_out=enc_out, remat=cfg.remat)
+    h = h[:, -n_text:]
+    logits = _logits(cfg, params, h)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp[:, :-1], tgt[..., None], axis=-1)
+    loss = nll.mean() + aux_weight * aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+def init_decode_state(model: Model, params_shape, batch: int, max_len: int,
+                      enc_len: int = 0):
+    """Abstract/concrete decode-state skeleton matching `prefill` output."""
+    cfg = model.cfg
+    dtype = jnp.dtype(cfg.dtype)
+    states = []
+    for seg in model.segments:
+        seg_states: Dict[str, Any] = {}
+        for i, kind in enumerate(seg.pattern):
+            key = f"b{i}_{kind}"
+            if kind in ("attn", "lattn"):
+                shp = (seg.count, batch, max_len, cfg.n_kv, cfg.hd)
+                seg_states[key] = (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+            elif kind == "xattn":
+                shp = (seg.count, batch, enc_len, cfg.n_kv, cfg.hd)
+                seg_states[key] = (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+            elif kind == "ssd":
+                din = 2 * cfg.d_model
+                h = din // cfg.ssm_head_dim
+                seg_states[key] = jnp.zeros(
+                    (seg.count, batch, h, cfg.ssm_head_dim, cfg.ssm_state),
+                    dtype)
+            elif kind == "lru":
+                seg_states[key] = jnp.zeros(
+                    (seg.count, batch, cfg.d_model), dtype)
+        states.append(seg_states if seg_states else None)
+    return states
+
+
+def prefill(model: Model, params, batch: Dict[str, jnp.ndarray],
+            max_len: Optional[int] = None):
+    """Run the prompt; returns (last-position logits, decode states).
+    KV caches are padded to ``max_len``."""
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    bsz, s = tokens.shape
+    h = _embed_tokens(cfg, params, tokens)
+    enc_out = None
+    if cfg.family == "vlm":
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    if cfg.family == "audio":
+        enc_out = _encode(cfg, model, params, batch["frames"],
+                          remat=cfg.remat)
+    h, states, _ = _backbone(cfg, model, params, h, mode="prefill",
+                             enc_out=enc_out, remat=cfg.remat)
+    logits = _logits(cfg, params, h[:, -1:])
+    if max_len is not None and max_len > h.shape[1]:
+        pad = max_len - h.shape[1]
+
+        def pad_seg(seg_states):
+            if seg_states is None:
+                return None
+            out = {}
+            for key, st in seg_states.items():
+                if ("attn" in key) and ("xattn" not in key):
+                    out[key] = tuple(
+                        jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                        for x in st)
+                else:
+                    out[key] = st
+            return out
+
+        states = [pad_seg(s) for s in states]
+    return logits, states
+
+
+def decode(model: Model, params, states, tokens_1: jnp.ndarray,
+           index: jnp.ndarray):
+    """One decode step.  tokens_1: (B, 1); index: scalar int32 position.
+    Returns (logits (B, 1, V), new states)."""
+    cfg = model.cfg
+    h = _embed_tokens(cfg, params, tokens_1)
+    h, new_states, _ = _backbone(cfg, model, params, h, mode="decode",
+                                 states=states, cache_index=index,
+                                 remat=False)
+    return _logits(cfg, params, h), new_states

@@ -1,0 +1,119 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention (train/prefill/decode),
+SwiGLU MLP, embeddings.
+
+Attention has two execution paths: a pure-XLA einsum path (used for the
+multi-pod dry-run — Pallas cannot lower on CPU hosts) and the Pallas flash
+kernel path for TPU runtime (``use_flash``).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * g
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _attend(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+            causal: bool, window: Optional[int] = None,
+            q_offset: int = 0, f32_logits: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D).  Pure-XLA GQA attention.
+    ``q_offset``: position of q[0] within the kv sequence (decode)."""
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    acc_t = jnp.float32 if f32_logits else q.dtype
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=acc_t)
+    logits = (logits / jnp.sqrt(jnp.asarray(d, acc_t))).astype(acc_t)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, d)
+
+
+def attention_block(x: jnp.ndarray, p: Dict, *, n_heads: int, n_kv: int,
+                    head_dim: int, causal: bool = True,
+                    window: Optional[int] = None,
+                    cache: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    cache_index: Optional[jnp.ndarray] = None,
+                    positions: Optional[jnp.ndarray] = None,
+                    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    want_cache: bool = False, f32_logits: bool = True):
+    """Pre-norm attention block.  Returns (y, new_cache).
+
+    * train: cache None, want_cache False -> new_cache None.
+    * prefill: cache None, want_cache True -> new_cache = fresh (k, v).
+    * decode: cache (B, S_max, Hkv, D) x2 + cache_index -> updated in place.
+    * cross attention: cross_kv provides fixed K/V (encoder output).
+    """
+    b, s, dm = x.shape
+    h = rmsnorm(x, p["ln"])
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    q_off_arr = None
+    if positions is None:
+        if cache_index is None:
+            positions = jnp.arange(s)[None, :]
+        else:
+            positions = jnp.arange(s)[None, :] + cache_index
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+        q = rope(q, positions)
+        k = rope(k, positions)
+        new_cache = (k, v) if want_cache else None
+        q_off = 0
+        if cache is not None:
+            ck, cv = cache
+            idx = cache_index if cache_index is not None else 0
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, idx, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, idx, axis=1)
+            k, v = ck, cv
+            new_cache = (ck, cv)
+            q_off = idx
+        out = _attend(q, k, v, causal=causal, window=window,
+                      q_offset=q_off, f32_logits=f32_logits)
+    else:
+        k, v = cross_kv
+        out = _attend(q, k, v, causal=False, f32_logits=f32_logits)
+        new_cache = None
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x + y, new_cache
+
+
+def cross_kv_proj(enc: jnp.ndarray, p: Dict) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    k = jnp.einsum("bsd,dhk->bshk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, p["wv"])
+    return k, v
+
+
+def swiglu_block(x: jnp.ndarray, p: Dict) -> jnp.ndarray:
+    h = rmsnorm(x, p["ln"])
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, p["wg"]))
+    up = jnp.einsum("bsd,df->bsf", h, p["wu"])
+    return x + jnp.einsum("bsf,fd->bsd", gate * up, p["wd"])

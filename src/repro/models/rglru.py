@@ -1,0 +1,66 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training runs a chunked associative scan (log-depth); decode carries the
+(B, D) hidden state with one update per token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+_C = 8.0
+
+
+def _lru_scan(a: jnp.ndarray, bx: jnp.ndarray,
+              h0: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t h_{t-1} + bx_t via associative scan over S.
+    a, bx: (B, S, D)."""
+    if h0 is not None:
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_c, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block(x: jnp.ndarray, p: Dict, *,
+                state: Optional[jnp.ndarray] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gated-MLP wrapper around the RG-LRU temporal mixer (Griffin block).
+    x: (B, S, D).  state: (B, D_rnn).  Returns (y, new_state)."""
+    b, s, d = x.shape
+    h = rmsnorm(x, p["ln"])
+    u = jnp.einsum("bsd,de->bse", h, p["w_in"])          # (B,S,Drnn)
+    gate_branch = jax.nn.gelu(jnp.einsum("bsd,de->bse", h, p["w_gate"]))
+
+    r = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", u, p["w_r"]) + p["b_r"])
+    i = jax.nn.sigmoid(jnp.einsum("bse,ef->bsf", u, p["w_i"]) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]).astype(x.dtype) * r  # (B,S,Dr)
+    a = jnp.exp(log_a).astype(x.dtype)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - a.astype(jnp.float32) ** 2, 1e-6))
+             .astype(x.dtype) * (i * u))
+
+    if s == 1 and state is not None:
+        hseq = a[:, 0] * state + gated[:, 0]
+        new_state = hseq.astype(x.dtype)
+        hseq = hseq[:, None]
+    else:
+        hseq, new_state = _lru_scan(a, gated, state)
+        new_state = new_state.astype(x.dtype)
+
+    y = jnp.einsum("bse,ed->bsd", hseq.astype(x.dtype) * gate_branch,
+                   p["w_out"])
+    return (x + y).astype(x.dtype), new_state

@@ -1,0 +1,93 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Chunked linear-recurrence formulation (Dao & Gu, 2024): within chunks the
+quadratic "attention-like" form runs on the MXU; across chunks a scalar-decay
+state recurrence propagates (B, H, P, N) states.  Decode is O(1): one state
+update per token.
+
+Shapes: d_inner = 2 * d_model, P = head_dim (64), H = d_inner / P,
+N = ssm_state (128), single B/C group.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm
+
+
+def _ssd_chunked(x, dt, a_log, b, c, chunk: int):
+    """x: (B,S,H,P); dt: (B,S,H); b,c: (B,S,N).  Returns (B,S,H,P).
+
+    Sequential ``lax.scan`` over chunks: intra-chunk work is the quadratic
+    MXU-friendly form; the carried (B,H,P,N) state gives the inter-chunk
+    recurrence.  Peak live memory is one chunk's (B,L,L,H) decay tensor,
+    independent of sequence length.
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    xa = (x * dt[..., None]).reshape(bsz, nc, chunk, h, p)
+    la = (-jnp.exp(a_log)[None, None, :] * dt).reshape(bsz, nc, chunk, h)
+    bc = b.reshape(bsz, nc, chunk, n)
+    cc = c.reshape(bsz, nc, chunk, n)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inp):
+        xa_c, la_c, b_c, c_c = inp        # (B,L,H,P),(B,L,H),(B,L,N),(B,L,N)
+        cum = jnp.cumsum(la_c, axis=1)                      # (B,L,H)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+        decay = jnp.where(causal[None, :, :, None], decay, 0.0)
+        scores = jnp.einsum("bln,bsn->bls", c_c, b_c)       # (B,L,L)
+        y = jnp.einsum("bls,blsh,bshp->blhp", scores, decay, xa_c)
+        # contribution of the carried state
+        y = y + jnp.einsum("bln,blh,bhpn->blhp", c_c, jnp.exp(cum), state)
+        total = cum[:, -1]                                  # (B,H)
+        sdecay = jnp.exp(total[:, None, :] - cum)           # (B,L,H)
+        new_state = (state * jnp.exp(total)[..., None, None]
+                     + jnp.einsum("bsh,bsn,bshp->bhpn", sdecay, b_c, xa_c))
+        return new_state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, ys = jax.lax.scan(
+        step, init,
+        (xa.transpose(1, 0, 2, 3, 4), la.transpose(1, 0, 2, 3),
+         bc.transpose(1, 0, 2, 3), cc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final_state.astype(x.dtype)
+
+
+def ssd_block(x: jnp.ndarray, p: Dict, *, head_dim: int, ssm_state: int,
+              chunk: int = 256,
+              state: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, final_state).  state (B, H, P, N) enables O(1) decode
+    when x has S == 1."""
+    bsz, s, d = x.shape
+    h = rmsnorm(x, p["ln"])
+    d_inner = p["wx"].shape[1] // 2
+    nheads = d_inner // head_dim
+    xz = jnp.einsum("bsd,de->bse", h, p["wx"])                 # (B,S,2*din)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    bc = jnp.einsum("bsd,dn->bsn", h, p["wbc"])                # (B,S,2N)
+    b_in, c_in = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", h, p["wdt"])
+                         + p["dt_bias"])                       # (B,S,H)
+    xh = xi.reshape(bsz, s, nheads, head_dim)
+
+    if s == 1 and state is not None:
+        # decode: h' = exp(-exp(A) dt) h + dt * B x ; y = C h'
+        la = -jnp.exp(p["a_log"])[None, None, :] * dt          # (B,1,H)
+        dec = jnp.exp(la).astype(x.dtype)                      # (B,1,H)
+        xb = jnp.einsum("bshp,bsn->bhpn", xh * dt[..., None].astype(x.dtype),
+                        b_in)
+        new_state = (state * dec[:, 0, :, None, None] + xb).astype(x.dtype)
+        y = jnp.einsum("bhpn,bsn->bshp", new_state, c_in)
+    else:
+        y, new_state = _ssd_chunked(xh, dt, p["a_log"], b_in, c_in,
+                                    min(chunk, s))
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    return (x + out).astype(x.dtype), new_state

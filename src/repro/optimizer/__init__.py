@@ -1,0 +1,15 @@
+"""In-repo optimizers (no optax dependency): AdamW with global-norm clipping,
+LR schedules, and distributed gradient compression."""
+from repro.optimizer.adam import AdamW, AdamWState
+from repro.optimizer.schedule import cosine_schedule, linear_warmup_cosine
+from repro.optimizer.grad_compress import (
+    int8_compress, int8_decompress, topk_compress, topk_decompress,
+    ErrorFeedbackState, compress_with_error_feedback, init_error_feedback,
+)
+
+__all__ = [
+    "AdamW", "AdamWState", "cosine_schedule", "linear_warmup_cosine",
+    "int8_compress", "int8_decompress", "topk_compress", "topk_decompress",
+    "ErrorFeedbackState", "compress_with_error_feedback",
+    "init_error_feedback",
+]

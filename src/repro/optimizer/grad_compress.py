@@ -1,0 +1,78 @@
+"""Gradient compression for the cross-pod (DCN) data-parallel axis.
+
+At 1000+ nodes the pod-level all-reduce crosses data-center network links
+that are ~10x slower than ICI; compressing gradients there is a standard
+distributed-optimization trick.  We provide:
+
+* int8 symmetric quantization (4x compression) with per-tensor scales,
+* top-k sparsification (magnitude), and
+* error feedback (residual accumulation) so either compressor stays unbiased
+  over time (Karimireddy et al., 2019).
+
+All functions are jit-safe and shard_map-safe (no data-dependent shapes:
+top-k uses a fixed k per tensor).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_compress(x: jnp.ndarray, frac: float = 0.05):
+    """Keep the top ``frac`` fraction of entries by magnitude."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    return sel, idx, x.shape
+
+
+def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = jnp.zeros(int(jnp.prod(jnp.array(shape))), vals.dtype)
+    flat = flat.at[idx].set(vals)
+    return flat.reshape(shape)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any
+
+
+def compress_with_error_feedback(grads: Any, state: ErrorFeedbackState,
+                                 mode: str = "int8"):
+    """Compress ``grads + residual``; the new residual is what compression
+    lost.  Returns (decompressed grads to feed the all-reduce, new state).
+
+    The round trip happens locally; only the compressed representation would
+    travel on the wire.  We return the decompressed value so callers can drop
+    this in front of any existing all-reduce.
+    """
+    carried = jax.tree.map(lambda g, r: g + r, grads, state.residual)
+
+    def roundtrip(x):
+        if mode == "int8":
+            q, s = int8_compress(x)
+            return int8_decompress(q, s)
+        elif mode == "topk":
+            v, i, shp = topk_compress(x)
+            return topk_decompress(v, i, shp)
+        raise ValueError(f"unknown mode {mode}")
+
+    sent = jax.tree.map(roundtrip, carried)
+    new_resid = jax.tree.map(lambda c, s: c - s, carried, sent)
+    return sent, ErrorFeedbackState(residual=new_resid)
+
+
+def init_error_feedback(params: Any) -> ErrorFeedbackState:
+    return ErrorFeedbackState(residual=jax.tree.map(jnp.zeros_like, params))

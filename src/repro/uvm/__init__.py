@@ -1,0 +1,21 @@
+"""UVM substrate: page-granular CPU-GPU unified-virtual-memory simulator.
+
+Implements on-demand page migration with far-faults, a PCIe interconnect
+queue, the CUDA-driver tree-based neighborhood prefetcher (the UVMSmart
+baseline), delayed migration / zero-copy policies, LRU eviction under
+oversubscription, and the paper's evaluation metrics (page hit rate, PCIe
+traffic, prefetcher accuracy/coverage, Unity).
+"""
+from repro.uvm.config import UVMConfig
+from repro.uvm.prefetchers import (
+    NoPrefetcher, TreePrefetcher, LearnedPrefetcher, OraclePrefetcher,
+    Prefetcher,
+)
+from repro.uvm.simulator import UVMSimulator, UVMStats
+from repro.uvm.metrics import unity
+
+__all__ = [
+    "UVMConfig", "UVMSimulator", "UVMStats", "unity",
+    "Prefetcher", "NoPrefetcher", "TreePrefetcher", "LearnedPrefetcher",
+    "OraclePrefetcher",
+]

@@ -1,0 +1,32 @@
+"""Evaluation metrics (paper §7.6)."""
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+
+def unity(accuracy: float, coverage: float, hit_rate: float) -> float:
+    """Unity := cbrt(Accuracy * Coverage * Page_hit_rate); 1.0 is perfect."""
+    return float(np.cbrt(accuracy * coverage * hit_rate))
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))
+
+
+def pcie_gbs_timeline(timeline: np.ndarray, core_mhz: float,
+                      window_cycles: float = 10_000.0) -> np.ndarray:
+    """(cycle, bytes) transfer events -> (window_center_cycle, GB/s) rows."""
+    if timeline is None or len(timeline) == 0:
+        return np.zeros((0, 2))
+    t = timeline[:, 0]
+    b = timeline[:, 1]
+    n_win = int(t.max() // window_cycles) + 1
+    idx = (t // window_cycles).astype(np.int64)
+    acc = np.zeros(n_win)
+    np.add.at(acc, idx, b)
+    secs = window_cycles / (core_mhz * 1e6)
+    centers = (np.arange(n_win) + 0.5) * window_cycles
+    return np.stack([centers, acc / secs / 1e9], axis=1)

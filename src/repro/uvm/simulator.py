@@ -1,0 +1,235 @@
+"""Page-granular UVM simulator.
+
+Queue-based timing model in GPU core cycles:
+
+* the GPU issues coalesced GMMU requests at a fixed instruction throughput;
+* a far-fault pays host page-walk + fault service latency (45 us) and then
+  queues its page migration on the PCIe channel (bandwidth + latency);
+* prefetched pages ride the bus behind the demand page;
+* the GPU hides up to ``mshr_entries`` outstanding faults behind fine-grained
+  multithreading — beyond that the clock stalls to the oldest completion
+  (this is what serializes clustered faults when the bus is saturated, the
+  BICG effect in the paper's Fig 11);
+* accesses to in-flight pages (late prefetches / duplicate faults) stall the
+  warp until the page arrives;
+* under oversubscription, LRU pages are evicted (with writeback traffic).
+
+IPC is instructions / modeled cycles.  Absolute IPC is a proxy, but all
+paper-facing results are *normalized* (ours vs UVMSmart), which cancels the
+issue-throughput constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.traces.trace import Trace
+from repro.uvm.config import UVMConfig
+from repro.uvm.prefetchers import Prefetcher
+
+
+@dataclasses.dataclass
+class UVMStats:
+    name: str
+    prefetcher: str
+    n_accesses: int
+    n_instructions: int
+    cycles: float
+    hits: int
+    late: int              # demanded while in-flight (late prefetch)
+    faults: int            # demand far-faults
+    prefetch_issued: int
+    prefetch_used: int
+    pages_migrated: int
+    pages_evicted: int
+    pcie_bytes: float
+    zero_copy_bytes: float
+    timeline: Optional[np.ndarray] = None   # (cycle, bytes) per transfer
+
+    @property
+    def ipc(self) -> float:
+        return self.n_instructions / max(self.cycles, 1.0)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.n_accesses, 1)
+
+    @property
+    def accuracy(self) -> float:
+        """Fraction of prefetched pages that were used before eviction."""
+        if self.prefetch_issued == 0:
+            return 1.0
+        return self.prefetch_used / self.prefetch_issued
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of would-be misses mitigated by prefetching."""
+        would_be = self.prefetch_used + self.faults + self.late
+        if would_be == 0:
+            return 1.0
+        return self.prefetch_used / would_be
+
+    @property
+    def unity(self) -> float:
+        return float(np.cbrt(self.accuracy * self.coverage * self.hit_rate))
+
+
+class UVMSimulator:
+    def __init__(self, config: UVMConfig | None = None,
+                 record_timeline: bool = False) -> None:
+        self.config = config or UVMConfig()
+        self.record_timeline = record_timeline
+
+    def run(self, trace: Trace, prefetcher: Prefetcher) -> UVMStats:
+        cfg = self.config
+        prefetcher.reset()
+        pages = trace.pages
+        n = len(pages)
+        # Every trace record is a TLB-missed coalesced request: it pays a GMMU
+        # page-table walk plus a DRAM access, and amortizes the kernel's
+        # arithmetic.  This per-access cost sets the prefetch lead-time scale
+        # (prediction distance d buys ~d * cycles_per_access of slack).
+        cycles_per_access = (cfg.page_table_walk_cycles + cfg.dram_cycles
+                             + cfg.access_overhead_cycles
+                             + (trace.n_instructions / max(n, 1)) / cfg.issue_ipc)
+
+        # page -> arrival cycle (usable when clock >= arrival). OrderedDict
+        # doubles as the LRU (move_to_end on touch).
+        resident: "OrderedDict[int, float]" = OrderedDict()
+        prefetched_unused: Dict[int, bool] = {}
+
+        clock = 0.0
+        pcie_free = 0.0
+        outstanding: List[float] = []   # min-heap of unresolved stall points
+
+        hits = late = faults = 0
+        prefetch_issued = prefetch_used = 0
+        pages_migrated = pages_evicted = 0
+        pcie_bytes = 0.0
+        zero_copy_bytes = 0.0
+        timeline: List[Tuple[float, float]] = []
+
+        page_tx = cfg.page_transfer_cycles
+        cap = cfg.device_pages
+
+        def schedule_prefetch(extras, batch: bool) -> None:
+            nonlocal pcie_free, pages_migrated, pcie_bytes, prefetch_issued
+            # Prefetches are driver-initiated: they skip the 45us fault
+            # service and only pay runtime overhead (+ model inference
+            # latency for the learned prefetcher), then queue on the bus.
+            # ``batch=True`` models the driver's block/chunk DMA granularity:
+            # the whole group transfers as one DMA and every page in it
+            # becomes usable only at *batch completion* — this is the tree
+            # prefetcher's timeliness weakness.  Single-page learned
+            # prefetches (batch=False) complete page by page.
+            ex_ready = (clock + cfg.prefetch_overhead_cycles
+                        + prefetcher.extra_latency_cycles)
+            ex_start = max(pcie_free, ex_ready)
+            end = ex_start + len(extras) * page_tx
+            t = ex_start
+            for q in extras:
+                t += page_tx
+                ex_arr = (end if batch else t) + cfg.pcie_latency_cycles
+                resident[q] = ex_arr
+                prefetched_unused[q] = True
+                pages_migrated += 1
+                pcie_bytes += cfg.page_size
+                if self.record_timeline:
+                    timeline.append((ex_arr, float(cfg.page_size)))
+            pcie_free = end
+            prefetch_issued += len(extras)
+            prefetcher.on_migrate(list(extras))
+
+        for i in range(n):
+            p = int(pages[i])
+            clock += cycles_per_access
+            arr = resident.get(p)
+            if arr is not None:
+                if arr <= clock:
+                    hits += 1
+                    if prefetched_unused.pop(p, None):
+                        prefetch_used += 1
+                else:
+                    # demanded while in flight: warp stalls till arrival
+                    late += 1
+                    heapq.heappush(outstanding, arr)
+                    if prefetched_unused.pop(p, None):
+                        prefetch_used += 1
+                resident.move_to_end(p)
+            else:
+                # ---- far fault ----
+                # The driver services the GPU fault buffer in batched rounds
+                # of ~one fault-service latency: a fault raised during round
+                # k is resolved at the end of round k+1 (uniform 1-2x 45us).
+                # Driver-initiated prefetches skip this path entirely —
+                # that asymmetry is what the paper's prefetcher exploits.
+                faults += 1
+                ff = cfg.far_fault_cycles
+                ready = ((clock // ff) + 2.0) * ff + cfg.page_table_walk_cycles
+                start = max(ready, pcie_free)
+                arrival = start + cfg.pcie_latency_cycles + page_tx
+                pcie_free = start + page_tx
+                resident[p] = arrival
+                resident.move_to_end(p)
+                pages_migrated += 1
+                pcie_bytes += cfg.page_size
+                if self.record_timeline:
+                    timeline.append((arrival, float(cfg.page_size)))
+                heapq.heappush(outstanding, arrival)
+                prefetcher.on_migrate([p])
+
+                extras = prefetcher.on_fault(i, p, resident)
+                if extras:
+                    schedule_prefetch(extras, batch=True)
+
+            # continuous (per-request) prefetching — the learned predictor
+            # sits at the UVM backend and predicts on every read-request.
+            extras = prefetcher.on_access(i, p, resident, clock)
+            if extras:
+                schedule_prefetch(extras, batch=False)
+
+            # MSHR pressure: too many outstanding faults -> stall to oldest
+            while len(outstanding) > cfg.mshr_entries:
+                clock = max(clock, heapq.heappop(outstanding))
+
+            # eviction under oversubscription
+            if cap is not None:
+                while len(resident) > cap:
+                    victim, v_arr = resident.popitem(last=False)
+                    if v_arr > clock:
+                        # never evict in-flight pages; reinsert at MRU
+                        resident[victim] = v_arr
+                        break
+                    prefetched_unused.pop(victim, None)
+                    prefetcher.on_evict(victim)
+                    pages_evicted += 1
+                    # writeback traffic (assume half the evictions dirty)
+                    if pages_evicted % 2 == 0:
+                        pcie_bytes += cfg.page_size
+                        pcie_free += page_tx
+
+        # drain: all outstanding stalls resolve
+        while outstanding:
+            clock = max(clock, heapq.heappop(outstanding))
+
+        return UVMStats(
+            name=trace.name,
+            prefetcher=prefetcher.name,
+            n_accesses=n,
+            n_instructions=trace.n_instructions,
+            cycles=clock,
+            hits=hits,
+            late=late,
+            faults=faults,
+            prefetch_issued=prefetch_issued,
+            prefetch_used=prefetch_used,
+            pages_migrated=pages_migrated,
+            pages_evicted=pages_evicted,
+            pcie_bytes=pcie_bytes,
+            zero_copy_bytes=zero_copy_bytes,
+            timeline=np.asarray(timeline) if self.record_timeline else None,
+        )

@@ -1,0 +1,23 @@
+import os
+import sys
+
+# src layout import without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_trace():
+    """One small, cached trace for cross-test reuse."""
+    from repro.traces import GPUModel, generate_benchmark
+    spec = generate_benchmark("ATAX", scale=0.25)
+    return GPUModel().run(spec)
+
+
+@pytest.fixture(scope="session")
+def pathfinder_trace():
+    from repro.traces import GPUModel, generate_benchmark
+    spec = generate_benchmark("Pathfinder", scale=0.25)
+    return GPUModel().run(spec)

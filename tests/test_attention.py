@@ -1,0 +1,76 @@
+"""HLSH / LSH / full attention semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as A
+
+
+def test_full_attention_softmax_rows():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    out = A.full_attention(q, q, q)
+    assert out.shape == q.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_hlsh_plan_invariants():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 30, 12)), jnp.float32)
+    plan = A.hlsh_plan(x, jax.random.PRNGKey(0))
+    assert plan.keep.shape == (4, 30)
+    assert plan.keep.dtype == jnp.bool_
+    src = np.asarray(plan.share_src)
+    assert src.min() >= 0 and src.max() < 30
+    # non-shared rows map to themselves
+    keep = np.asarray(plan.keep)
+    idx = np.arange(30)[None, :]
+    self_rows = src == idx
+    assert (self_rows | ~keep | self_rows).all()
+
+
+def test_hlsh_identical_rows_share():
+    """Duplicate rows must hash identically -> at most one representative
+    survives among the near-duplicates."""
+    rng = np.random.default_rng(2)
+    row = rng.normal(size=(1, 1, 16))
+    x = jnp.asarray(np.repeat(np.repeat(row, 32, axis=1), 2, axis=0),
+                    jnp.float32)
+    plan = A.hlsh_plan(x, jax.random.PRNGKey(3))
+    # all rows identical -> hamming distance 0 -> all "low" -> one base kept
+    keep = np.asarray(plan.keep)
+    assert keep.sum(axis=1).max() <= 1
+
+
+def test_hlsh_apply_matches_direct():
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 16, 8)), jnp.float32)
+    plan = A.hlsh_plan(q, jax.random.PRNGKey(0))
+    out = A.hlsh_apply(q, q, v, plan)
+    # direct recomputation
+    keep = plan.keep[..., None].astype(q.dtype)
+    logits = jnp.einsum("bnd,bmd->bnm", q * keep, q * keep) / jnp.sqrt(8.0)
+    want = jnp.einsum("bnm,bmd->bnd", jax.nn.softmax(logits, -1), v)
+    want = jnp.take_along_axis(want, plan.share_src[..., None], axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+def test_lsh_attention_close_to_full_when_one_bucket():
+    rng = np.random.default_rng(4)
+    # nearly-identical vectors all collide -> lsh == full
+    base = rng.normal(size=(1, 1, 8))
+    x = jnp.asarray(np.repeat(base, 10, axis=1) +
+                    rng.normal(size=(1, 10, 8)) * 1e-3, jnp.float32)
+    full = A.full_attention(x, x, x)
+    lsh = A.lsh_attention(x, x, x, jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(full), np.asarray(lsh), atol=1e-3)
+
+
+def test_erased_fraction():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(8, 30, 12)), jnp.float32)
+    plan = A.hlsh_plan(x, jax.random.PRNGKey(1))
+    f = float(A.hlsh_erased_fraction(plan))
+    assert 0.0 <= f < 1.0

@@ -1,0 +1,78 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles
+(interpret mode on CPU; TPU semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, hlsh_attention, int4_matmul
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("b,h,hkv,sq,sk,d", [
+    (1, 2, 1, 128, 128, 64),
+    (2, 4, 2, 256, 256, 64),
+    (1, 8, 1, 128, 384, 128),
+    (1, 4, 4, 256, 128, 32),
+])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, h, hkv, sq, sk, d, causal, dtype):
+    if causal and sq > sk:
+        pytest.skip("causal requires sq <= sk")
+    q = _rand((b, h, sq, d), dtype)
+    k = _rand((b, hkv, sk, d), dtype)
+    v = _rand((b, hkv, sk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("b,n,d", [(1, 128, 32), (2, 256, 64), (1, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hlsh_kernel_sweep(b, n, d, dtype):
+    q = _rand((b, n, d), dtype)
+    v = _rand((b, n, d), dtype)
+    keep = jnp.asarray(RNG.random((b, n)) > 0.3, jnp.float32)
+    keep = keep.at[:, : min(128, n)].set(0.0)   # force a skipped block
+    src = jnp.asarray(RNG.integers(0, n, (b, n)), jnp.int32)
+    out = hlsh_attention(q, q, v, keep, src)
+    want = ref.hlsh_attention_ref(q, q, v, keep, src)
+    tol = 2e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 256), (128, 256, 256),
+                                   (256, 128, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int4_matmul_sweep(m, k, n, dtype):
+    x = _rand((m, k), dtype)
+    w = jnp.asarray(RNG.integers(0, 256, (k, n // 2)).astype(np.uint8))
+    out = int4_matmul(x, w, 0.03)
+    want = ref.int4_matmul_ref(x, w, 0.03)
+    rel = np.abs(np.asarray(out, np.float32) - np.asarray(want, np.float32))
+    denom = np.abs(np.asarray(want, np.float32)) + 1.0
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    assert (rel / denom).max() < tol
+
+
+def test_hlsh_kernel_matches_core_attention():
+    """Kernel path == the model's jnp HLSH (plan -> apply) end to end."""
+    from repro.core import attention as A
+    q = _rand((2, 128, 32), jnp.float32)
+    v = _rand((2, 128, 32), jnp.float32)
+    plan = A.hlsh_plan(q, jax.random.PRNGKey(0))
+    want = A.hlsh_apply(q, q, v, plan)
+    out = hlsh_attention(q, q, v, plan.keep.astype(jnp.float32),
+                         plan.share_src.astype(jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-4)

@@ -1,0 +1,68 @@
+"""Predictor models + training: learnability, quantized training, revised
+config behaviour."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (DeltaVocab, PredictorConfig, build_dataset,
+                        cluster_trace, delta_convergence, init_params,
+                        revised_config, train_predictor)
+from repro.core import apply as model_apply
+
+
+def _dataset(trace, distance=1, revised=False):
+    from repro.core.model import REVISED_FEATURES, EMB_DIMS
+    ct = cluster_trace(trace, "sm")
+    vocab = DeltaVocab.build(ct, distance=distance)
+    feats = list(REVISED_FEATURES if revised else EMB_DIMS)
+    data = build_dataset(ct, vocab, features=feats, distance=distance,
+                         max_train=4000, max_eval=2000)
+    return ct, vocab, data
+
+
+@pytest.mark.parametrize("arch", ["transformer", "fc", "mlp", "cnn", "lstm"])
+def test_model_shapes(arch, small_trace):
+    _, vocab, data = _dataset(small_trace)
+    cfg = PredictorConfig(n_classes=vocab.n_classes, arch=arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    logits = model_apply(cfg, params, data.x_train[:8])
+    assert logits.shape == (8, vocab.n_classes)
+    assert bool(np.isfinite(np.asarray(logits)).all())
+
+
+def test_training_beats_chance(small_trace):
+    _, vocab, data = _dataset(small_trace)
+    cfg = PredictorConfig(n_classes=vocab.n_classes)
+    res = train_predictor(cfg, data, steps=60)
+    # ATAX is the paper's easiest benchmark: far above chance quickly
+    assert res.metrics["top1"] > 0.5
+
+
+def test_revised_quantized_trains(small_trace):
+    ct, vocab, data = _dataset(small_trace, revised=True)
+    conv = delta_convergence(ct)
+    cfg = revised_config(vocab.n_classes, conv, quantize=True)
+    res = train_predictor(cfg, data, steps=60)
+    assert res.metrics["top1"] > 0.5
+    assert cfg.d_model == 12          # 3-feature, 12-dim embedding (paper §6)
+
+
+def test_bypass_indicator():
+    hi = revised_config(10, convergence=0.95)
+    lo = revised_config(10, convergence=0.1)
+    assert hi.attention == "bypass"
+    assert lo.attention == "hlsh"
+
+
+def test_service_end_to_end(small_trace):
+    from repro.core import PredictorService
+    svc = PredictorService(steps=40)
+    res = svc.fit(small_trace)
+    preds = svc.predict_trace()
+    assert len(preds) == len(small_trace)
+    valid = preds >= 0
+    assert valid.mean() > 0.5
+    # predictions are plausible pages (within the trace's address range)
+    pages = small_trace.pages
+    assert preds[valid].min() >= pages.min() - 10_000
+    assert preds[valid].max() <= pages.max() + 10_000

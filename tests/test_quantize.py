@@ -1,0 +1,44 @@
+"""Quantization: fake-quant grids, STE, int4 pack/unpack."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (QMAX, QMIN, dequantize_int4, fake_quant,
+                                 fake_quant_tensor, quantize_int4)
+
+
+def test_fake_quant_grid():
+    x = jnp.linspace(-12, 12, 101)
+    q = fake_quant(x)
+    assert float(q.min()) >= QMIN
+    assert float(q.max()) <= QMAX
+    # on-grid: integers
+    assert np.allclose(np.asarray(q), np.round(np.asarray(q)))
+
+
+def test_fake_quant_ste_gradient():
+    g = jax.grad(lambda x: fake_quant(x).sum())(jnp.asarray([0.3, 5.0, 20.0]))
+    # straight-through: gradient 1 everywhere (including clamped region,
+    # by this STE formulation)
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=1, max_size=64))
+def test_int4_roundtrip_error(vals):
+    x = np.asarray(vals, np.float32)
+    packed, scale = quantize_int4(x)
+    y = dequantize_int4(packed, scale, x.size, x.shape)
+    # max error is half a quantization step
+    assert np.abs(x - y).max() <= scale * 1.01 + 1e-6
+
+
+def test_fake_quant_tensor_preserves_scale():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64,)) * 0.02,
+                    jnp.float32)
+    q = fake_quant_tensor(x)
+    # per-tensor scaling: small weights survive (not rounded to zero)
+    assert float(jnp.abs(q).max()) > 0
+    assert float(jnp.max(jnp.abs(q - x))) < float(jnp.abs(x).max())

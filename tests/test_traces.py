@@ -1,0 +1,67 @@
+"""Trace substrate tests: generator validity, scheduling structure,
+determinism."""
+import numpy as np
+import pytest
+
+from repro.traces import BENCHMARKS, GPUModel, generate_benchmark
+from repro.traces.gpu_model import GPUModelConfig
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_generator_valid(name):
+    spec = generate_benchmark(name, scale=0.25)
+    assert spec.total_accesses > 1000
+    for s in spec.streams[:50]:
+        assert len(s.pcs) == len(s.pages) == len(s.arrays)
+        assert (s.pages >= 0).all()
+
+
+def test_gpu_model_fields(small_trace):
+    a = small_trace.accesses
+    assert (a["tpc"] == a["sm"] // 2).all()
+    assert a["sm"].max() < 28
+    assert a["warp"].max() < 64
+    assert len(small_trace) > 1000
+
+
+def test_determinism():
+    spec = generate_benchmark("NW", scale=0.2)
+    t1 = GPUModel(GPUModelConfig(seed=3)).run(spec)
+    t2 = GPUModel(GPUModelConfig(seed=3)).run(spec)
+    assert np.array_equal(t1.accesses, t2.accesses)
+
+
+def test_seed_changes_schedule():
+    spec = generate_benchmark("NW", scale=0.2)
+    t1 = GPUModel(GPUModelConfig(seed=1)).run(spec)
+    t2 = GPUModel(GPUModelConfig(seed=2)).run(spec)
+    assert not np.array_equal(t1.accesses["page"][:5000],
+                              t2.accesses["page"][:5000])
+
+
+def test_mv_kernels_have_dominant_delta():
+    """The paper's §5.3 premise: ATAX/BICG/MVT per-SM streams have one
+    dominant page delta (>95%)."""
+    for name in ("ATAX", "BICG", "MVT"):
+        tr = GPUModel().run(generate_benchmark(name, scale=0.5))
+        sm0 = tr.accesses[tr.accesses["sm"] == 0]
+        d = np.diff(sm0["page"].astype(np.int64))
+        _, counts = np.unique(d, return_counts=True)
+        assert counts.max() / counts.sum() > 0.9, name
+
+
+def test_tlb_filter_drops_repeats():
+    # single-kernel benchmark: the TLB flushes between kernel launches, so
+    # uniqueness under an infinite window only holds within one kernel
+    cfg = GPUModelConfig(tlb_window=10_000_000)
+    tr = GPUModel(cfg).run(generate_benchmark("AddVectors", scale=0.1))
+    for sm in range(4):
+        pages = tr.accesses[tr.accesses["sm"] == sm]["page"]
+        assert len(np.unique(pages)) == len(pages)
+
+
+def test_split():
+    tr = GPUModel().run(generate_benchmark("ATAX", scale=0.2))
+    a, b = tr.split(0.8)
+    assert len(a) + len(b) == len(tr)
+    assert abs(len(a) - 0.8 * len(tr)) <= 1

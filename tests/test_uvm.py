@@ -1,0 +1,104 @@
+"""UVM simulator invariants + prefetcher behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.traces.trace import BASIC_BLOCK_PAGES, Trace, make_records
+from repro.uvm import (NoPrefetcher, OraclePrefetcher, TreePrefetcher,
+                       UVMConfig, UVMSimulator)
+from repro.uvm.prefetchers import LearnedPrefetcher
+
+
+def _mk_trace(pages, n_inst=None) -> Trace:
+    recs = make_records(len(pages))
+    recs["page"] = pages
+    recs["sm"] = np.arange(len(pages)) % 4
+    return Trace("synth", recs, {}, {}, n_inst or len(pages) * 100)
+
+
+def test_accounting_invariant(small_trace):
+    sim = UVMSimulator()
+    st_ = sim.run(small_trace, NoPrefetcher())
+    assert st_.hits + st_.late + st_.faults == st_.n_accesses
+    assert st_.coverage == 0.0        # nothing prefetched
+    assert st_.accuracy == 1.0        # vacuous
+    assert st_.pcie_bytes == st_.pages_migrated * 4096
+
+
+def test_on_demand_faults_once_per_page():
+    pages = np.concatenate([np.arange(100), np.arange(100)])
+    tr = _mk_trace(pages)
+    st_ = UVMSimulator().run(tr, NoPrefetcher())
+    assert st_.faults == 100
+
+
+def test_tree_prefetches_blocks():
+    pages = np.arange(0, 64, 1)  # 4 basic blocks, sequential
+    tr = _mk_trace(pages)
+    st_ = UVMSimulator().run(tr, TreePrefetcher())
+    # faults only at block boundaries (or fewer, via escalation)
+    assert st_.faults <= 4
+    assert st_.prefetch_issued >= 60 - st_.faults
+
+
+def test_tree_escalation_covers_chunk():
+    # touch >50% of a 2MB chunk's blocks: the rest must be prefetched
+    pf = TreePrefetcher()
+    pages = np.arange(0, 272, 1)   # 17 blocks > half of 32
+    tr = _mk_trace(pages)
+    st_ = UVMSimulator().run(tr, pf)
+    assert st_.pages_migrated >= 512  # whole 2MB chunk pulled
+
+
+def test_eviction_capacity():
+    cfg = UVMConfig(device_pages=64)
+    pages = np.arange(0, 1000)
+    tr = _mk_trace(pages)
+    st_ = UVMSimulator(cfg).run(tr, NoPrefetcher())
+    assert st_.pages_evicted >= 1000 - 64 - 1
+
+
+def test_oracle_upper_bound(small_trace):
+    sim = UVMSimulator()
+    tree = sim.run(small_trace, TreePrefetcher())
+    oracle = sim.run(small_trace, OraclePrefetcher(small_trace.pages))
+    assert oracle.accuracy >= 0.99
+    assert oracle.ipc >= tree.ipc * 0.9
+
+
+def test_learned_latency_hurts(pathfinder_trace):
+    """Fig 10 mechanism: larger per-prediction overhead -> fewer predictions
+    served -> worse IPC."""
+    n = len(pathfinder_trace)
+    # perfect distance-k predictions
+    k = 64
+    preds = np.full(n, -1, np.int64)
+    preds[:-k] = pathfinder_trace.pages[k:]
+    cfg = UVMConfig()
+    sim = UVMSimulator(cfg)
+    fast = sim.run(pathfinder_trace, LearnedPrefetcher(
+        preds, extra_latency_cycles=1.0 * cfg.cycles_per_us))
+    slow = sim.run(pathfinder_trace, LearnedPrefetcher(
+        preds, extra_latency_cycles=40.0 * cfg.cycles_per_us))
+    assert fast.ipc >= slow.ipc
+    assert fast.prefetch_issued >= slow.prefetch_issued
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 500), min_size=50, max_size=400))
+def test_property_conservation(pages):
+    tr = _mk_trace(np.asarray(pages, np.int64))
+    st_ = UVMSimulator().run(tr, TreePrefetcher())
+    # conservation: every access classified exactly once
+    assert st_.hits + st_.late + st_.faults == st_.n_accesses
+    # every unique page migrated at least once, never "negative" traffic
+    assert st_.pages_migrated >= len(set(pages))
+    assert st_.prefetch_used <= st_.prefetch_issued
+    assert 0.0 <= st_.hit_rate <= 1.0
+    assert 0.0 <= st_.unity <= 1.0
+
+
+def test_unity_formula():
+    from repro.uvm.metrics import unity
+    assert unity(1, 1, 1) == pytest.approx(1.0)
+    assert unity(0.5, 1, 1) == pytest.approx(0.5 ** (1 / 3))

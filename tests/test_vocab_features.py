@@ -1,0 +1,66 @@
+"""Vocabulary + feature-extraction properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DeltaVocab, cluster_trace, delta_convergence,
+                        encode_features)
+from repro.core.vocab import FEATURE_BUCKETS
+
+
+def test_cluster_roundtrip(small_trace):
+    ct = cluster_trace(small_trace, "sm")
+    total = sum(len(p) for p in ct.pages)
+    assert total <= len(small_trace)
+    # global indices partition the trace
+    all_idx = np.concatenate(ct.global_index)
+    assert len(np.unique(all_idx)) == len(all_idx)
+    # deltas consistent with pages
+    for c, p in zip(ct.clusters, ct.pages):
+        assert np.array_equal(c["dp"][1:], np.diff(p))
+
+
+def test_convergence_bounds(small_trace):
+    ct = cluster_trace(small_trace, "sm")
+    c = delta_convergence(ct)
+    assert 0.0 < c <= 1.0
+
+
+def test_vocab_encode_decode(small_trace):
+    ct = cluster_trace(small_trace, "sm")
+    v = DeltaVocab.build(ct)
+    deltas = np.concatenate([c["dp"][1:] for c in ct.clusters])[:500]
+    enc = v.encode_fast(deltas)
+    dec = v.decode(enc)
+    known = enc != 0
+    assert np.array_equal(dec[known], deltas[known])
+    assert v.n_classes >= 2
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-10**9, 10**9), min_size=1, max_size=200))
+def test_encode_fast_matches_slow(deltas):
+    import dataclasses
+    arr = np.asarray(deltas, np.int64)
+    vals = np.unique(arr[: max(len(arr) // 2, 1)])
+    vocab = DeltaVocab(
+        deltas=np.concatenate([[np.iinfo(np.int64).min], vals]),
+        index={int(d): i + 1 for i, d in enumerate(vals)})
+    assert np.array_equal(vocab.encode(arr), vocab.encode_fast(arr))
+
+
+def test_feature_encoding_bounds(small_trace):
+    ct = cluster_trace(small_trace, "sm")
+    enc = encode_features(ct.clusters[0])
+    from repro.core import FEATURE_NAMES
+    for j, f in enumerate(FEATURE_NAMES):
+        assert enc[:, j].min() >= 0
+        assert enc[:, j].max() < FEATURE_BUCKETS[f]
+
+
+def test_distance_vocab(small_trace):
+    ct = cluster_trace(small_trace, "sm")
+    v1 = DeltaVocab.build(ct, distance=1)
+    v8 = DeltaVocab.build(ct, distance=8)
+    # distance-8 deltas of a stride stream = 8x the stride: disjoint-ish
+    assert v8.n_classes >= 2
+    assert v1.n_classes >= 2
