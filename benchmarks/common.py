@@ -16,12 +16,15 @@ from repro.core import (
     cluster_trace, delta_convergence, revised_config, train_predictor,
 )
 from repro.traces import GPUModel, generate_benchmark
-from repro.uvm import (
-    LearnedPrefetcher, NoPrefetcher, TreePrefetcher, UVMConfig, UVMSimulator,
-)
+from repro.uvm import LearnedPrefetcher, UVMConfig
+from repro.uvm.sweep import (SWEEP_VERSION, SweepCell, run_sweep,
+                             simulate_cell)
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "cache")
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+# process fan-out for non-learned sweep cells (run.py --workers overrides)
+SWEEP_WORKERS = int(os.environ.get("REPRO_SWEEP_WORKERS", "1"))
 
 ALL_BENCHMARKS = ["AddVectors", "ATAX", "Backprop", "BICG", "Hotspot", "MVT",
                   "NW", "Pathfinder", "Srad-v2", "StreamTriad", "2DCONV"]
@@ -84,8 +87,10 @@ def train_cell(bench: str, *, cluster: str = "sm", distance: int = 1,
         # the 12-dim revised model is ~100x cheaper per step than the
         # 200-dim transformer but needs more steps to converge
         steps = max(steps, 400)
+    # v bumped 8 -> 9 with the deterministic (crc32) trace seeding: cached
+    # rows trained on old salted-hash traces must not be served
     key = json.dumps(dict(
-        v=8, bench=bench, cluster=cluster, distance=distance, arch=arch,
+        v=9, bench=bench, cluster=cluster, distance=distance, arch=arch,
         attention=attention, revised=revised, quantize=quantize,
         shuffle=shuffle, features=features, n_layers=n_layers,
         n_heads=n_heads, steps=steps, drop=drop_feature,
@@ -138,49 +143,80 @@ def _service_predictions(bench: str, steps: int):
     return trace, preds, svc, res
 
 
+def _eval_cell(bench: str, prefetcher: str, *, prediction_us: float = 1.0,
+               device_pages: Optional[int] = None) -> SweepCell:
+    """The sweep-grid point matching the paper's evaluation setup."""
+    return SweepCell(bench=bench, prefetcher=prefetcher,
+                     prediction_us=prediction_us, device_pages=device_pages,
+                     window=EVAL_WINDOW, engine="vectorized",
+                     service_steps=SERVICE_STEPS)
+
+
+def _run_cell(cell: SweepCell, timeline: bool = False) -> Dict:
+    """One sweep cell on the in-process trace/predictor caches.  On the
+    paper's default grid point the learned prefetcher shares a single
+    trained service across every prediction_us and capacity point of a
+    benchmark; off-default cells train their own (sweep.make_prefetcher)."""
+    default_point = (cell.scale == 1.0 and cell.seed == 0
+                     and cell.window == EVAL_WINDOW)
+    trace = get_eval_trace(cell.bench) if default_point else None
+    pf = None
+    if (cell.prefetcher == "learned" and default_point
+            and cell.service_steps == SERVICE_STEPS):
+        _, preds, _, _ = _service_predictions(cell.bench, cell.service_steps)
+        pf = LearnedPrefetcher(
+            preds,
+            extra_latency_cycles=(cell.prediction_us
+                                  * UVMConfig().cycles_per_us))
+    row = simulate_cell(cell, trace=trace, prefetcher=pf,
+                        record_timeline=timeline)
+    row["simulated_instructions"] = row["n_instructions"]
+    return row
+
+
+def _cached_cell(cell: SweepCell) -> Dict:
+    # keyed on SWEEP_VERSION too, so one knob invalidates both this JSON
+    # cache and the sweep-cell store after a timing-model change
+    key = json.dumps(dict(v=9, sweep_v=SWEEP_VERSION, **cell.to_dict()),
+                     sort_keys=True)
+    return cached(key, lambda: _run_cell(cell))
+
+
 def uvm_cell(bench: str, prefetcher: str, *,
              prediction_us: float = 1.0,
              device_pages: Optional[int] = None,
              timeline: bool = False) -> Dict:
-    """Run the UVM simulator for (benchmark, prefetcher); cached (except when
-    a timeline is requested)."""
-    key = json.dumps(dict(v=8, bench=bench, pf=prefetcher,
-                          us=prediction_us, dp=device_pages,
-                          steps=SERVICE_STEPS), sort_keys=True)
-
-    def compute():
-        trace = get_eval_trace(bench)
-        cfg = UVMConfig(prediction_overhead_us=prediction_us,
-                        device_pages=device_pages)
-        sim = UVMSimulator(cfg, record_timeline=timeline)
-        if prefetcher == "tree":
-            pf = TreePrefetcher()
-        elif prefetcher == "none":
-            pf = NoPrefetcher()
-        elif prefetcher == "learned":
-            _, preds, _, _ = _service_predictions(bench, SERVICE_STEPS)
-            pf = LearnedPrefetcher(
-                preds,
-                extra_latency_cycles=prediction_us * cfg.cycles_per_us)
-        else:
-            raise ValueError(prefetcher)
-        st = sim.run(trace, pf)
-        out = {
-            "bench": bench, "prefetcher": prefetcher,
-            "ipc": st.ipc, "hit_rate": st.hit_rate,
-            "accuracy": st.accuracy, "coverage": st.coverage,
-            "unity": st.unity, "pcie_bytes": st.pcie_bytes,
-            "cycles": st.cycles, "faults": st.faults, "late": st.late,
-            "n_accesses": st.n_accesses,
-            "simulated_instructions": st.n_instructions,
-        }
-        if timeline and st.timeline is not None:
-            out["timeline"] = st.timeline.tolist()
-        return out
-
+    """Run one UVM cell through the sweep engine; cached (except when a
+    timeline is requested)."""
+    cell = _eval_cell(bench, prefetcher, prediction_us=prediction_us,
+                      device_pages=device_pages)
     if timeline:
-        return compute()
-    return cached(key, compute)
+        return _run_cell(cell, timeline=True)
+    return _cached_cell(cell)
+
+
+def uvm_sweep(cells: List[SweepCell]) -> List[Dict]:
+    """Run a (bench × prefetcher × config) grid via the sweep orchestrator.
+
+    Non-learned cells fan out across ``SWEEP_WORKERS`` processes with their
+    own on-disk resume state; learned cells run in-process so they can share
+    one trained predictor service per benchmark.
+    """
+    out: Dict[int, Dict] = {}
+    plain = [(i, c) for i, c in enumerate(cells) if c.prefetcher != "learned"]
+    if plain:
+        # several suites share this out_dir: skip the aggregate files so
+        # they never reflect just the last suite's grid
+        rows = run_sweep([c for _, c in plain],
+                         out_dir=os.path.join(CACHE_DIR, "sweep"),
+                         workers=SWEEP_WORKERS, write_aggregate=False)
+        for (i, _), row in zip(plain, rows):
+            row["simulated_instructions"] = row["n_instructions"]
+            out[i] = row
+    for i, c in enumerate(cells):
+        if c.prefetcher == "learned":
+            out[i] = _cached_cell(c)
+    return [out[i] for i in range(len(cells))]
 
 
 def geomean(xs: List[float]) -> float:

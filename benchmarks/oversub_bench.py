@@ -6,27 +6,32 @@ suite measures exactly that: device capacity swept from 1.5x down to 0.5x
 the working set, for on-demand / tree / learned prefetching."""
 from __future__ import annotations
 
-from benchmarks.common import get_eval_trace, print_table, uvm_cell
+from benchmarks.common import (_eval_cell, get_eval_trace, print_table,
+                               uvm_sweep)
 
 
 BENCHES = ["Hotspot", "Backprop"]
 FRACTIONS = [1.5, 0.75, 0.5]
+PREFETCHERS = ("none", "tree", "learned")
 
 
 def run():
-    rows = []
+    # one batched (bench × capacity × prefetcher) grid through the sweep API
+    cells, tags = [], []
     for b in BENCHES:
         ws = get_eval_trace(b).working_set_pages
         for frac in FRACTIONS:
-            cap = int(ws * frac)
-            for pf in ("none", "tree", "learned"):
-                r = uvm_cell(b, pf, device_pages=cap)
-                rows.append({
-                    "bench": b, "capacity_x": frac, "prefetcher": pf,
-                    "hit_rate": r["hit_rate"],
-                    "pcie_mb": r["pcie_bytes"] / 1e6,
-                    "ipc": r["ipc"],
-                })
+            for pf in PREFETCHERS:
+                cells.append(_eval_cell(b, pf, device_pages=int(ws * frac)))
+                tags.append((b, frac, pf))
+    rows = []
+    for (b, frac, pf), r in zip(tags, uvm_sweep(cells)):
+        rows.append({
+            "bench": b, "capacity_x": frac, "prefetcher": pf,
+            "hit_rate": r["hit_rate"],
+            "pcie_mb": r["pcie_bytes"] / 1e6,
+            "ipc": r["ipc"],
+        })
     # normalize IPC within (bench, fraction) to the tree runtime
     by = {}
     for r in rows:

@@ -2,15 +2,18 @@
 (geomean over the 11 benchmarks), plus hit-rate and traffic summaries."""
 from __future__ import annotations
 
-from benchmarks.common import ALL_BENCHMARKS, geomean, print_table, uvm_cell
+from benchmarks.common import (ALL_BENCHMARKS, _eval_cell, geomean,
+                               print_table, uvm_sweep)
 
 
 def run():
+    grid = uvm_sweep([_eval_cell(b, pf)
+                      for b in ALL_BENCHMARKS for pf in ("tree", "learned")])
+    by = {(r["bench"], r["prefetcher"]): r for r in grid}
     rows = []
     gains, hits_u, hits_r, traffic = [], [], [], []
     for b in ALL_BENCHMARKS:
-        tree = uvm_cell(b, "tree")
-        ours = uvm_cell(b, "learned")
+        tree, ours = by[(b, "tree")], by[(b, "learned")]
         g = ours["ipc"] / tree["ipc"]
         gains.append(g)
         hits_u.append(tree["hit_rate"])

@@ -4,6 +4,13 @@ summary CSV at the end (per-table CSVs above it).
     PYTHONPATH=src python -m benchmarks.run            # full
     REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
     PYTHONPATH=src python -m benchmarks.run --only table1,perf
+    PYTHONPATH=src python -m benchmarks.run --only table10,table11,oversub \
+        --workers 8                                    # parallel UVM sweeps
+
+The UVM suites (table10/table11/perf/oversub/fig10/fig12) all route through
+``repro.uvm.sweep``: simulations run on the vectorized engine, non-learned
+cells fan out over ``--workers`` processes, and completed cells persist
+under ``benchmarks/cache/sweep/`` for resume.
 """
 from __future__ import annotations
 
@@ -11,8 +18,8 @@ import argparse
 import time
 import traceback
 
-from benchmarks import (fig5_features, fig6_convergence, fig9_predictors,
-                        oversub_bench,
+from benchmarks import (common, fig5_features, fig6_convergence,
+                        fig9_predictors, oversub_bench,
                         fig10_latency, fig12_pcie, kernels_bench,
                         offload_bench, perf_ipc, table1_transformer,
                         table2_clustering, table3_distance, table4_fc,
@@ -45,8 +52,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process fan-out for the UVM sweep suites")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.workers is not None:
+        common.SWEEP_WORKERS = args.workers
 
     summary = []
     failed = []

@@ -1,0 +1,116 @@
+"""Micro-benchmark: legacy vs vectorized UVM-engine replay throughput.
+
+    PYTHONPATH=src python -m benchmarks.sim_throughput            # 1M accesses
+    PYTHONPATH=src python -m benchmarks.sim_throughput --n 200000
+    PYTHONPATH=src python -m benchmarks.sim_throughput --bench ATAX --scale 1.0
+
+The default workload is a 1M-access DP-style trace (per "row", a block of
+newly-streamed pages plus repeated sweeps over two reused result buffers —
+the Pathfinder access structure that dominates the paper's reuse-heavy
+benchmarks).  Every cell also cross-checks that both engines produced
+identical counters, so the speedup is never bought with drift.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+from repro.traces.trace import Trace, make_records
+from repro.uvm import (NoPrefetcher, OraclePrefetcher, TreePrefetcher,
+                       UVMConfig, UVMSimulator, VectorizedUVMSimulator)
+from repro.uvm.prefetchers import LearnedPrefetcher
+from repro.uvm.metrics import geomean
+
+CHECK_FIELDS = ("hits", "late", "faults", "prefetch_issued", "prefetch_used",
+                "pages_migrated", "pages_evicted", "cycles", "pcie_bytes")
+
+
+def dp_sweep_trace(n: int) -> Trace:
+    """DP-style rows: 400 fresh streaming pages + 8 sweeps over two reused
+    1000-page result buffers per row (≈98% reuse, like Pathfinder)."""
+    per_row = 20_000
+    rows = max(1, n // per_row)
+    stream = 400
+    reuse = np.tile(np.arange(2000, dtype=np.int64), 10)[:19_600]
+    chunks = [np.concatenate([np.arange(r * stream, (r + 1) * stream,
+                                        dtype=np.int64) + 100_000,
+                              reuse])
+              for r in range(rows)]
+    pages = np.concatenate(chunks)[:n]
+    recs = make_records(len(pages))
+    recs["page"] = pages
+    recs["sm"] = np.arange(len(pages)) % 4
+    return Trace("dp-sweep", recs, {}, {}, len(pages) * 100)
+
+
+def bench_trace(name: str, scale: float) -> Trace:
+    from repro.traces import GPUModel, generate_benchmark
+    return GPUModel().run(generate_benchmark(name, scale=scale))
+
+
+def prefetchers(trace: Trace, cfg: UVMConfig) -> List:
+    from repro.uvm.golden import perfect_preds
+    pages = np.asarray(trace.pages)
+    preds = perfect_preds(trace, distance=64)
+    return [
+        ("none", lambda: NoPrefetcher()),
+        ("tree", lambda: TreePrefetcher()),
+        ("learned", lambda: LearnedPrefetcher(
+            preds, extra_latency_cycles=1.0 * cfg.cycles_per_us)),
+        ("oracle", lambda: OraclePrefetcher(pages)),
+    ]
+
+
+def run(trace: Trace, cfg: UVMConfig, skip_oracle: bool = False):
+    n = len(trace)
+    rows = []
+    print(f"\n== sim_throughput: {trace.name} ({n} accesses) ==")
+    print("prefetcher,legacy_s,legacy_acc_per_s,vec_s,vec_acc_per_s,"
+          "speedup,identical")
+    for name, factory in prefetchers(trace, cfg):
+        if skip_oracle and name == "oracle":
+            continue
+        t0 = time.time()
+        s_legacy = UVMSimulator(cfg).run(trace, factory())
+        t_legacy = time.time() - t0
+        t0 = time.time()
+        s_vec = VectorizedUVMSimulator(cfg).run(trace, factory())
+        t_vec = time.time() - t0
+        same = all(getattr(s_legacy, f) == getattr(s_vec, f)
+                   for f in CHECK_FIELDS)
+        speedup = t_legacy / max(t_vec, 1e-9)
+        rows.append({"prefetcher": name, "speedup": speedup, "same": same,
+                     "legacy_aps": n / max(t_legacy, 1e-9),
+                     "vec_aps": n / max(t_vec, 1e-9)})
+        print(f"{name},{t_legacy:.3f},{n / max(t_legacy, 1e-9):.0f},"
+              f"{t_vec:.3f},{n / max(t_vec, 1e-9):.0f},"
+              f"{speedup:.2f},{same}")
+    gm = geomean([r["speedup"] for r in rows])
+    print(f"GEOMEAN speedup: {gm:.2f}x; all identical: "
+          f"{all(r['same'] for r in rows)}")
+    return rows, gm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1_000_000,
+                    help="accesses in the synthetic dp-sweep trace")
+    ap.add_argument("--bench", default=None,
+                    help="also run a generated benchmark trace (e.g. ATAX)")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--skip-oracle", action="store_true",
+                    help="oracle is slow on both engines at large n")
+    args = ap.parse_args()
+
+    cfg = UVMConfig()
+    run(dp_sweep_trace(args.n), cfg, skip_oracle=args.skip_oracle)
+    if args.bench:
+        run(bench_trace(args.bench, args.scale), cfg,
+            skip_oracle=args.skip_oracle)
+
+
+if __name__ == "__main__":
+    main()

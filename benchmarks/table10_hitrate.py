@@ -1,14 +1,18 @@
-"""Paper Table 10: device-memory page hit rate, UVMSmart (U) vs ours (R)."""
+"""Paper Table 10: device-memory page hit rate, UVMSmart (U) vs ours (R).
+
+One batched sweep over the (benchmark × {tree, learned}) grid."""
 from __future__ import annotations
 
-from benchmarks.common import ALL_BENCHMARKS, print_table, uvm_cell
+from benchmarks.common import ALL_BENCHMARKS, _eval_cell, print_table, uvm_sweep
 
 
 def run():
+    grid = uvm_sweep([_eval_cell(b, pf)
+                      for b in ALL_BENCHMARKS for pf in ("tree", "learned")])
+    by = {(r["bench"], r["prefetcher"]): r for r in grid}
     rows = []
     for b in ALL_BENCHMARKS:
-        tree = uvm_cell(b, "tree")
-        ours = uvm_cell(b, "learned")
+        tree, ours = by[(b, "tree")], by[(b, "learned")]
         rows.append({"bench": b, "hit_U": tree["hit_rate"],
                      "hit_R": ours["hit_rate"],
                      "simulated_inst": int(tree["simulated_instructions"])})

@@ -3,17 +3,18 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import ALL_BENCHMARKS, print_table, uvm_cell
+from benchmarks.common import ALL_BENCHMARKS, _eval_cell, print_table, uvm_sweep
 
 
 def run():
+    grid = uvm_sweep([_eval_cell(b, pf)
+                      for pf in ("tree", "learned") for b in ALL_BENCHMARKS])
     rows = []
-    for pf, tag in (("tree", "U"), ("learned", "R")):
-        for b in ALL_BENCHMARKS:
-            r = uvm_cell(b, pf)
-            rows.append({"bench": b, "prefetcher": tag,
-                         "acc": r["accuracy"], "cov": r["coverage"],
-                         "hit": r["hit_rate"], "unity": r["unity"]})
+    for r in grid:
+        tag = "U" if r["prefetcher"] == "tree" else "R"
+        rows.append({"bench": r["bench"], "prefetcher": tag,
+                     "acc": r["accuracy"], "cov": r["coverage"],
+                     "hit": r["hit_rate"], "unity": r["unity"]})
     for tag in ("U", "R"):
         us = [r["unity"] for r in rows if r["prefetcher"] == tag]
         rows.append({"bench": "MEAN", "prefetcher": tag,

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + the UVM golden-equivalence and sweep suites.
+#
+#   bash scripts/ci_check.sh
+#
+# Installs the test dependencies (hypothesis enables the property-based
+# suites; without it they degrade to skips, so an offline install failure is
+# tolerated but surfaced).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! python -c "import hypothesis" 2>/dev/null; then
+    echo "[ci] installing test dependencies (hypothesis, pytest)"
+    python -m pip install -q "hypothesis>=6" "pytest>=7" \
+        || echo "[ci] WARNING: could not install hypothesis (offline?);" \
+                "property-based suites will run as skips"
+fi
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "[ci] tier-1: full test suite (golden/sweep gated separately below)"
+python -m pytest -x -q --ignore=tests/test_uvm_golden.py \
+    --ignore=tests/test_sweep.py
+
+echo "[ci] golden equivalence: vectorized engine vs legacy fixtures"
+python -m pytest -q tests/test_uvm_golden.py tests/test_sweep.py
+
+echo "[ci] OK"

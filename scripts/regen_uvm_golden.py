@@ -1,0 +1,46 @@
+#!/usr/bin/env python
+"""Regenerate the UVM golden-equivalence fixtures.
+
+Runs the *legacy* per-access simulator over the golden matrix defined in
+``repro.uvm.golden`` and records its stats to ``tests/golden/uvm_golden.json``.
+Only rerun this after an intentional change to the UVM timing model — the
+fixtures exist to catch unintentional drift in either engine.
+
+    PYTHONPATH=src python scripts/regen_uvm_golden.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.uvm.golden import iter_golden_cells, stats_to_dict  # noqa: E402
+from repro.uvm.simulator import UVMSimulator  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
+                   "uvm_golden.json")
+
+
+def main() -> None:
+    cells = {}
+    for cell_id, trace, config, factory in iter_golden_cells():
+        stats = UVMSimulator(config).run(trace, factory())
+        cells[cell_id] = stats_to_dict(stats)
+        print(f"{cell_id}: faults={stats.faults} hits={stats.hits} "
+              f"late={stats.late} cycles={stats.cycles:.1f}")
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    doc = {
+        "_regenerate": "PYTHONPATH=src python scripts/regen_uvm_golden.py",
+        "_engine": "legacy UVMSimulator (reference)",
+        "cells": cells,
+    }
+    with open(OUT, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(cells)} cells -> {os.path.normpath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

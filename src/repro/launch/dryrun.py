@@ -32,7 +32,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCHS, SHAPES, get_arch      # noqa: E402
 from repro.distributed.sharding import (               # noqa: E402
-    batch_axes_for, batch_shardings, opt_shardings, param_shardings_stacked)
+    batch_axes_for, batch_shardings, mesh_context, opt_shardings,
+    param_shardings_stacked)
 from repro.launch import roofline as rl                # noqa: E402
 from repro.launch.mesh import make_production_mesh     # noqa: E402
 from repro.models import build_model, init_params      # noqa: E402
@@ -216,7 +217,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
     rec["params_total"] = total
     rec["params_active"] = active
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_context(mesh):
         t0 = time.time()
         lowered = _lower_shape(model, cfg, shape, mesh, fsdp, zero1)
         rec["lower_s"] = time.time() - t0

@@ -7,18 +7,18 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.sharding import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod stacks 2 pods (512 chips) on a
     leading pure-DP "pod" axis (DCN-connected)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-host debug mesh over however many devices exist."""
     n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, n), ("data", "model"))

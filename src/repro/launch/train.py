@@ -24,7 +24,8 @@ from repro.configs import get_arch
 from repro.data import TokenPipeline
 from repro.distributed.fault_tolerance import HeartbeatMonitor
 from repro.distributed.sharding import (
-    batch_shardings, opt_shardings, param_shardings_stacked)
+    batch_shardings, make_mesh, mesh_context, opt_shardings,
+    param_shardings_stacked)
 from repro.models import build_model, init_params, train_loss
 from repro.optimizer import (
     AdamW, ErrorFeedbackState, compress_with_error_feedback,
@@ -116,9 +117,7 @@ def main(argv=None) -> None:
                      checkpoint_dir=args.checkpoint_dir)
 
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh(
-        (1, n_dev), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, n_dev), ("data", "model"))
 
     pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
                          batch_size=args.batch)
@@ -126,7 +125,7 @@ def main(argv=None) -> None:
               for k, v in pipe.next_batch().items()}
     pipe.restore({"step": 0, "seed": pipe.seed, "rank": 0, "world": 1})
 
-    with jax.sharding.set_mesh(mesh):
+    with mesh_context(mesh):
         fn, sh = build_sharded_train(model, mesh, tc, sample)
         params = init_params(model, jax.random.PRNGKey(0))
         opt_state = sh["optd"].init(params)

@@ -19,6 +19,7 @@ rate jitter) so scheduling noise is reproducible under a seed.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List
 
 import numpy as np
@@ -51,7 +52,10 @@ class GPUModel:
     # ------------------------------------------------------------------
     def run(self, spec: BenchmarkSpec) -> Trace:
         cfg = self.config
-        rng = np.random.default_rng(cfg.seed ^ hash(spec.name) & 0xFFFF)
+        # crc32, not hash(): str hashing is salted per process, which would
+        # make traces (and every downstream golden fixture) irreproducible
+        rng = np.random.default_rng(
+            cfg.seed ^ (zlib.crc32(spec.name.encode()) & 0xFFFF))
         kernels = sorted({s.kernel for s in spec.streams})
         per_kernel: Dict[int, List[CTAStream]] = {k: [] for k in kernels}
         for s in spec.streams:

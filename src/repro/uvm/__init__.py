@@ -1,21 +1,50 @@
-"""UVM substrate: page-granular CPU-GPU unified-virtual-memory simulator.
+"""UVM substrate: page-granular CPU-GPU unified-virtual-memory simulation.
 
 Implements on-demand page migration with far-faults, a PCIe interconnect
 queue, the CUDA-driver tree-based neighborhood prefetcher (the UVMSmart
 baseline), delayed migration / zero-copy policies, LRU eviction under
 oversubscription, and the paper's evaluation metrics (page hit rate, PCIe
 traffic, prefetcher accuracy/coverage, Unity).
+
+Two equivalent replay engines
+-----------------------------
+* ``UVMSimulator`` — the reference per-access Python loop (simple, slow).
+* ``VectorizedUVMSimulator`` — the batched engine: NumPy-chunked replay that
+  skips runs of plain hits and only drops to scalar code on the
+  fault/late/prefetch/eviction event subsequence.  It is **bit-identical**
+  to the reference on every integer counter and float accumulator; the
+  guarantee is pinned by ``tests/test_uvm_golden.py`` against recorded
+  fixtures (regenerate after an intentional timing-model change with
+  ``PYTHONPATH=src python scripts/regen_uvm_golden.py``).
+* ``simulate(trace, prefetcher, config, engine=...)`` picks an engine
+  (``auto`` → vectorized with automatic legacy fallback).
+
+Batched sweeps
+--------------
+``repro.uvm.sweep`` runs (trace × prefetcher × config) grids in one call::
+
+    from repro.uvm.sweep import SweepCell, expand_grid, run_sweep
+    cells = expand_grid(["ATAX", "Pathfinder"], ["none", "tree", "oracle"],
+                        device_fracs=[None, 0.5])
+    rows = run_sweep(cells, out_dir="results/", workers=8)
+
+Traces are generated once and cached on disk; each completed cell is
+persisted under ``out_dir/cells/`` so an interrupted sweep resumes where it
+stopped; aggregate results are written as both JSON and CSV.  The CLI wraps
+the same API: ``PYTHONPATH=src python -m repro.uvm.sweep --help``.
 """
 from repro.uvm.config import UVMConfig
+from repro.uvm.engine import VectorizedUVMSimulator, simulate
+from repro.uvm.metrics import unity
 from repro.uvm.prefetchers import (
     NoPrefetcher, TreePrefetcher, LearnedPrefetcher, OraclePrefetcher,
     Prefetcher,
 )
 from repro.uvm.simulator import UVMSimulator, UVMStats
-from repro.uvm.metrics import unity
 
 __all__ = [
-    "UVMConfig", "UVMSimulator", "UVMStats", "unity",
+    "UVMConfig", "UVMSimulator", "UVMStats", "VectorizedUVMSimulator",
+    "simulate", "unity",
     "Prefetcher", "NoPrefetcher", "TreePrefetcher", "LearnedPrefetcher",
     "OraclePrefetcher",
 ]

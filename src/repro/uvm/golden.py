@@ -1,0 +1,135 @@
+"""Golden-equivalence matrix for the UVM engines.
+
+Defines the small, fully deterministic (trace × prefetcher × config) matrix
+used to pin the legacy :class:`~repro.uvm.simulator.UVMSimulator` against
+recorded fixtures, and to prove the vectorized engine reproduces it exactly.
+
+Fixtures live at ``tests/golden/uvm_golden.json``; regenerate after an
+*intentional* timing-model change with::
+
+    PYTHONPATH=src python scripts/regen_uvm_golden.py
+
+The matrix covers the paper's interesting regimes: ATAX (dominant-delta
+matrix sweeps), Pathfinder (DP row reuse), a BICG-style clustered-fault storm
+under MSHR pressure (the paper's Fig 11 serialization effect), and an
+oversubscribed cyclic sweep with LRU eviction churn — each against all five
+prefetchers (on-demand, block, tree, learned, oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Iterator, List, Tuple
+
+import numpy as np
+
+from repro.traces.trace import Trace, make_records
+from repro.uvm.config import UVMConfig
+from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
+                                   NoPrefetcher, OraclePrefetcher, Prefetcher,
+                                   TreePrefetcher)
+from repro.uvm.simulator import UVMStats
+
+#: integer counters that must match the legacy engine exactly
+INT_FIELDS = ("n_accesses", "n_instructions", "hits", "late", "faults",
+              "prefetch_issued", "prefetch_used", "pages_migrated",
+              "pages_evicted")
+#: float accumulators (bit-equal in practice; compared to tight rel. tol.)
+FLOAT_FIELDS = ("cycles", "pcie_bytes", "zero_copy_bytes")
+
+PREFETCHER_NAMES = ("none", "block", "tree", "learned", "oracle")
+
+#: prediction distance / inference overhead of the synthetic learned model
+LEARNED_DISTANCE = 32
+LEARNED_OVERHEAD_US = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GoldenCase:
+    name: str
+    trace: Trace
+    config: UVMConfig
+
+
+def _mk_trace(name: str, pages: np.ndarray, inst_per_access: int = 100) -> Trace:
+    recs = make_records(len(pages))
+    recs["page"] = pages
+    recs["sm"] = np.arange(len(pages)) % 4
+    return Trace(name, recs, {}, {}, len(pages) * inst_per_access)
+
+
+@functools.lru_cache(maxsize=1)
+def golden_cases() -> Tuple[GoldenCase, ...]:
+    from repro.traces import GPUModel, generate_benchmark
+
+    atax = GPUModel().run(generate_benchmark("ATAX", scale=0.25))
+    pathfinder = GPUModel().run(generate_benchmark("Pathfinder", scale=0.25))
+
+    # BICG-style clustered faults: bursts of new pages a large stride apart,
+    # replayed under a tight MSHR so the fault storms serialize (Fig 11).
+    bicg = np.concatenate([np.arange(k, k + 50, dtype=np.int64)
+                           for k in range(0, 12000, 200)])
+
+    # Oversubscribed cyclic sweep: the working set is ~1.7x device memory,
+    # so LRU eviction churns continuously (including in-flight victims).
+    oversub = np.tile(np.arange(2500, dtype=np.int64), 6)
+
+    return (
+        GoldenCase("atax", atax, UVMConfig()),
+        GoldenCase("pathfinder", pathfinder, UVMConfig()),
+        GoldenCase("bicg-cluster", _mk_trace("bicg-cluster", bicg),
+                   UVMConfig(mshr_entries=16)),
+        GoldenCase("oversub", _mk_trace("oversub", oversub),
+                   UVMConfig(device_pages=1500)),
+    )
+
+
+def perfect_preds(trace: Trace, distance: int = LEARNED_DISTANCE) -> np.ndarray:
+    """Deterministic stand-in for the trained model: perfect distance-k
+    predictions (exercises the LearnedPrefetcher pipeline without jax)."""
+    pages = np.asarray(trace.pages, dtype=np.int64)
+    preds = np.full(len(pages), -1, dtype=np.int64)
+    if len(pages) > distance:
+        preds[:-distance] = pages[distance:]
+    return preds
+
+
+def make_prefetcher(name: str, trace: Trace, config: UVMConfig) -> Prefetcher:
+    if name == "none":
+        return NoPrefetcher()
+    if name == "block":
+        return BlockPrefetcher()
+    if name == "tree":
+        return TreePrefetcher()
+    if name == "learned":
+        return LearnedPrefetcher(
+            perfect_preds(trace),
+            extra_latency_cycles=LEARNED_OVERHEAD_US * config.cycles_per_us)
+    if name == "oracle":
+        return OraclePrefetcher(np.asarray(trace.pages))
+    raise ValueError(f"unknown prefetcher {name!r}")
+
+
+def golden_cell_ids() -> List[str]:
+    return [f"{case.name}/{pf}" for case in golden_cases()
+            for pf in PREFETCHER_NAMES]
+
+
+def golden_cell(cell_id: str) -> Tuple[Trace, UVMConfig, Callable[[], Prefetcher]]:
+    case_name, pf_name = cell_id.split("/")
+    case = next(c for c in golden_cases() if c.name == case_name)
+    return (case.trace, case.config,
+            lambda: make_prefetcher(pf_name, case.trace, case.config))
+
+
+def iter_golden_cells() -> Iterator[Tuple[str, Trace, UVMConfig,
+                                          Callable[[], Prefetcher]]]:
+    for cell_id in golden_cell_ids():
+        trace, config, factory = golden_cell(cell_id)
+        yield cell_id, trace, config, factory
+
+
+def stats_to_dict(stats: UVMStats) -> Dict:
+    out = {f: int(getattr(stats, f)) for f in INT_FIELDS}
+    out.update({f: float(getattr(stats, f)) for f in FLOAT_FIELDS})
+    return out

@@ -1,0 +1,439 @@
+"""Batched UVM sweep orchestrator.
+
+Runs (trace × prefetcher × config) grids through the vectorized replay
+engine: cached trace generation, optional process fan-out, structured
+JSON/CSV results, and resumability (each completed cell is persisted, so an
+interrupted sweep picks up where it stopped).
+
+Programmatic use::
+
+    from repro.uvm.sweep import expand_grid, run_sweep
+    cells = expand_grid(["ATAX", "BICG"], ["none", "tree", "oracle"],
+                        device_fracs=[None, 0.5])
+    rows = run_sweep(cells, out_dir="results/", workers=8)
+
+CLI::
+
+    PYTHONPATH=src python -m repro.uvm.sweep \
+        --benches ATAX,BICG,Pathfinder,Hotspot \
+        --prefetchers none,tree,learned,oracle \
+        --out results/ --workers 8
+
+The ``learned`` prefetcher trains the paper's predictor service for its
+predictions (jax; expensive).  A prebuilt predictions array can be supplied
+per bench via :func:`simulate_cell`'s ``prefetcher`` override, which is what
+``benchmarks/common.py`` does to share one trained service across cells.
+
+Workers are deterministic: a cell's row is a pure function of the cell, so
+serial and parallel sweeps produce identical results (modulo the ``seconds``
+timing column).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import dataclasses
+import hashlib
+import json
+import multiprocessing
+import os
+import sys
+import time
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.traces.trace import ACCESS_DTYPE, Trace
+from repro.uvm.config import UVMConfig
+from repro.uvm.engine import simulate
+from repro.uvm.prefetchers import (BlockPrefetcher, NoPrefetcher,
+                                   OraclePrefetcher, Prefetcher,
+                                   TreePrefetcher)
+
+PREFETCHERS = ("none", "block", "tree", "learned", "oracle")
+
+#: bump on any intentional change to the timing model, trace generators, or
+#: row schema — invalidates persisted sweep cells and cached traces so a
+#: resumed sweep never mixes pre- and post-change numbers
+SWEEP_VERSION = 1
+
+#: columns of the structured results, in CSV order
+ROW_FIELDS = [
+    "bench", "prefetcher", "scale", "seed", "window", "prediction_us",
+    "device_pages", "device_frac", "engine", "n_accesses", "n_instructions",
+    "cycles", "ipc", "hits", "late", "faults", "hit_rate", "prefetch_issued",
+    "prefetch_used", "accuracy", "coverage", "unity", "pages_migrated",
+    "pages_evicted", "pcie_bytes", "seconds",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One point of a sweep grid (hashable, JSON-serializable)."""
+
+    bench: str
+    prefetcher: str
+    scale: float = 1.0
+    seed: int = 0
+    window: Optional[float] = 0.6       # leading trace fraction (paper eval)
+    prediction_us: float = 1.0          # learned-model inference overhead
+    device_pages: Optional[int] = None  # absolute capacity, or ...
+    device_frac: Optional[float] = None  # ... fraction of the working set
+    engine: str = "auto"
+    service_steps: int = 150            # learned-predictor training steps
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def key(self) -> str:
+        blob = json.dumps({"_v": SWEEP_VERSION, **self.to_dict()},
+                          sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
+                scales: Sequence[float] = (1.0,),
+                seeds: Sequence[int] = (0,),
+                windows: Sequence[Optional[float]] = (0.6,),
+                prediction_us: Sequence[float] = (1.0,),
+                device_fracs: Sequence[Optional[float]] = (None,),
+                engine: str = "auto",
+                service_steps: int = 150) -> List[SweepCell]:
+    """Cartesian product of the sweep axes, in deterministic order."""
+    cells = []
+    for bench in benches:
+        for pf in prefetchers:
+            for scale in scales:
+                for seed in seeds:
+                    for window in windows:
+                        for us in prediction_us:
+                            for frac in device_fracs:
+                                cells.append(SweepCell(
+                                    bench=bench, prefetcher=pf, scale=scale,
+                                    seed=seed, window=window,
+                                    prediction_us=us, device_frac=frac,
+                                    engine=engine,
+                                    service_steps=service_steps))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# cached trace generation
+# ---------------------------------------------------------------------------
+
+def _trace_cache_path(cache_dir: str, bench: str, scale: float,
+                      seed: int) -> str:
+    tag = hashlib.sha256(
+        json.dumps([SWEEP_VERSION, bench, scale, seed]).encode()
+    ).hexdigest()[:16]
+    return os.path.join(cache_dir, f"trace_{bench}_{tag}.npz")
+
+
+def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
+               window: Optional[float] = 0.6,
+               cache_dir: Optional[str] = None) -> Trace:
+    """Generate (or load from the npz disk cache) one benchmark trace and
+    cut the leading evaluation window."""
+    trace = None
+    path = None
+    if cache_dir:
+        path = _trace_cache_path(cache_dir, bench, scale, seed)
+        if os.path.exists(path):
+            with np.load(path, allow_pickle=False) as z:
+                meta = json.loads(str(z["meta"]))
+                trace = Trace(
+                    name=meta["name"],
+                    accesses=z["accesses"].astype(ACCESS_DTYPE, copy=False),
+                    array_bases=meta["array_bases"],
+                    array_pages=meta["array_pages"],
+                    n_instructions=meta["n_instructions"],
+                    meta=meta.get("meta", {}),
+                )
+    if trace is None:
+        from repro.traces import GPUModel, generate_benchmark
+        from repro.traces.gpu_model import GPUModelConfig
+        spec = generate_benchmark(bench, scale=scale, seed=seed)
+        trace = GPUModel(GPUModelConfig(seed=seed)).run(spec)
+        if path:
+            os.makedirs(cache_dir, exist_ok=True)
+            meta = json.dumps({
+                "name": trace.name,
+                "array_bases": trace.array_bases,
+                "array_pages": trace.array_pages,
+                "n_instructions": trace.n_instructions,
+                "meta": trace.meta,
+            })
+            tmp = path + f".{os.getpid()}.tmp.npz"
+            np.savez(tmp, accesses=trace.accesses, meta=np.array(meta))
+            os.replace(tmp, path)
+    if window is not None:
+        trace, _ = trace.split(window)
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# per-cell simulation
+# ---------------------------------------------------------------------------
+
+def make_prefetcher(cell: SweepCell, trace: Trace,
+                    config: UVMConfig) -> Prefetcher:
+    if cell.prefetcher == "none":
+        return NoPrefetcher()
+    if cell.prefetcher == "block":
+        return BlockPrefetcher()
+    if cell.prefetcher == "tree":
+        return TreePrefetcher()
+    if cell.prefetcher == "oracle":
+        return OraclePrefetcher(np.asarray(trace.pages))
+    if cell.prefetcher == "learned":
+        # trains the paper's predictor service on this trace (jax; heavy)
+        from repro.core import PredictorService
+        from repro.uvm.prefetchers import LearnedPrefetcher
+        svc = PredictorService(steps=cell.service_steps)
+        svc.fit(trace)
+        preds = svc.predict_trace()
+        return LearnedPrefetcher(
+            preds,
+            extra_latency_cycles=cell.prediction_us * config.cycles_per_us)
+    raise ValueError(f"unknown prefetcher {cell.prefetcher!r}")
+
+
+def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
+                  trace: Optional[Trace] = None,
+                  prefetcher: Optional[Prefetcher] = None,
+                  record_timeline: bool = False) -> Dict:
+    """Run one cell and return its structured row.  ``trace`` /
+    ``prefetcher`` overrides let callers inject pre-built objects (e.g. a
+    LearnedPrefetcher sharing one trained service across cells)."""
+    t0 = time.time()
+    if trace is None:
+        trace = load_trace(cell.bench, cell.scale, cell.seed, cell.window,
+                           cache_dir=cache_dir)
+    device_pages = cell.device_pages
+    if device_pages is None and cell.device_frac is not None:
+        device_pages = int(trace.working_set_pages * cell.device_frac)
+    config = UVMConfig(prediction_overhead_us=cell.prediction_us,
+                       device_pages=device_pages)
+    if prefetcher is None:
+        prefetcher = make_prefetcher(cell, trace, config)
+    stats = simulate(trace, prefetcher, config, engine=cell.engine,
+                     record_timeline=record_timeline)
+    row = cell.to_dict()
+    row.pop("service_steps", None)
+    row.update(
+        device_pages=device_pages,
+        n_accesses=stats.n_accesses,
+        n_instructions=stats.n_instructions,
+        cycles=stats.cycles,
+        ipc=stats.ipc,
+        hits=stats.hits,
+        late=stats.late,
+        faults=stats.faults,
+        hit_rate=stats.hit_rate,
+        prefetch_issued=stats.prefetch_issued,
+        prefetch_used=stats.prefetch_used,
+        accuracy=stats.accuracy,
+        coverage=stats.coverage,
+        unity=stats.unity,
+        pages_migrated=stats.pages_migrated,
+        pages_evicted=stats.pages_evicted,
+        pcie_bytes=stats.pcie_bytes,
+        seconds=time.time() - t0,
+    )
+    if record_timeline and stats.timeline is not None:
+        row["timeline"] = stats.timeline.tolist()
+    return row
+
+
+def _worker(args) -> Dict:
+    cell, cache_dir = args
+    return simulate_cell(cell, cache_dir=cache_dir)
+
+
+def _init_worker(path: List[str]) -> None:
+    """spawn-context initializer: children need the parent's sys.path (the
+    repo uses a src layout without installation)."""
+    for p in reversed(path):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+
+# ---------------------------------------------------------------------------
+# orchestration: fan-out, persistence, resume
+# ---------------------------------------------------------------------------
+
+def _cell_path(out_dir: str, cell: SweepCell) -> str:
+    return os.path.join(out_dir, "cells", f"{cell.key()}.json")
+
+
+def run_sweep(cells: Sequence[SweepCell], *, out_dir: Optional[str] = None,
+              workers: int = 1, resume: bool = True,
+              cache_dir: Optional[str] = None,
+              verbose: bool = False,
+              write_aggregate: bool = True) -> List[Dict]:
+    """Run a grid of cells; returns rows in the order of ``cells``.
+
+    With ``out_dir``, each completed cell is persisted under
+    ``out_dir/cells/<key>.json`` (and skipped on resume), and aggregate
+    ``results.json`` / ``results.csv`` are (re)written at the end.  Callers
+    sharing one ``out_dir`` across several grids should pass
+    ``write_aggregate=False`` so the aggregate files never reflect a
+    partial grid.
+    """
+    if cache_dir is None and out_dir is not None:
+        cache_dir = os.path.join(out_dir, "trace_cache")
+    rows: Dict[int, Dict] = {}
+    pending: List[int] = []
+    for i, cell in enumerate(cells):
+        if out_dir and resume:
+            path = _cell_path(out_dir, cell)
+            if os.path.exists(path):
+                with open(path) as f:
+                    rows[i] = json.load(f)
+                continue
+        pending.append(i)
+
+    def _record(i: int, row: Dict) -> None:
+        rows[i] = row
+        if out_dir:
+            path = _cell_path(out_dir, cells[i])
+            os.makedirs(os.path.dirname(path), exist_ok=True)
+            tmp = path + f".tmp{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(row, f, sort_keys=True)
+            os.replace(tmp, path)
+        if verbose:
+            print(f"[sweep] {row['bench']}/{row['prefetcher']}"
+                  f" frac={row.get('device_frac')}"
+                  f" hit={row['hit_rate']:.3f} ipc={row['ipc']:.2f}"
+                  f" ({row['seconds']:.2f}s)", flush=True)
+
+    if pending and workers > 1:
+        # fork is the cheap default, but forking a jax/XLA-initialized
+        # parent (e.g. benchmarks.run after training suites) inherits its
+        # thread/mutex state and can deadlock — use spawn in that case,
+        # unless __main__ is not re-importable (stdin/-c scripts), which
+        # spawn cannot handle.  Cells are pure functions of their spec, so
+        # results match the serial path either way.
+        main_file = getattr(sys.modules.get("__main__"), "__file__", None)
+        spawn_ok = main_file is None or os.path.exists(main_file)
+        method = "spawn" if ("jax" in sys.modules and spawn_ok) else "fork"
+        try:
+            ctx = multiprocessing.get_context(method)
+        except ValueError:  # pragma: no cover - non-POSIX
+            ctx = multiprocessing.get_context("spawn")
+        with ctx.Pool(min(workers, len(pending)), initializer=_init_worker,
+                      initargs=(list(sys.path),)) as pool:
+            args = [(cells[i], cache_dir) for i in pending]
+            for i, row in zip(pending, pool.imap(_worker, args)):
+                _record(i, row)
+    else:
+        for i in pending:
+            _record(i, simulate_cell(cells[i], cache_dir=cache_dir))
+
+    out = [rows[i] for i in range(len(cells))]
+    if out_dir and write_aggregate:
+        write_results(out, out_dir)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# structured results
+# ---------------------------------------------------------------------------
+
+def write_results(rows: List[Dict], out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "results.json"), "w") as f:
+        json.dump({"rows": rows}, f, indent=1, sort_keys=True)
+        f.write("\n")
+    with open(os.path.join(out_dir, "results.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=ROW_FIELDS, extrasaction="ignore")
+        w.writeheader()
+        for row in rows:
+            w.writerow(row)
+
+
+def read_results(out_dir: str) -> List[Dict]:
+    with open(os.path.join(out_dir, "results.json")) as f:
+        return json.load(f)["rows"]
+
+
+def read_results_csv(path: str) -> List[Dict]:
+    """CSV round-trip: numeric columns come back as numbers."""
+    out = []
+    with open(path, newline="") as f:
+        for row in csv.DictReader(f):
+            parsed: Dict = {}
+            for k, v in row.items():
+                if v == "" or v == "None":
+                    parsed[k] = None
+                    continue
+                try:
+                    fv = float(v)
+                    parsed[k] = int(fv) if fv.is_integer() and "." not in v \
+                        else fv
+                except ValueError:
+                    parsed[k] = v
+            out.append(parsed)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Batched UVM sweep: (trace x prefetcher x config) grid")
+    ap.add_argument("--benches", default="ATAX,BICG,Pathfinder,Hotspot")
+    ap.add_argument("--prefetchers", default="none,tree,oracle",
+                    help=f"comma list from {','.join(PREFETCHERS)}")
+    ap.add_argument("--scales", default="1.0")
+    ap.add_argument("--windows", default="0.6")
+    ap.add_argument("--prediction-us", default="1.0")
+    ap.add_argument("--device-fracs", default="",
+                    help="e.g. '0.5,0.75' (empty = no oversubscription)")
+    ap.add_argument("--engine", default="auto",
+                    choices=["auto", "vectorized", "legacy"])
+    ap.add_argument("--out", default=None, help="results directory")
+    ap.add_argument("--workers", type=int, default=1)
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.traces.generators import BENCHMARKS
+    benches = args.benches.split(",")
+    pfs = args.prefetchers.split(",")
+    bad = [p for p in pfs if p not in PREFETCHERS]
+    if bad:
+        ap.error(f"unknown prefetcher(s) {','.join(bad)}; "
+                 f"choose from {','.join(PREFETCHERS)}")
+    bad = [b for b in benches if b not in BENCHMARKS]
+    if bad:
+        ap.error(f"unknown benchmark(s) {','.join(bad)}; "
+                 f"choose from {','.join(sorted(BENCHMARKS))}")
+    fracs: List[Optional[float]] = [None]
+    if args.device_fracs:
+        fracs += [float(x) for x in args.device_fracs.split(",")]
+    cells = expand_grid(
+        benches, pfs,
+        scales=[float(x) for x in args.scales.split(",")],
+        windows=[None if x == "full" else float(x)
+                 for x in args.windows.split(",")],
+        prediction_us=[float(x) for x in args.prediction_us.split(",")],
+        device_fracs=fracs, engine=args.engine)
+    t0 = time.time()
+    rows = run_sweep(cells, out_dir=args.out, workers=args.workers,
+                     resume=not args.no_resume, verbose=True)
+    dt = time.time() - t0
+    print(f"\n{len(rows)} cells in {dt:.1f}s "
+          f"({sum(r['n_accesses'] for r in rows) / max(dt, 1e-9) / 1e6:.2f}"
+          " M accesses/s aggregate)")
+    cols = ["bench", "prefetcher", "device_frac", "hit_rate", "ipc", "unity"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4f}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+
+
+if __name__ == "__main__":
+    main()

@@ -58,8 +58,8 @@ def test_elastic_restore_with_shardings(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     p = _params()
     mgr.save(7, p)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.distributed.sharding import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = jax.tree.map(
         lambda x: jax.sharding.NamedSharding(
             mesh, jax.sharding.PartitionSpec()), p)

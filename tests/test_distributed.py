@@ -3,6 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property-based sharding tests skipped")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
@@ -22,8 +26,8 @@ def _mesh2d(d=2, m=2):
     n = d * m
     if len(jax.devices()) < n:
         pytest.skip("not enough devices")
-    return jax.make_mesh((d, m), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.distributed.sharding import make_mesh
+    return make_mesh((d, m), ("data", "model"))
 
 
 def test_param_specs_valid_all_archs():

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property-based quantize tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quantize import (QMAX, QMIN, dequantize_int4, fake_quant,

@@ -1,0 +1,131 @@
+"""Sweep orchestrator: grid expansion, worker determinism, resume, round-trip."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.uvm.sweep import (ROW_FIELDS, SweepCell, expand_grid, load_trace,
+                             read_results, read_results_csv, run_sweep,
+                             simulate_cell, write_results)
+
+BENCHES = ["ATAX", "Pathfinder"]
+PREFETCHERS = ["none", "tree"]
+
+
+def _small_cells(**kw):
+    return expand_grid(BENCHES, PREFETCHERS, scales=[0.25], **kw)
+
+
+def _strip_timing(rows):
+    return [{k: v for k, v in r.items() if k != "seconds"} for r in rows]
+
+
+def test_grid_expansion_axes():
+    cells = expand_grid(BENCHES, PREFETCHERS, scales=[0.25, 0.5],
+                        device_fracs=[None, 0.5], prediction_us=[1.0, 10.0])
+    assert len(cells) == 2 * 2 * 2 * 2 * 2
+    # deterministic order and distinct cache keys
+    assert [c.key() for c in cells] == [c.key() for c in cells]
+    assert len({c.key() for c in cells}) == len(cells)
+    # every axis value is represented
+    assert {c.bench for c in cells} == set(BENCHES)
+    assert {c.device_frac for c in cells} == {None, 0.5}
+
+
+def test_trace_cache_roundtrip(tmp_path):
+    cache = str(tmp_path / "cache")
+    t1 = load_trace("ATAX", 0.25, 0, 0.6, cache_dir=cache)
+    assert any(f.startswith("trace_") for f in os.listdir(cache))
+    t2 = load_trace("ATAX", 0.25, 0, 0.6, cache_dir=cache)  # from disk
+    assert t1.name == t2.name
+    assert t1.n_instructions == t2.n_instructions
+    np.testing.assert_array_equal(t1.accesses, t2.accesses)
+    assert t1.array_pages == t2.array_pages
+
+
+def test_simulate_cell_row_shape():
+    row = simulate_cell(SweepCell("ATAX", "tree", scale=0.25))
+    missing = [c for c in ROW_FIELDS if c not in row]
+    assert not missing, missing
+    assert row["hits"] + row["late"] + row["faults"] == row["n_accesses"]
+    assert 0.0 <= row["hit_rate"] <= 1.0
+
+
+def test_device_frac_resolves_capacity():
+    row = simulate_cell(SweepCell("ATAX", "none", scale=0.25,
+                                  device_frac=0.5))
+    assert row["device_pages"] is not None and row["device_pages"] > 0
+    assert row["pages_evicted"] > 0
+
+
+def test_serial_and_parallel_match(tmp_path):
+    cells = _small_cells()
+    serial = run_sweep(cells, out_dir=str(tmp_path / "serial"), workers=1)
+    parallel = run_sweep(cells, out_dir=str(tmp_path / "parallel"), workers=2)
+    assert _strip_timing(serial) == _strip_timing(parallel)
+
+
+def test_resume_from_partial_results(tmp_path):
+    out = str(tmp_path / "out")
+    cells = _small_cells()
+    full = run_sweep(cells, out_dir=out, workers=1)
+
+    # wipe half the cell files; poison the survivors so we can prove the
+    # resumed sweep loaded them instead of recomputing
+    cell_dir = os.path.join(out, "cells")
+    kept = 0
+    for i, cell in enumerate(cells):
+        path = os.path.join(cell_dir, f"{cell.key()}.json")
+        if i % 2 == 0:
+            os.remove(path)
+        else:
+            with open(path) as f:
+                row = json.load(f)
+            row["seconds"] = 12345.0
+            with open(path, "w") as f:
+                json.dump(row, f)
+            kept += 1
+    assert kept > 0
+
+    resumed = run_sweep(cells, out_dir=out, workers=1)
+    assert _strip_timing(resumed) == _strip_timing(full)
+    marks = [r["seconds"] for r in resumed if r["seconds"] == 12345.0]
+    assert len(marks) == kept          # loaded, not recomputed
+
+    # resume=False recomputes everything
+    fresh = run_sweep(cells, out_dir=out, workers=1, resume=False)
+    assert not any(r["seconds"] == 12345.0 for r in fresh)
+
+
+def test_results_json_csv_roundtrip(tmp_path):
+    out = str(tmp_path / "out")
+    cells = _small_cells(device_fracs=[None, 0.75])
+    rows = run_sweep(cells, out_dir=out, workers=1)
+
+    back = read_results(out)
+    assert _strip_timing(back) == _strip_timing(rows)
+
+    csv_rows = read_results_csv(os.path.join(out, "results.csv"))
+    assert len(csv_rows) == len(rows)
+    for got, want in zip(csv_rows, rows):
+        assert got["bench"] == want["bench"]
+        assert got["prefetcher"] == want["prefetcher"]
+        assert got["n_accesses"] == want["n_accesses"]
+        assert got["faults"] == want["faults"]
+        assert got["device_frac"] == want["device_frac"]
+        assert got["hit_rate"] == pytest.approx(want["hit_rate"], rel=1e-9)
+        assert got["cycles"] == pytest.approx(want["cycles"], rel=1e-9)
+
+    # write_results is idempotent over loaded rows
+    write_results(back, out)
+    assert _strip_timing(read_results(out)) == _strip_timing(rows)
+
+
+def test_engine_choice_is_equivalent():
+    base = dict(bench="ATAX", prefetcher="tree", scale=0.25)
+    vec = simulate_cell(SweepCell(engine="vectorized", **base))
+    legacy = simulate_cell(SweepCell(engine="legacy", **base))
+    for f in ("hits", "late", "faults", "pages_migrated", "prefetch_issued"):
+        assert vec[f] == legacy[f]
+    assert vec["cycles"] == pytest.approx(legacy["cycles"], rel=1e-6)

@@ -1,6 +1,10 @@
 """UVM simulator invariants + prefetcher behaviour."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property-based UVM tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.traces.trace import BASIC_BLOCK_PAGES, Trace, make_records

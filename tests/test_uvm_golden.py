@@ -1,0 +1,196 @@
+"""Golden-equivalence harness for the UVM engines.
+
+Two guarantees, pinned by recorded fixtures (tests/golden/uvm_golden.json):
+
+1. the legacy per-access ``UVMSimulator`` still produces the recorded stats
+   (no unintentional timing-model drift), and
+2. the vectorized ``VectorizedUVMSimulator`` reproduces the legacy engine
+   *exactly* on every integer counter and to 1e-6 relative on the float
+   accumulators (bit-equal in practice) for every (trace × prefetcher) cell.
+
+Regenerate fixtures after an intentional model change with
+``PYTHONPATH=src python scripts/regen_uvm_golden.py``.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.traces.trace import Trace, make_records
+from repro.uvm import UVMConfig, UVMSimulator, VectorizedUVMSimulator
+from repro.uvm.engine import MAX_SPAN_PAGES
+from repro.uvm.golden import (FLOAT_FIELDS, INT_FIELDS, golden_cell,
+                              golden_cell_ids, stats_to_dict)
+from repro.uvm.prefetchers import Prefetcher, TreePrefetcher
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "golden", "uvm_golden.json")
+
+if not os.path.exists(FIXTURE):
+    pytest.fail(
+        f"golden fixture missing: {FIXTURE}; regenerate with "
+        "PYTHONPATH=src python scripts/regen_uvm_golden.py",
+        pytrace=False)
+with open(FIXTURE) as _f:
+    GOLDEN = json.load(_f)["cells"]
+
+_legacy_cache = {}
+
+
+def _legacy_stats(cell_id):
+    """Legacy run per cell, shared between the fixture- and the
+    equivalence-assertions (the reference engine is the slow one)."""
+    if cell_id not in _legacy_cache:
+        trace, config, factory = golden_cell(cell_id)
+        _legacy_cache[cell_id] = UVMSimulator(config).run(trace, factory())
+    return _legacy_cache[cell_id]
+
+
+def _assert_stats_match(got, want, *, rel, context):
+    for f in INT_FIELDS:
+        assert got[f] == want[f], f"{context}: {f} {got[f]} != {want[f]}"
+    for f in FLOAT_FIELDS:
+        assert got[f] == pytest.approx(want[f], rel=rel, abs=1e-9), (
+            f"{context}: {f} {got[f]} != {want[f]}")
+
+
+@pytest.mark.parametrize("cell_id", golden_cell_ids())
+def test_legacy_matches_fixture(cell_id):
+    assert cell_id in GOLDEN, (
+        f"no fixture for {cell_id}; regenerate with "
+        "PYTHONPATH=src python scripts/regen_uvm_golden.py")
+    got = stats_to_dict(_legacy_stats(cell_id))
+    _assert_stats_match(got, GOLDEN[cell_id], rel=1e-9,
+                        context=f"legacy vs fixture [{cell_id}]")
+
+
+@pytest.mark.parametrize("cell_id", golden_cell_ids())
+def test_vectorized_matches_legacy(cell_id):
+    trace, config, factory = golden_cell(cell_id)
+    legacy = stats_to_dict(_legacy_stats(cell_id))
+    vec = stats_to_dict(
+        VectorizedUVMSimulator(config, strict_checks=True).run(
+            trace, factory()))
+    _assert_stats_match(vec, legacy, rel=1e-6,
+                        context=f"vectorized vs legacy [{cell_id}]")
+
+
+def test_fixture_has_no_stale_cells():
+    assert set(GOLDEN) == set(golden_cell_ids())
+
+
+def test_timeline_equivalence():
+    """The optional (cycle, bytes) transfer timeline matches event-for-event."""
+    cell_id = "bicg-cluster/tree"
+    trace, config, factory = golden_cell(cell_id)
+    t_legacy = UVMSimulator(config, record_timeline=True).run(
+        trace, factory()).timeline
+    t_vec = VectorizedUVMSimulator(config, record_timeline=True).run(
+        trace, factory()).timeline
+    assert t_legacy.shape == t_vec.shape
+    np.testing.assert_allclose(t_vec, t_legacy, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# engine fallbacks
+# ---------------------------------------------------------------------------
+
+def _mk_trace(pages, name="synth"):
+    pages = np.asarray(pages, dtype=np.int64)
+    recs = make_records(len(pages))
+    recs["page"] = pages
+    return Trace(name, recs, {}, {}, len(pages) * 100)
+
+
+class _EveryOtherPrefetcher(Prefetcher):
+    """Unknown subclass: must route to the legacy engine (it may emit pages
+    outside the vectorized engine's dense page span)."""
+
+    name = "every-other"
+
+    def on_fault(self, index, page, resident):
+        return [page + 1] if (page + 1) not in resident else []
+
+    def on_access(self, index, page, resident, clock=0.0):
+        q = page + 2
+        if index % 2 == 0 and q not in resident:
+            return [q]
+        return []
+
+
+def test_generic_prefetcher_fallback_is_exact():
+    tr = _mk_trace(np.tile(np.arange(200), 4))
+    s1 = stats_to_dict(UVMSimulator().run(tr, _EveryOtherPrefetcher()))
+    s2 = stats_to_dict(
+        VectorizedUVMSimulator(strict_checks=True).run(
+            tr, _EveryOtherPrefetcher()))
+    _assert_stats_match(s2, s1, rel=1e-9, context="generic fallback")
+
+
+def test_huge_span_falls_back_to_legacy():
+    pages = np.array([0, MAX_SPAN_PAGES * 2, 0, 7], dtype=np.int64)
+    tr = _mk_trace(pages)
+    s1 = stats_to_dict(UVMSimulator().run(tr, TreePrefetcher()))
+    s2 = stats_to_dict(VectorizedUVMSimulator().run(tr, TreePrefetcher()))
+    _assert_stats_match(s2, s1, rel=1e-9, context="span fallback")
+
+
+def test_empty_trace():
+    tr = _mk_trace(np.empty(0, dtype=np.int64))
+    st = VectorizedUVMSimulator().run(tr, TreePrefetcher())
+    assert st.n_accesses == 0 and st.cycles == 0.0 and st.faults == 0
+
+
+# ---------------------------------------------------------------------------
+# invariants (strict_checks also asserts monotone clock and
+# never-evict-in-flight inside the engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell_id", golden_cell_ids())
+def test_invariants(cell_id):
+    trace, config, factory = golden_cell(cell_id)
+    st = VectorizedUVMSimulator(config, strict_checks=True).run(
+        trace, factory())
+    assert st.hits + st.late + st.faults == st.n_accesses
+    assert 0.0 <= st.accuracy <= 1.0
+    assert 0.0 <= st.coverage <= 1.0
+    assert 0.0 <= st.hit_rate <= 1.0
+    assert 0.0 <= st.unity <= 1.0
+    assert st.prefetch_used <= st.prefetch_issued
+    assert st.pages_migrated >= st.faults
+    assert st.cycles >= 0.0
+    if config.device_pages is not None:
+        assert st.pages_migrated - st.pages_evicted >= 0
+
+
+# ---------------------------------------------------------------------------
+# property-based equivalence (skipped when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st_
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - degraded environment
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st_.lists(st_.integers(0, 600), min_size=20, max_size=300),
+           st_.sampled_from(["none", "block", "tree", "learned", "oracle"]),
+           st_.sampled_from([None, 48, 200]))
+    def test_property_equivalence(pages, pf_name, cap):
+        from repro.uvm.golden import make_prefetcher
+
+        tr = _mk_trace(np.asarray(pages, dtype=np.int64))
+        config = UVMConfig(device_pages=cap, mshr_entries=16)
+        s1 = stats_to_dict(
+            UVMSimulator(config).run(
+                tr, make_prefetcher(pf_name, tr, config)))
+        s2 = stats_to_dict(
+            VectorizedUVMSimulator(config, strict_checks=True).run(
+                tr, make_prefetcher(pf_name, tr, config)))
+        _assert_stats_match(s2, s1, rel=1e-9,
+                            context=f"property [{pf_name} cap={cap}]")

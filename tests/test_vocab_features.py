@@ -1,5 +1,10 @@
 """Vocabulary + feature-extraction properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; property-based vocab tests skipped")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DeltaVocab, cluster_trace, delta_convergence,
