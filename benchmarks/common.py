@@ -12,8 +12,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core import (
-    DeltaVocab, PredictorConfig, PredictorService, build_dataset,
-    cluster_trace, delta_convergence, revised_config, train_predictor,
+    DeltaVocab, PredictorConfig, build_dataset, cluster_trace,
+    delta_convergence, revised_config, train_predictor,
 )
 from repro.traces import GPUModel, generate_benchmark
 from repro.uvm import LearnedPrefetcher, UVMConfig
@@ -21,9 +21,20 @@ from repro.uvm.sweep import (SWEEP_VERSION, SweepCell, run_sweep,
                              simulate_cell)
 
 CACHE_DIR = os.path.join(os.path.dirname(__file__), "cache")
+# one trace/prediction cache for every suite: sweep workers and in-process
+# uvm_cell paths hit the same content-addressed prediction arrays, so a
+# benchmark's predictor trains exactly once per (trace, model) pair across
+# the whole `benchmarks.run` session (and across sessions)
+SWEEP_DIR = os.path.join(CACHE_DIR, "sweep")
+TRACE_CACHE_DIR = os.path.join(SWEEP_DIR, "trace_cache")
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
 
-# process fan-out for non-learned sweep cells (run.py --workers overrides)
+# process fan-out for every sweep cell, learned included: each worker
+# imports jax and either trains a benchmark's predictor or reuses it from
+# the shared prediction cache.  Two in-flight cells sharing one cache key
+# make the later worker wait on the training lock rather than retrain;
+# grids order variants of the same benchmark far apart so that rarely
+# costs a busy slot.  (run.py --workers overrides.)
 SWEEP_WORKERS = int(os.environ.get("REPRO_SWEEP_WORKERS", "1"))
 
 ALL_BENCHMARKS = ["AddVectors", "ATAX", "Backprop", "BICG", "Hotspot", "MVT",
@@ -136,11 +147,15 @@ def train_cell(bench: str, *, cluster: str = "sm", distance: int = 1,
 
 @functools.lru_cache(maxsize=32)
 def _service_predictions(bench: str, steps: int):
+    """Predictions for one benchmark's eval trace via the content-addressed
+    prediction cache — trains at most once per (trace, model) pair, shared
+    with the sweep workers through ``TRACE_CACHE_DIR``."""
+    from repro.uvm import predcache
     trace = get_eval_trace(bench)
-    svc = PredictorService(steps=steps)
-    res = svc.fit(trace)
-    preds = svc.predict_trace()
-    return trace, preds, svc, res
+    preds = predcache.get_or_train(
+        trace, steps=steps,
+        cache_dir=os.path.join(TRACE_CACHE_DIR, predcache.DEFAULT_SUBDIR))
+    return trace, preds
 
 
 def _eval_cell(bench: str, prefetcher: str, *, prediction_us: float = 1.0,
@@ -163,7 +178,7 @@ def _run_cell(cell: SweepCell, timeline: bool = False) -> Dict:
     pf = None
     if (cell.prefetcher == "learned" and default_point
             and cell.service_steps == SERVICE_STEPS):
-        _, preds, _, _ = _service_predictions(cell.bench, cell.service_steps)
+        _, preds = _service_predictions(cell.bench, cell.service_steps)
         pf = LearnedPrefetcher(
             preds,
             extra_latency_cycles=(cell.prediction_us
@@ -198,25 +213,19 @@ def uvm_cell(bench: str, prefetcher: str, *,
 def uvm_sweep(cells: List[SweepCell]) -> List[Dict]:
     """Run a (bench × prefetcher × config) grid via the sweep orchestrator.
 
-    Non-learned cells fan out across ``SWEEP_WORKERS`` processes with their
-    own on-disk resume state; learned cells run in-process so they can share
-    one trained predictor service per benchmark.
+    Every cell — learned included — fans out across ``SWEEP_WORKERS``
+    processes with on-disk resume state: the prediction cache under
+    ``TRACE_CACHE_DIR`` gives learned cells train-once semantics, so a
+    worker either reuses an existing predictions array or trains it for
+    every other cell (and future run) of the same (trace, model) pair.
     """
-    out: Dict[int, Dict] = {}
-    plain = [(i, c) for i, c in enumerate(cells) if c.prefetcher != "learned"]
-    if plain:
-        # several suites share this out_dir: skip the aggregate files so
-        # they never reflect just the last suite's grid
-        rows = run_sweep([c for _, c in plain],
-                         out_dir=os.path.join(CACHE_DIR, "sweep"),
-                         workers=SWEEP_WORKERS, write_aggregate=False)
-        for (i, _), row in zip(plain, rows):
-            row["simulated_instructions"] = row["n_instructions"]
-            out[i] = row
-    for i, c in enumerate(cells):
-        if c.prefetcher == "learned":
-            out[i] = _cached_cell(c)
-    return [out[i] for i in range(len(cells))]
+    # several suites share this out_dir: skip the aggregate files so
+    # they never reflect just the last suite's grid
+    rows = run_sweep(cells, out_dir=SWEEP_DIR, cache_dir=TRACE_CACHE_DIR,
+                     workers=SWEEP_WORKERS, write_aggregate=False)
+    for row in rows:
+        row["simulated_instructions"] = row["n_instructions"]
+    return rows
 
 
 def geomean(xs: List[float]) -> float:

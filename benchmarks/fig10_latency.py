@@ -1,21 +1,31 @@
 """Paper Fig 10: IPC sensitivity to prediction overhead (1/2/5/10 us),
-normalized to the UVMSmart (tree) runtime."""
+normalized to the UVMSmart (tree) runtime.
+
+One batched sweep over the (benchmark × {tree, learned × latency}) grid:
+the prediction cache trains each benchmark's predictor once and every
+latency variant replays the same predictions array, so the whole
+sensitivity grid costs one training run per benchmark."""
 from __future__ import annotations
 
-from benchmarks.common import (ALL_BENCHMARKS, geomean, print_table,
-                               uvm_cell)
+from benchmarks.common import (ALL_BENCHMARKS, _eval_cell, geomean,
+                               print_table, uvm_sweep)
 
 LATENCIES = [1.0, 2.0, 5.0, 10.0]
 
 
 def run():
+    cells = [_eval_cell(b, "tree") for b in ALL_BENCHMARKS]
+    cells += [_eval_cell(b, "learned", prediction_us=us)
+              for us in LATENCIES for b in ALL_BENCHMARKS]
+    grid = uvm_sweep(cells)
+    by = {(r["bench"], r["prefetcher"], r["prediction_us"]): r for r in grid}
     rows = []
     means = {}
     for us in LATENCIES:
         gains = []
         for b in ALL_BENCHMARKS:
-            tree = uvm_cell(b, "tree")
-            ours = uvm_cell(b, "learned", prediction_us=us)
+            tree = by[(b, "tree", 1.0)]
+            ours = by[(b, "learned", us)]
             gain = ours["ipc"] / tree["ipc"]
             gains.append(gain)
             rows.append({"bench": b, "latency_us": us,

@@ -6,6 +6,7 @@ summary CSV at the end (per-table CSVs above it).
     PYTHONPATH=src python -m benchmarks.run --only table1,perf
     PYTHONPATH=src python -m benchmarks.run --only table10,table11,oversub \
         --workers 8                                    # parallel UVM sweeps
+    PYTHONPATH=src python -m benchmarks.run --emit-json BENCH_sweep.json
 
 The UVM suites (table10/table11/perf/oversub/fig10/fig12) all route through
 ``repro.uvm.sweep``: simulations run on the vectorized engine, non-learned
@@ -15,6 +16,7 @@ under ``benchmarks/cache/sweep/`` for resume.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
@@ -54,11 +56,15 @@ def main() -> None:
                     help="comma-separated suite names")
     ap.add_argument("--workers", type=int, default=None,
                     help="process fan-out for the UVM sweep suites")
+    ap.add_argument("--emit-json", default=None, metavar="PATH",
+                    help="write per-suite wall-clock rows as JSON so "
+                         "future PRs can diff the perf trajectory")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.workers is not None:
         common.SWEEP_WORKERS = args.workers
 
+    t_start = time.time()
     summary = []
     failed = []
     for name, fn in SUITES:
@@ -78,6 +84,19 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, status in summary:
         print(f"{name},{us:.0f},{status}")
+    if args.emit_json:
+        doc = {
+            "version": 1,
+            "quick": common.QUICK,
+            "workers": common.SWEEP_WORKERS,
+            "total_seconds": time.time() - t_start,
+            "rows": [{"suite": name, "seconds": us / 1e6, "status": status}
+                     for name, us, status in summary],
+        }
+        with open(args.emit_json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.emit_json}")
     if failed:
         raise SystemExit(f"failed suites: {failed}")
 

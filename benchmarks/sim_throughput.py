@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m benchmarks.sim_throughput            # 1M accesses
     PYTHONPATH=src python -m benchmarks.sim_throughput --n 200000
     PYTHONPATH=src python -m benchmarks.sim_throughput --bench ATAX --scale 1.0
+    PYTHONPATH=src python -m benchmarks.sim_throughput --json BENCH_sim.json
 
 The default workload is a 1M-access DP-style trace (per "row", a block of
 newly-streamed pages plus repeated sweeps over two reused result buffers —
@@ -13,6 +14,8 @@ identical counters, so the speedup is never bought with drift.
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 from typing import List
 
@@ -82,7 +85,9 @@ def run(trace: Trace, cfg: UVMConfig, skip_oracle: bool = False):
         same = all(getattr(s_legacy, f) == getattr(s_vec, f)
                    for f in CHECK_FIELDS)
         speedup = t_legacy / max(t_vec, 1e-9)
-        rows.append({"prefetcher": name, "speedup": speedup, "same": same,
+        rows.append({"trace": trace.name, "n_accesses": n,
+                     "prefetcher": name, "speedup": speedup, "same": same,
+                     "legacy_s": t_legacy, "vec_s": t_vec,
                      "legacy_aps": n / max(t_legacy, 1e-9),
                      "vec_aps": n / max(t_vec, 1e-9)})
         print(f"{name},{t_legacy:.3f},{n / max(t_legacy, 1e-9):.0f},"
@@ -103,13 +108,33 @@ def main() -> None:
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--skip-oracle", action="store_true",
                     help="oracle is slow on both engines at large n")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-prefetcher engine-throughput rows + "
+                         "geomean as JSON (perf trajectory for future PRs)")
     args = ap.parse_args()
 
     cfg = UVMConfig()
-    run(dp_sweep_trace(args.n), cfg, skip_oracle=args.skip_oracle)
+    all_rows = []
+    geomeans = {}
+    rows, gm = run(dp_sweep_trace(args.n), cfg, skip_oracle=args.skip_oracle)
+    all_rows += rows
+    geomeans["dp-sweep"] = gm
     if args.bench:
-        run(bench_trace(args.bench, args.scale), cfg,
-            skip_oracle=args.skip_oracle)
+        rows, gm = run(bench_trace(args.bench, args.scale), cfg,
+                       skip_oracle=args.skip_oracle)
+        all_rows += rows
+        geomeans[args.bench] = gm
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"version": 1, "benchmark": "sim_throughput",
+                       "rows": all_rows, "geomean_speedup": geomeans},
+                      f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    if not all(r["same"] for r in all_rows):
+        # any counter drift between the engines is a correctness failure,
+        # not a perf data point — make CI smoke runs fail loudly
+        sys.exit("FAIL: vectorized engine diverged from legacy counters")
 
 
 if __name__ == "__main__":

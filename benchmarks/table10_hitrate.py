@@ -1,6 +1,8 @@
 """Paper Table 10: device-memory page hit rate, UVMSmart (U) vs ours (R).
 
-One batched sweep over the (benchmark × {tree, learned}) grid."""
+One batched sweep over the (benchmark × {tree, learned}) grid; learned
+cells fan out across workers like the rest, reusing (or seeding) the
+per-benchmark predictions in the shared train-once cache."""
 from __future__ import annotations
 
 from benchmarks.common import ALL_BENCHMARKS, _eval_cell, print_table, uvm_sweep

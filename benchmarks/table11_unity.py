@@ -1,4 +1,7 @@
-"""Paper Table 11: Unity = cbrt(accuracy * coverage * hit-rate)."""
+"""Paper Table 11: Unity = cbrt(accuracy * coverage * hit-rate).
+
+Shares its sweep cells (and the train-once prediction cache) with
+Table 10: on a combined run the whole grid is resumed from disk."""
 from __future__ import annotations
 
 import numpy as np

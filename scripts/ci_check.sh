@@ -18,11 +18,16 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "[ci] tier-1: full test suite (golden/sweep gated separately below)"
+echo "[ci] tier-1: full test suite (golden/sweep/predcache gated separately)"
 python -m pytest -x -q --ignore=tests/test_uvm_golden.py \
-    --ignore=tests/test_sweep.py
+    --ignore=tests/test_sweep.py --ignore=tests/test_predcache.py
 
-echo "[ci] golden equivalence: vectorized engine vs legacy fixtures"
-python -m pytest -q tests/test_uvm_golden.py tests/test_sweep.py
+echo "[ci] golden equivalence + sweep + prediction cache"
+python -m pytest -q tests/test_uvm_golden.py tests/test_sweep.py \
+    tests/test_predcache.py
+
+echo "[ci] sim_throughput smoke: engines must stay counter-identical"
+python -m benchmarks.sim_throughput --n 60000 \
+    --json "${TMPDIR:-/tmp}/ci_sim_throughput.json"
 
 echo "[ci] OK"

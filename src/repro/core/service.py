@@ -21,7 +21,7 @@ import numpy as np
 from repro.core import model as model_lib
 from repro.core.dataset import SEQ_LEN, build_dataset
 from repro.core.features import ClusteredTrace, cluster_trace, delta_convergence
-from repro.core.train import TrainResult, predict_logits, train_predictor
+from repro.core.train import TrainResult, predict_cls_conf, train_predictor
 from repro.core.vocab import DeltaVocab, encode_features
 from repro.traces.trace import Trace
 
@@ -74,41 +74,69 @@ class PredictorService:
         return self.result
 
     def predict_trace(self, trace: Trace | None = None,
-                      batch_size: int = 1024) -> np.ndarray:
+                      batch_size: int = 4096) -> np.ndarray:
         """Per-access predicted pages, aligned with GMMU trace order.
         Entry i is the top-1 page expected ``distance`` accesses after i in
         i's cluster, or -1 where no prediction is available (window warmup or
-        UNK class)."""
+        UNK class).
+
+        Windows from *all* clusters are concatenated into one stream and
+        pushed through ``predict_cls_conf`` in large fixed-shape jitted
+        batches (pad-and-mask): small clusters no longer each pay a mostly-
+        padded device batch, jit compiles one shape for the whole trace, and
+        only the (class, confidence) pair per window crosses back to the
+        host instead of full logits rows."""
         assert self.result is not None and self.vocab is not None
         if trace is None:
             ct = self.ct
         else:
             ct = cluster_trace(trace, self.cluster_key)
         cfg, params = self.result.cfg, self.result.params
-        n_total = sum(len(p) for p in ct.pages)
         out = np.full(max(g.max() for g in ct.global_index) + 1, -1,
                       dtype=np.int64)
+        window = np.arange(self.seq_len)[None, :]
+        # windows accumulate across clusters but are inferred in shared
+        # flushes of at most flush_windows rows, so peak memory is bounded
+        # by the flush size, not the trace length
+        flush_windows = max(batch_size, 65536)
+        pend_x: list = []
+        pend_spans: list = []
+        pend_n = 0
+
+        def _flush() -> None:
+            nonlocal pend_x, pend_spans, pend_n
+            if not pend_x:
+                return
+            x = pend_x[0] if len(pend_x) == 1 else np.concatenate(pend_x)
+            cls, conf = predict_cls_conf(cfg, params, x, batch_size)
+            off = 0
+            for pages, gidx, ends in pend_spans:
+                m = len(ends)
+                c, p = cls[off:off + m], conf[off:off + m]
+                off += m
+                deltas = self.vocab.decode(c)
+                # confidence gate: don't prefetch on low-probability
+                # predictions (useless prefetches cost bus bandwidth, §7.6)
+                pred_pages = np.where((c == 0) | (p < self.min_prob),
+                                      -1, pages[ends] + deltas)
+                out[gidx[ends]] = pred_pages
+            pend_x, pend_spans, pend_n = [], [], 0
+
         for cluster, pages, gidx in zip(ct.clusters, ct.pages,
                                         ct.global_index):
             n = len(pages)
             if n < self.seq_len:
                 continue
             enc = encode_features(cluster, list(cfg.features))
-            starts = np.arange(0, n - self.seq_len + 1)
-            idx = starts[:, None] + np.arange(self.seq_len)[None, :]
-            x = enc[idx]
-            logits = predict_logits(cfg, params, x, batch_size)
-            cls = logits.argmax(-1)
-            # confidence gate: don't prefetch on low-probability predictions
-            # (useless prefetches cost bus bandwidth, paper §7.6)
-            mx = logits.max(-1)
-            lse = mx + np.log(np.exp(logits - mx[:, None]).sum(-1))
-            conf = np.exp(mx - lse)
-            deltas = self.vocab.decode(cls)
-            ends = starts + self.seq_len - 1
-            pred_pages = np.where((cls == 0) | (conf < self.min_prob),
-                                  -1, pages[ends] + deltas)
-            out[gidx[ends]] = pred_pages
+            all_starts = np.arange(0, n - self.seq_len + 1)
+            for s0 in range(0, len(all_starts), flush_windows):
+                starts = all_starts[s0:s0 + flush_windows]
+                pend_x.append(enc[starts[:, None] + window])
+                pend_spans.append((pages, gidx, starts + self.seq_len - 1))
+                pend_n += len(starts)
+                if pend_n >= flush_windows:
+                    _flush()
+        _flush()
         return out
 
 

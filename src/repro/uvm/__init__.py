@@ -32,6 +32,12 @@ Traces are generated once and cached on disk; each completed cell is
 persisted under ``out_dir/cells/`` so an interrupted sweep resumes where it
 stopped; aggregate results are written as both JSON and CSV.  The CLI wraps
 the same API: ``PYTHONPATH=src python -m repro.uvm.sweep --help``.
+
+Learned cells are train-once: ``repro.uvm.predcache`` content-addresses the
+predictor's ``predict_trace`` arrays by (trace content, model config), so a
+(trace × prediction_us × device_frac) grid trains one model per trace and
+every variant — in-process, across ``--workers`` processes (atomic
+write-rename + training lock), and across runs — reuses the cached array.
 """
 from repro.uvm.config import UVMConfig
 from repro.uvm.engine import VectorizedUVMSimulator, simulate

@@ -22,6 +22,13 @@ in NumPy-chunked form and is **bit-identical** to the legacy loop:
   serialized-inference gate is replayed arithmetically (its ``_next_free``
   chain is a closed-form function of the exact chunk clocks), and the oracle
   prefetcher's lookahead window is checked with one cumulative sum.
+* Adapters also own the ``on_fault`` / ``on_migrate`` / ``on_evict``
+  callbacks.  The tree prefetcher's ``(level, node)`` dict is replaced by
+  dense per-level count arrays over the page span (``_TreeAdapter``):
+  migrate/evict updates are ``np.add.at`` / scalar array ops and the >50%
+  escalation walk classifies the whole 2 MB root window with slices —
+  emitting the exact extras the legacy dict walk produces.  Batch-DMA
+  prefetches without LRU tracking are applied with one vectorized store.
 * LRU order for eviction under oversubscription is kept as monotone touch
   stamps plus a lazy min-heap, reproducing ``OrderedDict`` order exactly,
   including the reinsert-at-MRU of in-flight victims.
@@ -41,7 +48,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.traces.trace import ROOT_PAGES, Trace
+from repro.traces.trace import BASIC_BLOCK_PAGES, ROOT_PAGES, Trace
 from repro.uvm.config import UVMConfig
 from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
                                    NoPrefetcher, OraclePrefetcher, Prefetcher,
@@ -70,8 +77,21 @@ class _ResidencyView:
         return 0 <= i < self.arrival.size and self.arrival[i] != _INF
 
 
-class _NullAccessAdapter:
-    """Prefetchers whose ``on_access`` is the no-op base implementation."""
+class _BaseAdapter:
+    """Engine-side façade over one prefetcher.
+
+    Adapters own *all* prefetcher interaction inside the vectorized engine:
+    the chunk-wise ``scan`` for the next continuous-prefetch event, and the
+    ``on_fault`` / ``on_migrate`` / ``on_evict`` callbacks raised by the
+    scalar event step.  The base class delegates the callbacks to the real
+    prefetcher object; state-heavy prefetchers (tree) override them with
+    dense-array implementations that stay bit-identical to the legacy
+    object while doing O(levels) array arithmetic instead of per-page
+    Python dict walks.
+    """
+
+    def __init__(self, pf: Prefetcher) -> None:
+        self.pf = pf
 
     def scan(self, i0: int, clocks: np.ndarray, seg: np.ndarray,
              limit: int) -> Optional[int]:
@@ -80,8 +100,100 @@ class _NullAccessAdapter:
     def on_access(self, i: int, p: int, clock: float) -> List[int]:
         return []
 
+    def on_fault(self, i: int, p: int, resident):
+        return self.pf.on_fault(i, p, resident)
 
-class _LearnedAdapter:
+    def on_migrate(self, pages) -> None:
+        self.pf.on_migrate(list(pages))
+
+    def on_evict(self, page: int) -> None:
+        self.pf.on_evict(page)
+
+
+class _NullAccessAdapter(_BaseAdapter):
+    """Prefetchers whose ``on_access`` is the no-op base implementation."""
+
+
+class _TreeAdapter(_BaseAdapter):
+    """Vectorized :class:`TreePrefetcher` state.
+
+    The legacy object keeps a ``(level, node) -> count`` dict and walks it
+    per page in pure Python; with up-to-512-page escalation batches that
+    makes the tree path the slowest replay.  Here node occupancy lives in
+    dense per-level ``int32`` arrays over the trace's (2 MB-aligned) page
+    span, so:
+
+    * ``on_migrate`` of a k-page batch is ``LEVELS+1`` ``np.add.at`` calls
+      instead of ``6k`` dict updates,
+    * ``on_evict`` is ``LEVELS+1`` scalar decrements,
+    * ``on_fault`` classifies the whole 2 MB root window (residency,
+      pending, escalation counts) with array slices and emits the exact
+      extras list — same pages, same ascending order per level — that the
+      legacy dict walk produces, which the golden harness pins bit-exact.
+
+    ``lo`` is ROOT_PAGES-aligned, so relative node indices coincide with
+    the legacy object's absolute ``page // span`` nodes at every level.
+    """
+
+    LEVELS = TreePrefetcher.LEVELS
+    _SHIFT = BASIC_BLOCK_PAGES.bit_length() - 1      # 16 pages -> 4 bits
+
+    def __init__(self, pf: TreePrefetcher, arrival: np.ndarray,
+                 lo: int) -> None:
+        super().__init__(pf)
+        self.arrival = arrival
+        self.lo = lo
+        span = arrival.size
+        self.counts = [
+            np.zeros(span >> (self._SHIFT + lv), dtype=np.int32)
+            for lv in range(self.LEVELS + 1)
+        ]
+
+    def on_migrate(self, pages) -> None:
+        if len(pages) == 1:
+            pi = int(pages[0]) - self.lo
+            for lv in range(self.LEVELS + 1):
+                self.counts[lv][pi >> (self._SHIFT + lv)] += 1
+            return
+        rel = np.asarray(pages, dtype=np.int64) - self.lo
+        for lv in range(self.LEVELS + 1):
+            np.add.at(self.counts[lv], rel >> (self._SHIFT + lv), 1)
+
+    def on_evict(self, page: int) -> None:
+        pi = int(page) - self.lo
+        for lv in range(self.LEVELS + 1):
+            self.counts[lv][pi >> (self._SHIFT + lv)] -= 1
+
+    def on_fault(self, i: int, p: int, resident) -> np.ndarray:
+        pi = int(p) - self.lo
+        root = (pi // ROOT_PAGES) * ROOT_PAGES
+        rel = pi - root
+        nonres = self.arrival[root:root + ROOT_PAGES] == _INF
+        # 1) the faulting basic block (the demand page is already resident
+        #    here — the engine inserts it before raising on_fault — so
+        #    ``nonres`` excludes it exactly like the legacy checks)
+        blk = (rel >> self._SHIFT) << self._SHIFT
+        out = np.nonzero(nonres[blk:blk + BASIC_BLOCK_PAGES])[0] + blk
+        # 2) >50% escalation walk, counting the about-to-arrive pages too
+        pend = np.zeros(ROOT_PAGES, dtype=bool)
+        pend[out] = True
+        pend[rel] = True
+        for lv in range(1, self.LEVELS + 1):
+            span = BASIC_BLOCK_PAGES << lv
+            nb = (rel // span) * span
+            node = (root + nb) >> (self._SHIFT + lv)
+            cnt = int(self.counts[lv][node]) + int(pend[nb:nb + span].sum())
+            if cnt * 2 > span:
+                extra = np.nonzero(nonres[nb:nb + span]
+                                   & ~pend[nb:nb + span])[0] + nb
+                out = np.concatenate([out, extra])
+                pend[extra] = True
+            else:
+                break
+        return out + (root + self.lo)
+
+
+class _LearnedAdapter(_BaseAdapter):
     """Replays ``LearnedPrefetcher.on_access`` arithmetically.
 
     The gate is a serialized inference server: an access fires iff
@@ -176,7 +288,7 @@ class _LearnedAdapter:
         return []
 
 
-class _OracleAdapter:
+class _OracleAdapter(_BaseAdapter):
     """Oracle lookahead windows checked with one cumulative sum per chunk.
 
     ``pf.pos`` is a pure function of the access index (it only advances), so
@@ -225,8 +337,10 @@ SUPPORTED_PREFETCHERS = (NoPrefetcher, BlockPrefetcher, TreePrefetcher,
 def _make_adapter(pf: Prefetcher, arrival: np.ndarray, lo: int,
                   view: _ResidencyView, cpa: float):
     t = type(pf)
-    if t in (NoPrefetcher, BlockPrefetcher, TreePrefetcher):
-        return _NullAccessAdapter()
+    if t in (NoPrefetcher, BlockPrefetcher):
+        return _NullAccessAdapter(pf)
+    if t is TreePrefetcher:
+        return _TreeAdapter(pf, arrival, lo)
     if t is LearnedPrefetcher:
         return _LearnedAdapter(pf, arrival, lo, cpa)
     if t is OraclePrefetcher:
@@ -334,25 +448,45 @@ class VectorizedUVMSimulator:
                 stamp[pi] = counter
             counter += 1
 
-        def _schedule(extras: List[int], batch: bool) -> None:
+        def _schedule(extras, batch: bool) -> None:
             nonlocal pcie_free, pages_migrated, pcie_bytes, prefetch_issued
+            nonlocal resident_count, counter
+            k = len(extras)
             ex_ready = (clock + cfg.prefetch_overhead_cycles
                         + prefetcher.extra_latency_cycles)
             ex_start = max(pcie_free, ex_ready)
-            end = ex_start + len(extras) * page_tx
-            t = ex_start
-            for q in extras:
-                t += page_tx
-                ex_arr = (end if batch else t) + cfg.pcie_latency_cycles
-                _insert(int(q) - lo, ex_arr)
-                pfu[int(q) - lo] = True
-                pages_migrated += 1
-                pcie_bytes += cfg.page_size
+            end = ex_start + k * page_tx
+            if batch and not track_lru and k > 1:
+                # batch DMA without LRU tracking: every page arrives at
+                # batch completion, extras are unique and non-resident by
+                # the supported prefetchers' contract — apply in one shot
+                idx = np.asarray(extras, dtype=np.int64) - lo
+                ex_arr = end + cfg.pcie_latency_cycles
+                if strict:
+                    assert not np.isfinite(arrival[idx]).any(), \
+                        "prefetch batch contains resident pages"
+                arrival[idx] = ex_arr
+                pfu[idx] = True
+                resident_count += k
+                counter += k
+                pages_migrated += k
+                pcie_bytes += k * cfg.page_size
                 if record:
-                    timeline.append((ex_arr, float(cfg.page_size)))
+                    timeline.extend([(ex_arr, float(cfg.page_size))] * k)
+            else:
+                t = ex_start
+                for q in extras:
+                    t += page_tx
+                    ex_arr = (end if batch else t) + cfg.pcie_latency_cycles
+                    _insert(int(q) - lo, ex_arr)
+                    pfu[int(q) - lo] = True
+                    pages_migrated += 1
+                    pcie_bytes += cfg.page_size
+                    if record:
+                        timeline.append((ex_arr, float(cfg.page_size)))
             pcie_free = end
-            prefetch_issued += len(extras)
-            prefetcher.on_migrate(list(extras))
+            prefetch_issued += k
+            adapter.on_migrate(extras)
 
         def _evict_loop() -> None:
             nonlocal resident_count, pages_evicted, pcie_bytes, pcie_free
@@ -378,7 +512,7 @@ class VectorizedUVMSimulator:
                 arrival[vi] = _INF
                 resident_count -= 1
                 pfu[vi] = False
-                prefetcher.on_evict(vi + lo)
+                adapter.on_evict(vi + lo)
                 pages_evicted += 1
                 # writeback traffic (assume half the evictions dirty)
                 if pages_evicted % 2 == 0:
@@ -415,12 +549,12 @@ class VectorizedUVMSimulator:
                 if record:
                     timeline.append((arr_v, float(cfg.page_size)))
                 heapq.heappush(outstanding, arr_v)
-                prefetcher.on_migrate([p])
-                extras = prefetcher.on_fault(i, p, view)
-                if extras:
+                adapter.on_migrate([p])
+                extras = adapter.on_fault(i, p, view)
+                if len(extras):
                     _schedule(extras, True)
             extras = adapter.on_access(i, p, clock)
-            if extras:
+            if len(extras):
                 _schedule(extras, False)
             while len(outstanding) > mshr:
                 clock = max(clock, heapq.heappop(outstanding))

@@ -11,19 +11,28 @@ Fixtures live at ``tests/golden/uvm_golden.json``; regenerate after an
 
 The matrix covers the paper's interesting regimes: ATAX (dominant-delta
 matrix sweeps), Pathfinder (DP row reuse), a BICG-style clustered-fault storm
-under MSHR pressure (the paper's Fig 11 serialization effect), and an
-oversubscribed cyclic sweep with LRU eviction churn — each against all five
-prefetchers (on-demand, block, tree, learned, oracle).
+under MSHR pressure (the paper's Fig 11 serialization effect), an
+oversubscribed cyclic sweep with LRU eviction churn, and a tree-churn case
+(permuted sweeps alternating between two far-apart regions under
+oversubscription, so tree node counts rise and fall continuously — the
+regime the vectorized ``_TreeAdapter`` must track exactly).  Each trace runs
+against all six prefetcher variants: on-demand, block, tree, learned,
+learned-cached (identical predictions round-tripped through the
+``repro.uvm.predcache`` atomic store, pinning the cache path bit-exact
+against plain learned), and oracle.
 """
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import functools
+import shutil
+import tempfile
 from typing import Callable, Dict, Iterator, List, Tuple
 
 import numpy as np
 
-from repro.traces.trace import Trace, make_records
+from repro.traces.trace import ROOT_PAGES, Trace, make_records
 from repro.uvm.config import UVMConfig
 from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
                                    NoPrefetcher, OraclePrefetcher, Prefetcher,
@@ -37,7 +46,8 @@ INT_FIELDS = ("n_accesses", "n_instructions", "hits", "late", "faults",
 #: float accumulators (bit-equal in practice; compared to tight rel. tol.)
 FLOAT_FIELDS = ("cycles", "pcie_bytes", "zero_copy_bytes")
 
-PREFETCHER_NAMES = ("none", "block", "tree", "learned", "oracle")
+PREFETCHER_NAMES = ("none", "block", "tree", "learned", "learned-cached",
+                    "oracle")
 
 #: prediction distance / inference overhead of the synthetic learned model
 LEARNED_DISTANCE = 32
@@ -74,6 +84,16 @@ def golden_cases() -> Tuple[GoldenCase, ...]:
     # so LRU eviction churns continuously (including in-flight victims).
     oversub = np.tile(np.arange(2500, dtype=np.int64), 6)
 
+    # Tree churn under oversubscription: two far-apart 3-chunk regions are
+    # swept alternately in a stride-7 permuted order (blocks fill out of
+    # sequence, so >50% escalations fire at varied points), with capacity
+    # for only ~2/3 of the union — chunks migrate, evict, and re-migrate,
+    # driving tree node counts up and down for the whole replay.
+    n_churn = 3 * ROOT_PAGES
+    perm = (np.arange(n_churn, dtype=np.int64) * 7) % n_churn
+    churn = np.concatenate([perm + (0 if k % 2 == 0 else 8192)
+                            for k in range(8)])
+
     return (
         GoldenCase("atax", atax, UVMConfig()),
         GoldenCase("pathfinder", pathfinder, UVMConfig()),
@@ -81,6 +101,8 @@ def golden_cases() -> Tuple[GoldenCase, ...]:
                    UVMConfig(mshr_entries=16)),
         GoldenCase("oversub", _mk_trace("oversub", oversub),
                    UVMConfig(device_pages=1500)),
+        GoldenCase("tree-churn", _mk_trace("tree-churn", churn),
+                   UVMConfig(device_pages=2048)),
     )
 
 
@@ -94,6 +116,15 @@ def perfect_preds(trace: Trace, distance: int = LEARNED_DISTANCE) -> np.ndarray:
     return preds
 
 
+@functools.lru_cache(maxsize=1)
+def _roundtrip_cache_dir() -> str:
+    """Process-lifetime scratch dir for the learned-cached golden cells
+    (removed at interpreter exit so repeated runs don't litter /tmp)."""
+    path = tempfile.mkdtemp(prefix="uvm_golden_predcache_")
+    atexit.register(shutil.rmtree, path, ignore_errors=True)
+    return path
+
+
 def make_prefetcher(name: str, trace: Trace, config: UVMConfig) -> Prefetcher:
     if name == "none":
         return NoPrefetcher()
@@ -104,6 +135,20 @@ def make_prefetcher(name: str, trace: Trace, config: UVMConfig) -> Prefetcher:
     if name == "learned":
         return LearnedPrefetcher(
             perfect_preds(trace),
+            extra_latency_cycles=LEARNED_OVERHEAD_US * config.cycles_per_us)
+    if name == "learned-cached":
+        # same predictions as "learned", but round-tripped through the
+        # prediction cache's atomic npy store — the fixtures pin the cache
+        # path to replay bit-identically to the direct array
+        from repro.uvm import predcache
+        key = predcache.predictions_key(trace, kind="golden-roundtrip")
+        cache_dir = _roundtrip_cache_dir()
+        preds = predcache.load(cache_dir, key)
+        if preds is None:
+            predcache.store(cache_dir, key, perfect_preds(trace))
+            preds = predcache.load(cache_dir, key)
+        return LearnedPrefetcher(
+            preds,
             extra_latency_cycles=LEARNED_OVERHEAD_US * config.cycles_per_us)
     if name == "oracle":
         return OraclePrefetcher(np.asarray(trace.pages))

@@ -1,0 +1,239 @@
+"""Content-addressed cache of learned-prefetcher prediction arrays.
+
+The learned sweep cells are the expensive ones: training the jax predictor
+service dominates a (trace × prediction_us × device_frac) grid if every cell
+retrains from scratch, even though the ``predict_trace`` output depends only
+on the trace content and the predictor configuration — not on the replay
+knobs (``prediction_us``, capacity) the grid actually varies.
+
+This module gives those cells train-once semantics:
+
+* Keys are **content-addressed**: sha256 over the trace's access records +
+  instruction count plus every :class:`~repro.core.service.PredictorService`
+  field that influences the predictions (cluster key, prediction distance,
+  min-prob gate, sequence length, training steps, batch size, quantization,
+  bypass threshold, seed) and a cache-format version.  Two callers holding
+  bit-identical traces and configs always agree on the key, no matter how
+  the trace was produced (generator, npz cache, in-process fixture).
+* Values are plain ``.npy`` arrays written via **atomic write-rename**
+  (``os.replace`` of a same-directory tempfile), so concurrent ``--workers``
+  processes can never observe a torn file: they either see the complete
+  array or nothing.
+* A best-effort **training lock** (`O_CREAT|O_EXCL` lockfile) makes
+  concurrent misses on the same key wait for the first trainer's result
+  instead of training N times; if the lock holder dies, waiters time out
+  and train themselves (correctness never depends on the lock).
+* A per-process memo keeps the same array shared in-process even with no
+  ``cache_dir`` (serial sweeps train once per (trace, model) pair too).
+
+Set ``REPRO_PREDCACHE=0`` to disable all caching (the retrain-per-cell
+baseline, used by the regression test in ``tests/test_sweep.py``).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+#: bump on any change to the key schema, the stored array semantics, or the
+#: prediction pipeline itself — stale arrays must never be served
+PREDCACHE_VERSION = 1
+
+#: conventional subdirectory name under a sweep's trace cache
+DEFAULT_SUBDIR = "pred_cache"
+
+#: PredictorService fields that determine the predictions array
+SERVICE_KEY_FIELDS = ("cluster_key", "distance", "min_prob", "seq_len",
+                      "steps", "batch_size", "quantize", "bypass_threshold",
+                      "seed")
+
+_MEMO: Dict[str, np.ndarray] = {}
+
+
+def clear_memo() -> None:
+    """Drop the in-process memo (tests)."""
+    _MEMO.clear()
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_PREDCACHE", "1") != "0"
+
+
+# ---------------------------------------------------------------------------
+# keys
+# ---------------------------------------------------------------------------
+
+def trace_content_key(trace) -> str:
+    """Identity of a trace as the predictor sees it: the raw access records
+    plus the instruction count (which scales the timing model, not the
+    predictions, but keeps the key an honest trace fingerprint).  The hash
+    is memoized on the trace instance — a grid calls this once per cell,
+    and the access array is multi-MB at full scale."""
+    key = getattr(trace, "_predcache_content_key", None)
+    if key is not None:
+        return key
+    acc = np.ascontiguousarray(trace.accesses)
+    h = hashlib.sha256()
+    h.update(str(acc.dtype).encode())
+    h.update(str(acc.shape).encode())
+    h.update(acc.tobytes())
+    h.update(str(int(trace.n_instructions)).encode())
+    key = h.hexdigest()[:24]
+    try:
+        trace._predcache_content_key = key
+    except AttributeError:               # slots/frozen trace: just recompute
+        pass
+    return key
+
+
+def predictions_key(trace, **service_fields) -> str:
+    """Cache key for one (trace content, predictor config) pair."""
+    blob = json.dumps({"_v": PREDCACHE_VERSION,
+                       "trace": trace_content_key(trace),
+                       **service_fields}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+
+# ---------------------------------------------------------------------------
+# storage (atomic)
+# ---------------------------------------------------------------------------
+
+def _path(cache_dir: str, key: str) -> str:
+    return os.path.join(cache_dir, f"preds_{key}.npy")
+
+
+def load(cache_dir: str, key: str) -> Optional[np.ndarray]:
+    """Load a cached predictions array, or None.  A torn/invalid file reads
+    as a miss (the atomic rename makes that unreachable for writers using
+    :func:`store`, but a miss is always safe)."""
+    try:
+        arr = np.load(_path(cache_dir, key), allow_pickle=False)
+    except (FileNotFoundError, NotADirectoryError, ValueError, EOFError,
+            OSError):
+        return None
+    arr.flags.writeable = False
+    return arr
+
+
+def store(cache_dir: str, key: str, preds: np.ndarray) -> str:
+    """Atomically persist a predictions array: write to a same-directory
+    tempfile, then ``os.replace`` onto the final name.  Concurrent writers
+    race benignly — last rename wins, readers never see a partial file."""
+    os.makedirs(cache_dir, exist_ok=True)
+    path = _path(cache_dir, key)
+    fd, tmp = tempfile.mkstemp(dir=cache_dir, prefix=f".{key}.",
+                               suffix=".tmp.npy")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.save(f, np.ascontiguousarray(preds))
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return path
+
+
+# ---------------------------------------------------------------------------
+# training lock (best effort)
+# ---------------------------------------------------------------------------
+
+def _try_lock(lock_path: str) -> bool:
+    try:
+        fd = os.open(lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+    except FileExistsError:
+        return False
+    with os.fdopen(fd, "w") as f:
+        f.write(str(os.getpid()))
+    return True
+
+
+def _unlock(lock_path: str) -> None:
+    try:
+        os.unlink(lock_path)
+    except OSError:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# the train-once entry point
+# ---------------------------------------------------------------------------
+
+def get_or_train(trace, *, steps: int = 150, seed: int = 0,
+                 cache_dir: Optional[str] = None,
+                 service_kwargs: Optional[Dict] = None,
+                 lock_poll_s: float = 0.25,
+                 lock_patience_s: float = 900.0) -> np.ndarray:
+    """Return the ``predict_trace`` array for (trace, predictor config),
+    training at most once per key across the memo, the disk cache, and —
+    via the lock — concurrent worker processes."""
+    # lazy import: keys and storage must work without pulling in jax
+    from repro.core import PredictorService
+
+    def _fresh_service() -> "PredictorService":
+        return PredictorService(steps=steps, seed=seed,
+                                **(service_kwargs or {}))
+
+    def _train() -> np.ndarray:
+        svc = _fresh_service()
+        svc.fit(trace)
+        preds = np.ascontiguousarray(svc.predict_trace(), dtype=np.int64)
+        preds.flags.writeable = False
+        return preds
+
+    if not enabled():
+        return _train()
+
+    probe = _fresh_service()
+    fields = {f: getattr(probe, f) for f in SERVICE_KEY_FIELDS}
+    key = predictions_key(trace, **fields)
+    preds = _MEMO.get(key)
+    if preds is not None:
+        return preds
+
+    if cache_dir is None:
+        preds = _train()
+        _MEMO[key] = preds
+        return preds
+
+    preds = load(cache_dir, key)
+    if preds is None:
+        os.makedirs(cache_dir, exist_ok=True)
+        lock = _path(cache_dir, key) + ".lock"
+        got = _try_lock(lock)
+        if not got:
+            # another process is training this key: wait for its array
+            deadline = time.monotonic() + lock_patience_s
+            while time.monotonic() < deadline:
+                preds = load(cache_dir, key)
+                if preds is not None:
+                    break
+                if _try_lock(lock):      # holder released without a result
+                    got = True
+                    break
+                time.sleep(lock_poll_s)
+            if preds is None and not got:
+                # patience exhausted: the lock holder is dead or wedged.
+                # Steal the lock so it cannot poison this key for every
+                # future cold-cache process; a benign duplicate training
+                # run (deterministic, atomic rename) is the worst case.
+                _unlock(lock)
+                got = _try_lock(lock)
+        if preds is None:
+            try:
+                preds = load(cache_dir, key)   # double-check under the lock
+                if preds is None:
+                    preds = _train()
+                    store(cache_dir, key, preds)
+            finally:
+                if got:
+                    _unlock(lock)
+    _MEMO[key] = preds
+    return preds

@@ -104,8 +104,16 @@ class TreePrefetcher(Prefetcher):
     def on_evict(self, page: int) -> None:
         for lv in range(self.LEVELS + 1):
             key = self._node(lv, page)
-            if key in self.counts:
-                self.counts[key] -= 1
+            cnt = self.counts.get(key)
+            if cnt is not None:
+                if cnt <= 1:
+                    # pop at zero: on churny oversubscribed runs the dict
+                    # otherwise grows monotonically with every node ever
+                    # touched (a zero-count node reads the same as a missing
+                    # one, so behavior is unchanged)
+                    del self.counts[key]
+                else:
+                    self.counts[key] = cnt - 1
 
     def on_fault(self, index: int, page: int, resident) -> List[int]:
         # 1) the faulting basic block

@@ -19,10 +19,29 @@ CLI::
         --prefetchers none,tree,learned,oracle \
         --out results/ --workers 8
 
-The ``learned`` prefetcher trains the paper's predictor service for its
-predictions (jax; expensive).  A prebuilt predictions array can be supplied
-per bench via :func:`simulate_cell`'s ``prefetcher`` override, which is what
-``benchmarks/common.py`` does to share one trained service across cells.
+Train-once learned cells
+------------------------
+
+The ``learned`` prefetcher needs the paper's predictor service (jax;
+expensive to train), but its predictions depend only on the *trace content*
+and the *predictor config* — not on the replay knobs (``prediction_us``,
+``device_frac``/``device_pages``, engine) a sensitivity grid varies.
+:func:`make_prefetcher` therefore routes predictions through
+``repro.uvm.predcache``: a grid trains **once per (trace, model) pair** and
+every other learned cell of the grid reuses the cached array, in-process
+(memo) and across runs (content-addressed ``.npy`` files under
+``<trace cache>/pred_cache/``, written with atomic rename).
+
+With ``--workers N`` the cache is shared through the filesystem: the first
+worker to miss a key takes a lockfile and trains; workers hitting the same
+key wait for the array instead of training again, and workers on different
+keys train in parallel — a (trace × prediction_us × device_frac) grid costs
+one training run per trace no matter how many variants ride on it or how
+the pool schedules them.  ``REPRO_PREDCACHE=0`` restores the
+retrain-per-cell behavior.
+
+A prebuilt predictions array can still be supplied per bench via
+:func:`simulate_cell`'s ``prefetcher`` override.
 
 Workers are deterministic: a cell's row is a pure function of the cell, so
 serial and parallel sweeps produce identical results (modulo the ``seconds``
@@ -52,10 +71,11 @@ from repro.uvm.prefetchers import (BlockPrefetcher, NoPrefetcher,
 
 PREFETCHERS = ("none", "block", "tree", "learned", "oracle")
 
-#: bump on any intentional change to the timing model, trace generators, or
-#: row schema — invalidates persisted sweep cells and cached traces so a
-#: resumed sweep never mixes pre- and post-change numbers
-SWEEP_VERSION = 1
+#: bump on any intentional change to the timing model, trace generators,
+#: prediction pipeline, or row schema — invalidates persisted sweep cells
+#: and cached traces so a resumed sweep never mixes pre- and post-change
+#: numbers (v2: batched cls/conf inference path for learned predictions)
+SWEEP_VERSION = 2
 
 #: columns of the structured results, in CSV order
 ROW_FIELDS = [
@@ -175,8 +195,8 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
 # per-cell simulation
 # ---------------------------------------------------------------------------
 
-def make_prefetcher(cell: SweepCell, trace: Trace,
-                    config: UVMConfig) -> Prefetcher:
+def make_prefetcher(cell: SweepCell, trace: Trace, config: UVMConfig,
+                    cache_dir: Optional[str] = None) -> Prefetcher:
     if cell.prefetcher == "none":
         return NoPrefetcher()
     if cell.prefetcher == "block":
@@ -186,12 +206,16 @@ def make_prefetcher(cell: SweepCell, trace: Trace,
     if cell.prefetcher == "oracle":
         return OraclePrefetcher(np.asarray(trace.pages))
     if cell.prefetcher == "learned":
-        # trains the paper's predictor service on this trace (jax; heavy)
-        from repro.core import PredictorService
+        # train-once: predictions come from the content-addressed cache —
+        # one training run per (trace, model) pair, shared across every
+        # prediction_us / capacity variant, process, and (with cache_dir)
+        # run.  See repro.uvm.predcache.
+        from repro.uvm import predcache
         from repro.uvm.prefetchers import LearnedPrefetcher
-        svc = PredictorService(steps=cell.service_steps)
-        svc.fit(trace)
-        preds = svc.predict_trace()
+        pred_dir = (os.path.join(cache_dir, predcache.DEFAULT_SUBDIR)
+                    if cache_dir else None)
+        preds = predcache.get_or_train(trace, steps=cell.service_steps,
+                                       cache_dir=pred_dir)
         return LearnedPrefetcher(
             preds,
             extra_latency_cycles=cell.prediction_us * config.cycles_per_us)
@@ -215,7 +239,8 @@ def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
     config = UVMConfig(prediction_overhead_us=cell.prediction_us,
                        device_pages=device_pages)
     if prefetcher is None:
-        prefetcher = make_prefetcher(cell, trace, config)
+        prefetcher = make_prefetcher(cell, trace, config,
+                                     cache_dir=cache_dir)
     stats = simulate(trace, prefetcher, config, engine=cell.engine,
                      record_timeline=record_timeline)
     row = cell.to_dict()

@@ -1,0 +1,177 @@
+"""Prediction cache: content-addressed keys, bit-identical round trips,
+atomic concurrent writes, and the train-once hit path."""
+import multiprocessing
+import os
+
+import numpy as np
+import pytest
+
+from repro.traces.trace import Trace, make_records
+from repro.uvm import predcache
+
+
+def _mk_trace(pages, name="synth", n_instructions=None):
+    pages = np.asarray(pages, dtype=np.int64)
+    recs = make_records(len(pages))
+    recs["page"] = pages
+    recs["sm"] = np.arange(len(pages)) % 4
+    return Trace(name, recs, {}, {},
+                 n_instructions if n_instructions is not None
+                 else len(pages) * 100)
+
+
+def test_store_load_bit_identical(tmp_path):
+    cache = str(tmp_path)
+    rng = np.random.default_rng(0)
+    preds = rng.integers(-1, 1 << 40, size=10_000, dtype=np.int64)
+    key = "deadbeef" * 3
+    predcache.store(cache, key, preds)
+    back = predcache.load(cache, key)
+    assert back is not None
+    assert back.dtype == preds.dtype
+    np.testing.assert_array_equal(back, preds)
+    assert not back.flags.writeable          # cached arrays are shared
+
+
+def test_load_missing_is_none(tmp_path):
+    assert predcache.load(str(tmp_path), "0" * 24) is None
+    assert predcache.load(str(tmp_path / "nope"), "0" * 24) is None
+
+
+def test_key_sensitivity():
+    tr = _mk_trace(np.arange(500) % 37)
+    base = dict(steps=100, distance=8, seed=0, min_prob=0.35)
+    k0 = predcache.predictions_key(tr, **base)
+    assert k0 == predcache.predictions_key(tr, **base)   # deterministic
+    # every configuration axis moves the key
+    for variant in (dict(base, steps=101), dict(base, distance=30),
+                    dict(base, seed=1), dict(base, min_prob=0.5)):
+        assert predcache.predictions_key(tr, **variant) != k0
+    # trace content moves the key: different pages, and same pages with a
+    # different instruction count
+    other = _mk_trace((np.arange(500) % 37) + 1)
+    assert predcache.predictions_key(other, **base) != k0
+    longer = _mk_trace(np.arange(500) % 37, n_instructions=123)
+    assert predcache.predictions_key(longer, **base) != k0
+
+
+def test_key_is_content_addressed():
+    """Two traces with identical records agree on the key regardless of
+    how/where they were constructed (e.g. npz cache vs generator)."""
+    a = _mk_trace(np.arange(300), name="a")
+    b = _mk_trace(np.arange(300), name="b")
+    assert (predcache.predictions_key(a, steps=10)
+            == predcache.predictions_key(b, steps=10))
+
+
+def _writer(cache_dir, key, fill, n_writes):
+    arr = np.full(4096, fill, dtype=np.int64)
+    for _ in range(n_writes):
+        predcache.store(cache_dir, key, arr)
+
+
+def test_concurrent_writers_never_corrupt(tmp_path):
+    """N processes hammering the same key: readers must always observe a
+    complete array from one writer (atomic rename), never a torn file."""
+    cache = str(tmp_path)
+    key = "c0ffee" * 4
+    # spawn, not fork: the pytest process is multi-threaded (jax) by the
+    # time this runs, and forking a threaded parent can deadlock
+    ctx = multiprocessing.get_context("spawn")
+    fills = [1, 2, 3, 4]
+    procs = [ctx.Process(target=_writer, args=(cache, key, f, 40))
+             for f in fills]
+    for p in procs:
+        p.start()
+    seen = 0
+    try:
+        while any(p.is_alive() for p in procs):
+            arr = predcache.load(cache, key)
+            if arr is not None:
+                assert arr.shape == (4096,)
+                uniq = np.unique(arr)
+                assert uniq.size == 1 and int(uniq[0]) in fills
+                seen += 1
+    finally:
+        for p in procs:
+            p.join(timeout=60)
+    assert all(p.exitcode == 0 for p in procs)
+    arr = predcache.load(cache, key)
+    assert arr is not None and np.unique(arr).size == 1
+    assert seen > 0                      # we really raced the writers
+    # no tempfiles leaked behind the renames
+    assert not [f for f in os.listdir(cache) if f.endswith(".tmp.npy")]
+
+
+def test_get_or_train_hits_skip_training(tmp_path, monkeypatch):
+    """A warm cache returns the stored array bit-identically without ever
+    touching the predictor service."""
+    from repro.core.service import PredictorService
+
+    predcache.clear_memo()
+    cache = str(tmp_path)
+    tr = _mk_trace(np.arange(400) % 53)
+    svc = PredictorService(steps=7, seed=3)
+    fields = {f: getattr(svc, f) for f in predcache.SERVICE_KEY_FIELDS}
+    key = predcache.predictions_key(tr, **fields)
+    preds = np.arange(len(tr), dtype=np.int64) - 1
+    predcache.store(cache, key, preds)
+
+    def _boom(self, *a, **k):
+        raise AssertionError("cache hit must not train")
+
+    monkeypatch.setattr(PredictorService, "fit", _boom)
+    got = predcache.get_or_train(tr, steps=7, seed=3, cache_dir=cache)
+    np.testing.assert_array_equal(got, preds)
+    # second call comes from the in-process memo (same array object)
+    again = predcache.get_or_train(tr, steps=7, seed=3, cache_dir=cache)
+    assert again is got
+    predcache.clear_memo()
+
+
+def test_get_or_train_respects_disable_env(tmp_path, monkeypatch):
+    """REPRO_PREDCACHE=0 is the retrain-per-cell baseline: even a warm
+    cache is ignored."""
+    from repro.core.service import PredictorService
+
+    predcache.clear_memo()
+    cache = str(tmp_path)
+    tr = _mk_trace(np.arange(200) % 31)
+    svc = PredictorService(steps=5)
+    fields = {f: getattr(svc, f) for f in predcache.SERVICE_KEY_FIELDS}
+    predcache.store(cache, predcache.predictions_key(tr, **fields),
+                    np.zeros(len(tr), dtype=np.int64))
+    monkeypatch.setenv("REPRO_PREDCACHE", "0")
+    calls = []
+    monkeypatch.setattr(PredictorService, "fit",
+                        lambda self, *a, **k: calls.append(1))
+    monkeypatch.setattr(PredictorService, "predict_trace",
+                        lambda self: np.ones(len(tr), dtype=np.int64))
+    got = predcache.get_or_train(tr, steps=5, cache_dir=cache)
+    assert calls == [1]
+    assert int(got[0]) == 1              # trained, not the cached zeros
+
+
+def test_stale_lock_does_not_deadlock(tmp_path, monkeypatch):
+    """A dead trainer's leftover lockfile must not wedge waiters forever:
+    after the patience window they train themselves."""
+    from repro.core.service import PredictorService
+
+    predcache.clear_memo()
+    cache = str(tmp_path)
+    tr = _mk_trace(np.arange(150) % 17)
+    svc = PredictorService(steps=5)
+    fields = {f: getattr(svc, f) for f in predcache.SERVICE_KEY_FIELDS}
+    key = predcache.predictions_key(tr, **fields)
+    os.makedirs(cache, exist_ok=True)
+    # fake an abandoned lock with no result behind it
+    with open(os.path.join(cache, f"preds_{key}.npy.lock"), "w") as f:
+        f.write("99999")
+    monkeypatch.setattr(PredictorService, "fit",
+                        lambda self, *a, **k: None)
+    monkeypatch.setattr(PredictorService, "predict_trace",
+                        lambda self: np.full(len(tr), 7, dtype=np.int64))
+    got = predcache.get_or_train(tr, steps=5, cache_dir=cache,
+                                 lock_poll_s=0.01, lock_patience_s=0.05)
+    assert int(got[0]) == 7
+    predcache.clear_memo()

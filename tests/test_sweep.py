@@ -1,10 +1,13 @@
-"""Sweep orchestrator: grid expansion, worker determinism, resume, round-trip."""
+"""Sweep orchestrator: grid expansion, worker determinism, resume,
+round-trip, and train-once learned cells."""
 import json
 import os
+import time
 
 import numpy as np
 import pytest
 
+from repro.uvm import predcache
 from repro.uvm.sweep import (ROW_FIELDS, SweepCell, expand_grid, load_trace,
                              read_results, read_results_csv, run_sweep,
                              simulate_cell, write_results)
@@ -129,3 +132,93 @@ def test_engine_choice_is_equivalent():
     for f in ("hits", "late", "faults", "pages_migrated", "prefetch_issued"):
         assert vec[f] == legacy[f]
     assert vec["cycles"] == pytest.approx(legacy["cycles"], rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# train-once learned cells
+# ---------------------------------------------------------------------------
+
+LEARNED_STEPS = 20
+
+
+def _learned_grid():
+    """1 trace x 3 prediction_us x 2 device_frac — the Fig 10-style
+    sensitivity grid whose learned variants must share one training run."""
+    return expand_grid(["ATAX"], ["learned"], scales=[0.25],
+                       prediction_us=[1.0, 2.0, 5.0],
+                       device_fracs=[None, 0.5],
+                       service_steps=LEARNED_STEPS)
+
+
+def test_learned_grid_trains_once_and_beats_retrain(tmp_path, monkeypatch):
+    """A (trace x prediction_us x device_frac) learned grid invokes
+    PredictorService.fit exactly once, and the cached grid is >=3x faster
+    end to end than the retrain-per-cell baseline."""
+    from repro.core.service import PredictorService
+
+    fit_calls = []
+    orig_fit = PredictorService.fit
+
+    def counting_fit(self, *args, **kwargs):
+        fit_calls.append(1)
+        return orig_fit(self, *args, **kwargs)
+
+    monkeypatch.setattr(PredictorService, "fit", counting_fit)
+    cells = _learned_grid()
+    assert len(cells) == 6
+
+    # warm jit (train.step_fn recompiles per fit; the apply cache persists)
+    predcache.clear_memo()
+    monkeypatch.setenv("REPRO_PREDCACHE", "0")
+    simulate_cell(cells[0])
+    fit_calls.clear()
+
+    # retrain-per-cell baseline: cache disabled, one training run per cell
+    t0 = time.monotonic()
+    base_rows = run_sweep(cells, out_dir=str(tmp_path / "base"), workers=1)
+    t_base = time.monotonic() - t0
+    assert len(fit_calls) == len(cells)
+
+    # train-once grid: one fit, every variant reuses the cached array
+    monkeypatch.setenv("REPRO_PREDCACHE", "1")
+    predcache.clear_memo()
+    fit_calls.clear()
+    t0 = time.monotonic()
+    rows = run_sweep(cells, out_dir=str(tmp_path / "cached"), workers=1)
+    t_cached = time.monotonic() - t0
+    assert len(fit_calls) == 1
+
+    # identical replay knobs per cell -> identical rows (training is
+    # deterministic, so sharing the array cannot change any result)
+    assert _strip_timing(rows) == _strip_timing(base_rows)
+    assert t_base >= 3.0 * t_cached, (
+        f"train-once grid not >=3x faster: baseline {t_base:.2f}s "
+        f"vs cached {t_cached:.2f}s")
+
+    # the shared array landed in the on-disk cache next to the traces
+    pred_dir = os.path.join(str(tmp_path / "cached"), "trace_cache",
+                            predcache.DEFAULT_SUBDIR)
+    assert [f for f in os.listdir(pred_dir) if f.startswith("preds_")]
+    predcache.clear_memo()
+
+
+def test_learned_resume_needs_no_training(tmp_path, monkeypatch):
+    """Resuming a completed learned grid reads persisted cells — nothing is
+    re-simulated, so in particular nothing retrains."""
+    import repro.uvm.sweep as sweep_mod
+
+    predcache.clear_memo()
+    out = str(tmp_path / "out")
+    cells = _learned_grid()[:2]
+    first = run_sweep(cells, out_dir=out, workers=1)
+
+    def _boom(*a, **k):
+        raise AssertionError("resume must not re-simulate any cell")
+
+    # guard the whole cell path: a memo/disk prediction hit could mask a
+    # broken resume if we only watched PredictorService.fit
+    monkeypatch.setattr(sweep_mod, "simulate_cell", _boom)
+    predcache.clear_memo()
+    resumed = run_sweep(cells, out_dir=out, workers=1)
+    assert _strip_timing(resumed) == _strip_timing(first)
+    predcache.clear_memo()

@@ -17,7 +17,7 @@ import os
 import numpy as np
 import pytest
 
-from repro.traces.trace import Trace, make_records
+from repro.traces.trace import ROOT_PAGES, Trace, make_records
 from repro.uvm import UVMConfig, UVMSimulator, VectorizedUVMSimulator
 from repro.uvm.engine import MAX_SPAN_PAGES
 from repro.uvm.golden import (FLOAT_FIELDS, INT_FIELDS, golden_cell,
@@ -77,6 +77,16 @@ def test_vectorized_matches_legacy(cell_id):
 
 def test_fixture_has_no_stale_cells():
     assert set(GOLDEN) == set(golden_cell_ids())
+
+
+def test_cached_learned_matches_plain_learned():
+    """The predcache round trip is invisible to the replay: every
+    learned-cached fixture is identical to its plain learned sibling."""
+    pairs = [c for c in GOLDEN if c.endswith("/learned-cached")]
+    assert pairs
+    for cell_id in pairs:
+        plain = cell_id.replace("/learned-cached", "/learned")
+        assert GOLDEN[cell_id] == GOLDEN[plain], cell_id
 
 
 def test_timeline_equivalence():
@@ -177,9 +187,70 @@ except ImportError:  # pragma: no cover - degraded environment
 
 if HAVE_HYPOTHESIS:
 
+    @settings(max_examples=30, deadline=None)
+    @given(st_.lists(
+        st_.one_of(
+            st_.tuples(st_.just("migrate"),
+                       st_.lists(st_.integers(0, 2 * ROOT_PAGES - 1),
+                                 min_size=1, max_size=40, unique=True)),
+            st_.tuples(st_.just("evict"),
+                       st_.integers(0, 2 * ROOT_PAGES - 1)),
+            st_.tuples(st_.just("fault"),
+                       st_.integers(0, 2 * ROOT_PAGES - 1)),
+        ), min_size=1, max_size=80))
+    def test_tree_adapter_matches_dict_counts(ops):
+        """Vectorized per-level count arrays vs the legacy dict on random
+        migrate/evict/fault streams: node occupancy and the on_fault extras
+        (pages AND order) must agree after every operation."""
+        from repro.uvm.engine import _TreeAdapter
+
+        span = 2 * ROOT_PAGES
+        arrival = np.full(span, np.inf)
+        resident = set()
+        legacy = TreePrefetcher()
+        adapter = _TreeAdapter(TreePrefetcher(), arrival, 0)
+
+        def _migrate(pages):
+            for q in pages:
+                resident.add(q)
+                arrival[q] = 0.0
+            legacy.on_migrate(list(pages))
+            adapter.on_migrate(list(pages))
+
+        for op in ops:
+            if op[0] == "migrate":
+                fresh = [q for q in op[1] if q not in resident]
+                if fresh:
+                    _migrate(fresh)
+            elif op[0] == "evict":
+                q = op[1]
+                if q in resident:
+                    resident.discard(q)
+                    arrival[q] = np.inf
+                    legacy.on_evict(q)
+                    adapter.on_evict(q)
+            else:                        # fault, replaying engine order:
+                q = op[1]                # insert + migrate, then on_fault
+                if q in resident:
+                    continue
+                _migrate([q])
+                want = legacy.on_fault(0, q, resident)
+                got = adapter.on_fault(0, q, resident)
+                assert [int(x) for x in got] == want
+                if want:
+                    _migrate(want)       # the engine schedules the extras
+            for lv in range(TreePrefetcher.LEVELS + 1):
+                nz = {i: int(c) for i, c in enumerate(adapter.counts[lv])
+                      if c}
+                dic = {node: int(c)
+                       for (level, node), c in legacy.counts.items()
+                       if level == lv and c}
+                assert nz == dic, f"level {lv} counts diverged"
+
     @settings(max_examples=25, deadline=None)
     @given(st_.lists(st_.integers(0, 600), min_size=20, max_size=300),
-           st_.sampled_from(["none", "block", "tree", "learned", "oracle"]),
+           st_.sampled_from(["none", "block", "tree", "learned",
+                             "learned-cached", "oracle"]),
            st_.sampled_from([None, 48, 200]))
     def test_property_equivalence(pages, pf_name, cap):
         from repro.uvm.golden import make_prefetcher
