@@ -37,6 +37,19 @@ QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
 # costs a busy slot.  (run.py --workers overrides.)
 SWEEP_WORKERS = int(os.environ.get("REPRO_SWEEP_WORKERS", "1"))
 
+# replay backend for every UVM sweep cell (run.py --backend overrides):
+# "auto" = pallas multi-lane kernels only where they compile natively
+# (TPU, or REPRO_PALLAS_COMPILE=1 on other accelerators), the NumPy
+# engine everywhere else; cells record the backend that actually ran in
+# their rows, so fallbacks stay visible in the emitted results.
+# Validated here so a typo fails at import, not mid-sweep after the
+# training suites already burned their wall-clock.
+SWEEP_BACKEND = os.environ.get("REPRO_SWEEP_BACKEND", "auto")
+if SWEEP_BACKEND not in ("auto", "numpy", "pallas"):
+    raise ValueError(
+        f"REPRO_SWEEP_BACKEND={SWEEP_BACKEND!r}: choose auto, numpy or "
+        "pallas")
+
 ALL_BENCHMARKS = ["AddVectors", "ATAX", "Backprop", "BICG", "Hotspot", "MVT",
                   "NW", "Pathfinder", "Srad-v2", "StreamTriad", "2DCONV"]
 PREDICTOR_BENCHMARKS = ["AddVectors", "ATAX", "Backprop", "BICG", "Hotspot",
@@ -164,7 +177,7 @@ def _eval_cell(bench: str, prefetcher: str, *, prediction_us: float = 1.0,
     return SweepCell(bench=bench, prefetcher=prefetcher,
                      prediction_us=prediction_us, device_pages=device_pages,
                      window=EVAL_WINDOW, engine="vectorized",
-                     service_steps=SERVICE_STEPS)
+                     backend=SWEEP_BACKEND, service_steps=SERVICE_STEPS)
 
 
 def _run_cell(cell: SweepCell, timeline: bool = False) -> Dict:

@@ -9,9 +9,11 @@ summary CSV at the end (per-table CSVs above it).
     PYTHONPATH=src python -m benchmarks.run --emit-json BENCH_sweep.json
 
 The UVM suites (table10/table11/perf/oversub/fig10/fig12) all route through
-``repro.uvm.sweep``: simulations run on the vectorized engine, non-learned
-cells fan out over ``--workers`` processes, and completed cells persist
-under ``benchmarks/cache/sweep/`` for resume.
+``repro.uvm.sweep``: simulations run on the backend-pluggable replay core
+(``--backend {auto,numpy,pallas}``; pallas packs compatible cells into
+multi-lane kernel batches), non-learned cells fan out over ``--workers``
+processes, and completed cells persist under ``benchmarks/cache/sweep/``
+for resume.  Every sweep row records the backend that actually ran.
 """
 from __future__ import annotations
 
@@ -56,6 +58,15 @@ def main() -> None:
                     help="comma-separated suite names")
     ap.add_argument("--workers", type=int, default=None,
                     help="process fan-out for the UVM sweep suites")
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "numpy", "pallas"],
+                    help="replay backend for the UVM sweep suites "
+                         "(pallas = multi-lane kernel batches; auto "
+                         "picks pallas only where the lanes compile "
+                         "natively — TPU, or REPRO_PALLAS_COMPILE=1 on "
+                         "other accelerators; every result row records "
+                         "the backend that actually ran, so per-cell "
+                         "fallbacks are visible)")
     ap.add_argument("--emit-json", default=None, metavar="PATH",
                     help="write per-suite wall-clock rows as JSON so "
                          "future PRs can diff the perf trajectory")
@@ -63,6 +74,8 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
     if args.workers is not None:
         common.SWEEP_WORKERS = args.workers
+    if args.backend is not None:
+        common.SWEEP_BACKEND = args.backend
 
     t_start = time.time()
     summary = []
@@ -89,6 +102,7 @@ def main() -> None:
             "version": 1,
             "quick": common.QUICK,
             "workers": common.SWEEP_WORKERS,
+            "backend": common.SWEEP_BACKEND,
             "total_seconds": time.time() - t_start,
             "rows": [{"suite": name, "seconds": us / 1e6, "status": status}
                      for name, us, status in summary],

@@ -17,8 +17,15 @@ from repro.kernels.hlsh_attention import hlsh_attention_pallas
 from repro.kernels.int4_matmul import int4_matmul_pallas
 
 
-def _default_interpret() -> bool:
+def default_interpret() -> bool:
+    """Interpret-mode default shared by every Pallas entry point in the
+    repo — the kernels below and the UVM multi-lane replay backend
+    (``repro.uvm.backends.pallas_backend``): interpret everywhere except
+    on a real TPU backend, where kernels compile through Mosaic."""
     return jax.default_backend() != "tpu"
+
+
+_default_interpret = default_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",

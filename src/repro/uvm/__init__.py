@@ -6,18 +6,29 @@ baseline), delayed migration / zero-copy policies, LRU eviction under
 oversubscription, and the paper's evaluation metrics (page hit rate, PCIe
 traffic, prefetcher accuracy/coverage, Unity).
 
-Two equivalent replay engines
+Backend-pluggable replay core
 -----------------------------
-* ``UVMSimulator`` — the reference per-access Python loop (simple, slow).
-* ``VectorizedUVMSimulator`` — the batched engine: NumPy-chunked replay that
-  skips runs of plain hits and only drops to scalar code on the
-  fault/late/prefetch/eviction event subsequence.  It is **bit-identical**
-  to the reference on every integer counter and float accumulator; the
-  guarantee is pinned by ``tests/test_uvm_golden.py`` against recorded
+The replay stack has three layers (see ``repro.uvm.backends/README.md``):
+
+* ``repro.uvm.replay_core`` — the backend-agnostic chunked state machine
+  (pure array program) and the narrow ``ReplayBackend`` interface.
+* ``repro.uvm.backends`` — ``legacy`` (the reference per-access Python
+  loop, accepts anything), ``numpy`` (NumPy-chunked replay,
+  **bit-identical** to the reference), and ``pallas`` (jax_pallas
+  multi-lane kernel packing many cells into one accelerator launch;
+  integer counters exact, floats within the golden tolerance).  All
+  backends are pinned by ``tests/test_uvm_golden.py`` against recorded
   fixtures (regenerate after an intentional timing-model change with
   ``PYTHONPATH=src python scripts/regen_uvm_golden.py``).
-* ``simulate(trace, prefetcher, config, engine=...)`` picks an engine
-  (``auto`` → vectorized with automatic legacy fallback).
+* the scheduler in ``repro.uvm.sweep`` — groups packable sweep cells into
+  lane batches, dispatches to the selected backend
+  (``--backend {numpy,pallas,auto}``), falls back per cell to the NumPy
+  path for anything unpackable, and records the backend that actually
+  ran in every result row.
+
+``UVMSimulator`` is the reference loop; ``VectorizedUVMSimulator`` is a
+drop-in equivalent on the numpy backend; ``simulate(trace, prefetcher,
+config, engine=..., backend=...)`` picks both per cell.
 
 Batched sweeps
 --------------
@@ -42,6 +53,8 @@ write-rename + training lock), and across runs — reuses the cached array.
 from repro.uvm.config import UVMConfig
 from repro.uvm.engine import VectorizedUVMSimulator, simulate
 from repro.uvm.metrics import unity
+from repro.uvm.replay_core import (ReplayBackend, ReplayRequest,
+                                   available_backends, get_backend)
 from repro.uvm.prefetchers import (
     NoPrefetcher, TreePrefetcher, LearnedPrefetcher, OraclePrefetcher,
     Prefetcher,
@@ -51,6 +64,7 @@ from repro.uvm.simulator import UVMSimulator, UVMStats
 __all__ = [
     "UVMConfig", "UVMSimulator", "UVMStats", "VectorizedUVMSimulator",
     "simulate", "unity",
+    "ReplayBackend", "ReplayRequest", "available_backends", "get_backend",
     "Prefetcher", "NoPrefetcher", "TreePrefetcher", "LearnedPrefetcher",
     "OraclePrefetcher",
 ]

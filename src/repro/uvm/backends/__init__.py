@@ -1,0 +1,25 @@
+"""Replay backends — implementations of ``repro.uvm.replay_core.ReplayBackend``.
+
+Importing this package registers the built-in backends:
+
+* ``legacy`` — the reference per-access Python loop (accepts everything).
+* ``numpy``  — the NumPy-chunked replay core (bit-identical to legacy for
+  the supported prefetcher types and sane page spans).
+* ``pallas`` — the jax_pallas multi-lane engine: many compatible cells
+  packed into one lane-batched kernel (integer counters exact,
+  cycles/pcie_bytes within the golden tolerance).
+
+See ``README.md`` in this directory for the layer diagram, the backend
+contract, and how to add a backend.
+"""
+from repro.uvm.replay_core import register_backend
+from repro.uvm.backends.legacy_backend import LegacyReplayBackend
+from repro.uvm.backends.numpy_backend import NumpyReplayBackend
+from repro.uvm.backends.pallas_backend import PallasReplayBackend
+
+LEGACY = register_backend(LegacyReplayBackend())
+NUMPY = register_backend(NumpyReplayBackend())
+PALLAS = register_backend(PallasReplayBackend())
+
+__all__ = ["LegacyReplayBackend", "NumpyReplayBackend",
+           "PallasReplayBackend", "LEGACY", "NUMPY", "PALLAS"]

@@ -1,0 +1,30 @@
+"""The NumPy-chunked replay core as a replay backend.
+
+This is the original ``VectorizedUVMSimulator`` array program (moved into
+``repro.uvm.replay_core.replay_chunked``) behind the ``ReplayBackend``
+interface, unchanged: bit-identical to the legacy loop for every supported
+prefetcher type, pinned by ``tests/test_uvm_golden.py``.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.uvm.replay_core import (SUPPORTED_PREFETCHERS, ReplayBackend,
+                                   ReplayRequest, replay_chunked, span_ok)
+from repro.uvm.simulator import UVMStats
+
+
+class NumpyReplayBackend(ReplayBackend):
+    name = "numpy"
+
+    def can_replay(self, request: ReplayRequest) -> bool:
+        return (type(request.prefetcher) in SUPPORTED_PREFETCHERS
+                and span_ok(request))
+
+    def replay(self, requests: Sequence[ReplayRequest]) -> List[UVMStats]:
+        out = []
+        for req in requests:
+            stats = replay_chunked(req)
+            stats.backend = self.name
+            out.append(stats)
+        return out

@@ -1,0 +1,455 @@
+"""jax_pallas multi-lane replay backend: GPU-resident grid replay.
+
+Packs many compatible sweep cells into ONE lane-batched ``pl.pallas_call``:
+one lane per (trace, config) cell, traces padded to the longest lane, and
+per-lane residency/arrival/LRU-stamp state held as device arrays.  The
+kernel grid iterates over lanes, so on an accelerator every cell of a
+sweep batch replays concurrently; on CPU hosts the kernel runs in
+interpret mode (exact same jaxpr, executed through XLA-CPU), which is what
+CI exercises under ``JAX_PLATFORMS=cpu``.
+
+Packable cells
+--------------
+A lane replays the *full* legacy timing model — far-fault service windows,
+PCIe queueing, batch-DMA block prefetches, MSHR stalls, and LRU eviction
+under oversubscription with in-flight-victim reinsertion — for the
+prefetchers whose per-access behavior is pure array arithmetic:
+``NoPrefetcher`` (on-demand) and ``BlockPrefetcher`` (64 KB basic-block
+batch DMA).  Stateful prefetchers (tree/learned/oracle) keep their exact
+NumPy adapters; the scheduler in ``repro.uvm.sweep`` routes those cells to
+the ``numpy`` backend per cell, and the result rows record which backend
+actually ran.
+
+Exactness
+---------
+Every float chain in the kernel replays the legacy loop's IEEE-754
+operation order in float64 (the lane functions are traced under
+``jax.experimental.enable_x64``), including a branch-free emulation of
+CPython's float floor-division in the fault-service window computation.
+Integer counters are therefore exact and cycles/pcie_bytes agree with the
+legacy engine to well inside the golden 1e-6 relative tolerance (bit-equal
+in practice); ``tests/test_uvm_golden.py`` pins this per golden cell and
+``tests/test_backends.py`` property-tests random lane batches against
+independent NumPy replays.
+
+The per-lane state (arrival/stamp/pfu spans) is carried through a
+``lax.fori_loop`` over trace positions — the functional-carry form keeps
+the kernel identical between interpret mode and compiled execution.  A
+device-native Mosaic/Triton lowering would move the span state into
+scratch refs; the lane packing, parameter blocks, and stats layout here
+are already shaped for that (see ``README.md``).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.traces.trace import BASIC_BLOCK_PAGES, ROOT_PAGES
+from repro.uvm.prefetchers import BlockPrefetcher, NoPrefetcher
+from repro.uvm.replay_core import (ReplayBackend, ReplayRequest,
+                                   cycles_per_access, dense_bounds)
+from repro.uvm.simulator import UVMStats
+
+#: prefetchers a pallas lane can replay entirely in-kernel
+PACKABLE_PREFETCHERS = (NoPrefetcher, BlockPrefetcher)
+
+#: hard per-lane page-span ceiling (beyond it the dense lane state would
+#: dwarf the batch; such cells fall back to the NumPy path per cell)
+MAX_LANE_SPAN_PAGES = 1 << 20
+
+#: lane-batch shape budgets: lanes per kernel launch, total padded state
+#: (lanes x span pages) and total padded trace positions (lanes x t_max)
+MAX_LANES_PER_BATCH = 32
+MAX_BATCH_STATE_PAGES = 1 << 23
+MAX_BATCH_ACCESSES = 1 << 24
+
+#: per-lane trace-length ceiling.  Must stay well below int32 range /
+#: the max per-access touch-counter growth (1 demand + 15 block extras =
+#: 16, plus a retouch): the kernel's LRU stamps are int32, so a lane of
+#: 2^24 accesses tops out near 2^28 touches — 8x headroom under 2^31.
+MAX_LANE_ACCESSES = MAX_BATCH_ACCESSES
+
+_N_FPARAMS = 8       # cpa, page_tx, far_fault, ptw, pcie_lat, pfo, extra, page_size
+_N_IPARAMS = 4       # n_accesses, device_pages(-1=uncapped), mshr, has_block
+STAT_FIELDS = ("cycles", "hits", "late", "faults", "prefetch_issued",
+               "prefetch_used", "pages_migrated", "pages_evicted",
+               "pcie_bytes")
+
+
+def _bucket(n: int, floor: int) -> int:
+    """Round up to the next power of two (>= floor) so repeated batches of
+    similar shape reuse one compiled kernel."""
+    b = max(floor, 1)
+    while b < n:
+        b <<= 1
+    return b
+
+
+@functools.lru_cache(maxsize=None)
+def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
+                    interpret: bool):
+    """Build (and cache) the jitted multi-lane replay for one batch shape."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    blk_pages = BASIC_BLOCK_PAGES
+    i32 = jnp.int32
+
+    def kernel(pages_ref, fparams_ref, iparams_ref, out_ref):
+        INF = jnp.float64(jnp.inf)
+        IMAX = jnp.int32(np.iinfo(np.int32).max)
+        pages = pages_ref[0]
+        fp = fparams_ref[0]
+        cpa, page_tx, ff, ptw, pcie_lat = fp[0], fp[1], fp[2], fp[3], fp[4]
+        pfo, extra_lat, page_size = fp[5], fp[6], fp[7]
+        n = iparams_ref[0, 0]
+        cap = iparams_ref[0, 1]
+        mshr = iparams_ref[0, 2]
+        has_block = iparams_ref[0, 3] > 0
+        track_lru = cap >= 0
+
+        def step(t, carry):
+            (arrival, stamp, pfu, buf, clock, pcie_free, counter, resident,
+             nbuf, hits, late, faults, issued, used, migrated, evicted,
+             wbacks) = carry
+
+            p = pages[t]
+            clock = clock + cpa
+            a = arrival[p]
+            is_res = a < INF
+            is_hit = is_res & (a <= clock)
+            is_late = is_res & ~is_hit
+            is_fault = ~is_res
+            hits = hits + is_hit.astype(i32)
+            late = late + is_late.astype(i32)
+            faults = faults + is_fault.astype(i32)
+
+            # prefetched-but-unused consumption (False on faults by
+            # construction: eviction clears the flag with the residency)
+            was_pfu = pfu[p]
+            used = used + was_pfu.astype(i32)
+            pfu = pfu.at[p].set(False)
+
+            # far-fault service window.  ``(clock // ff)`` in the legacy
+            # loop is CPython float floor-division: fmod-based, so the
+            # quotient is exact even when clock/ff rounds across an
+            # integer — replay that algorithm branch-free (args positive).
+            mod = jax.lax.rem(clock, ff)
+            div = (clock - mod) / ff
+            fd = jnp.floor(div)
+            fd = jnp.where(div - fd > 0.5, fd + 1.0, fd)
+            ready = (fd + 2.0) * ff + ptw
+            start = jnp.maximum(ready, pcie_free)
+            arr_v = start + pcie_lat + page_tx
+
+            # demand insert (fault) / LRU retouch (hit, late): both stamp
+            # the page at the current touch counter
+            arrival = arrival.at[p].set(jnp.where(is_fault, arr_v, a))
+            stamp = stamp.at[p].set(counter)
+            counter = counter + 1
+            resident = resident + is_fault.astype(i32)
+            migrated = migrated + is_fault.astype(i32)
+            pcie_free = jnp.where(is_fault, start + page_tx, pcie_free)
+
+            # outstanding-stall push: a fault waits on its own migration,
+            # a late access on the in-flight page's arrival (<=1 per step,
+            # so the buffer never overflows mshr+1 before the trim below)
+            push = is_fault | is_late
+            push_val = jnp.where(is_fault, arr_v, a)
+            slot = jnp.argmax(buf)               # some empty (+inf) slot
+            buf = buf.at[slot].set(jnp.where(push, push_val, buf[slot]))
+            nbuf = nbuf + push.astype(i32)
+
+            # block prefetcher on_fault: batch-DMA the faulting 64 KB
+            # basic block's non-resident pages (the demand page is already
+            # in flight, so the window compare excludes it)
+            blk = (p // blk_pages) * blk_pages
+            win = jax.lax.dynamic_slice(arrival, (blk,), (blk_pages,))
+            mask = (win == INF) & is_fault & has_block
+            k = jnp.sum(mask, dtype=i32)
+            kf = k.astype(jnp.float64)
+            ex_ready = clock + pfo + extra_lat
+            ex_start = jnp.maximum(pcie_free, ex_ready)
+            end = ex_start + kf * page_tx
+            ex_arr = end + pcie_lat              # batch completes as one DMA
+            arrival = jax.lax.dynamic_update_slice(
+                arrival, jnp.where(mask, ex_arr, win), (blk,))
+            pwin = jax.lax.dynamic_slice(pfu, (blk,), (blk_pages,))
+            pfu = jax.lax.dynamic_update_slice(pfu, pwin | mask, (blk,))
+            swin = jax.lax.dynamic_slice(stamp, (blk,), (blk_pages,))
+            rank = counter + jnp.cumsum(mask, dtype=i32) - 1
+            stamp = jax.lax.dynamic_update_slice(
+                stamp, jnp.where(mask, rank, swin), (blk,))
+            counter = counter + k
+            resident = resident + k
+            migrated = migrated + k
+            issued = issued + k
+            pcie_free = jnp.where(k > 0, end, pcie_free)
+
+            # MSHR pressure: beyond ``mshr`` outstanding stalls the clock
+            # jumps to the oldest completion (single pop suffices: pushes
+            # are <=1 per access and the buffer is trimmed every access)
+            pop = nbuf > mshr
+            mi = jnp.argmin(buf)
+            clock = jnp.where(pop, jnp.maximum(clock, buf[mi]), clock)
+            buf = buf.at[mi].set(jnp.where(pop, INF, buf[mi]))
+            nbuf = nbuf - pop.astype(i32)
+
+            # LRU eviction under oversubscription: pop the minimum touch
+            # stamp among resident pages; an in-flight victim is reinserted
+            # at MRU and stops the loop (exact OrderedDict order — stamps
+            # are unique, so argmin is the heap pop)
+            def econd(c):
+                return c[0] & (c[5] > cap)
+
+            def ebody(c):
+                (_, arrival, stamp, pfu, counter, resident, evicted, wbacks,
+                 pcie_free) = c
+                vi = jnp.argmin(jnp.where(arrival < INF, stamp, IMAX))
+                v_arr = arrival[vi]
+                in_flight = v_arr > clock
+                stamp = stamp.at[vi].set(
+                    jnp.where(in_flight, counter, stamp[vi]))
+                counter = counter + in_flight.astype(i32)
+                arrival = arrival.at[vi].set(
+                    jnp.where(in_flight, v_arr, INF))
+                pfu = pfu.at[vi].set(jnp.where(in_flight, pfu[vi], False))
+                ev = (~in_flight).astype(i32)
+                resident = resident - ev
+                evicted = evicted + ev
+                # writeback traffic (half the evictions dirty)
+                wb = (~in_flight) & (evicted % 2 == 0)
+                wbacks = wbacks + wb.astype(i32)
+                pcie_free = pcie_free + jnp.where(wb, page_tx, 0.0)
+                return (~in_flight, arrival, stamp, pfu, counter, resident,
+                        evicted, wbacks, pcie_free)
+
+            (_, arrival, stamp, pfu, counter, resident, evicted, wbacks,
+             pcie_free) = jax.lax.while_loop(
+                econd, ebody,
+                (track_lru, arrival, stamp, pfu, counter, resident, evicted,
+                 wbacks, pcie_free))
+
+            return (arrival, stamp, pfu, buf, clock, pcie_free, counter,
+                    resident, nbuf, hits, late, faults, issued, used,
+                    migrated, evicted, wbacks)
+
+        zero = jnp.int32(0)
+        init = (
+            jnp.full((span,), jnp.inf, dtype=jnp.float64),   # arrival
+            jnp.zeros((span,), dtype=i32),                   # LRU stamps
+            jnp.zeros((span,), dtype=jnp.bool_),             # pfu flags
+            jnp.full((buf_len,), jnp.inf, dtype=jnp.float64),  # MSHR buffer
+            jnp.float64(0.0), jnp.float64(0.0),              # clock, pcie_free
+            zero, zero, zero,                  # counter, resident, nbuf
+            zero, zero, zero,                  # hits, late, faults
+            zero, zero, zero, zero, zero,      # issued, used, migr, evic, wb
+        )
+        (arrival, stamp, pfu, buf, clock, pcie_free, counter, resident,
+         nbuf, hits, late, faults, issued, used, migrated, evicted,
+         wbacks) = jax.lax.fori_loop(0, n, step, init)
+
+        # drain: every outstanding stall resolves (max over the buffer is
+        # the max over any heap-pop order)
+        tail = jnp.max(jnp.where(buf < jnp.inf, buf, -jnp.inf))
+        clock = jnp.where(nbuf > 0, jnp.maximum(clock, tail), clock)
+
+        out_ref[0, 0] = clock
+        out_ref[0, 1] = hits.astype(jnp.float64)
+        out_ref[0, 2] = late.astype(jnp.float64)
+        out_ref[0, 3] = faults.astype(jnp.float64)
+        out_ref[0, 4] = issued.astype(jnp.float64)
+        out_ref[0, 5] = used.astype(jnp.float64)
+        out_ref[0, 6] = migrated.astype(jnp.float64)
+        out_ref[0, 7] = evicted.astype(jnp.float64)
+        out_ref[0, 8] = ((migrated + wbacks).astype(jnp.float64) * page_size)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(n_lanes,),
+        in_specs=[
+            pl.BlockSpec((1, t_max), lambda l: (l, 0)),
+            pl.BlockSpec((1, _N_FPARAMS), lambda l: (l, 0)),
+            pl.BlockSpec((1, _N_IPARAMS), lambda l: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, len(STAT_FIELDS)), lambda l: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_lanes, len(STAT_FIELDS)),
+                                       jnp.float64),
+        interpret=interpret,
+    )
+    return jax.jit(call)
+
+
+def _lane_shape(request: ReplayRequest) -> Tuple[int, int]:
+    lo, hi = dense_bounds(request.trace, request.prefetcher)
+    return len(request.trace.pages), hi - lo
+
+
+class PallasReplayBackend(ReplayBackend):
+    name = "pallas"
+    experimental = True   # runtime failures degrade down the chain
+
+    def is_native(self) -> bool:
+        """Native only when jax is already up on an accelerator the lanes
+        actually *compile* for (the same :func:`_interpret_mode` policy:
+        TPU, or ``REPRO_PALLAS_COMPILE=1`` elsewhere): ``auto``
+        resolution must not drag jax into NumPy-only sweep workers, and
+        interpret-mode lanes lose to the NumPy engine on any host."""
+        import sys
+        jax = sys.modules.get("jax")
+        if jax is None:
+            return False
+        try:
+            if jax.default_backend() == "cpu":
+                return False
+        except Exception:  # pragma: no cover - uninitialized backends
+            return False
+        return not _interpret_mode()
+
+    # ------------------------------------------------------------------
+    def can_replay(self, request: ReplayRequest) -> bool:
+        if type(request.prefetcher) not in PACKABLE_PREFETCHERS:
+            return False
+        if request.record_timeline:
+            return False          # per-transfer timelines stay host-side
+        n = len(request.trace.pages)
+        if n == 0 or n > MAX_LANE_ACCESSES:
+            return False          # int32 stamp/counter headroom (above)
+        lo, hi = dense_bounds(request.trace, request.prefetcher)
+        span = hi - lo
+        return lo >= 0 and span <= min(request.max_span_pages,
+                                       MAX_LANE_SPAN_PAGES)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def fits_batch(shapes: Sequence[Tuple[int, int]],
+                   shape: Tuple[int, int]) -> bool:
+        """True if a lane of ``shape`` = (length, span) fits a batch that
+        already holds lanes of ``shapes`` under the lane-count, padded
+        state, and padded access budgets.  The scheduler uses this to
+        flush batches incrementally instead of materializing whole grids.
+        """
+        n = len(shapes) + 1
+        t = max([shape[0]] + [s[0] for s in shapes])
+        span = max([shape[1]] + [s[1] for s in shapes])
+        return (n <= MAX_LANES_PER_BATCH
+                and n * span <= MAX_BATCH_STATE_PAGES
+                and n * t <= MAX_BATCH_ACCESSES)
+
+    def pack_lanes(self, requests: Sequence[ReplayRequest]
+                   ) -> List[List[int]]:
+        """Group request indices into lane batches.
+
+        Cells are sorted by (span, length) so lanes of one batch pad to
+        similar shapes, then greedily packed under :meth:`fits_batch`'s
+        budgets.  Deterministic in the request order.
+        """
+        order = sorted(range(len(requests)),
+                       key=lambda i: _lane_shape(requests[i]), reverse=True)
+        batches: List[List[int]] = []
+        cur: List[int] = []
+        cur_shapes: List[Tuple[int, int]] = []
+        for i in order:
+            shape = _lane_shape(requests[i])
+            if cur and not self.fits_batch(cur_shapes, shape):
+                batches.append(cur)
+                cur, cur_shapes = [], []
+            cur.append(i)
+            cur_shapes.append(shape)
+        if cur:
+            batches.append(cur)
+        return batches
+
+    # ------------------------------------------------------------------
+    def replay(self, requests: Sequence[ReplayRequest]) -> List[UVMStats]:
+        for req in requests:
+            if not self.can_replay(req):
+                raise ValueError(
+                    f"request not packable into pallas lanes "
+                    f"({type(req.prefetcher).__name__}); route it through "
+                    "the numpy backend")
+        out: List[UVMStats] = [None] * len(requests)  # type: ignore
+        for batch in self.pack_lanes(requests):
+            for i, stats in zip(batch,
+                                self._replay_batch([requests[i]
+                                                    for i in batch])):
+                out[i] = stats
+        return out
+
+    # ------------------------------------------------------------------
+    def _replay_batch(self, requests: Sequence[ReplayRequest]
+                      ) -> List[UVMStats]:
+        """Replay one lane batch: pad, launch, unpack."""
+        import jax  # noqa: F401  (jax must import before enable_x64)
+        from jax.experimental import enable_x64
+
+        lanes = len(requests)
+        shapes = [_lane_shape(r) for r in requests]
+        t_max = _bucket(max(t for t, _ in shapes), 64)
+        span = _bucket(max(s for _, s in shapes), ROOT_PAGES)
+        buf_len = max(int(r.config.mshr_entries) for r in requests) + 1
+        n_lanes = _bucket(lanes, 1)
+
+        pages = np.zeros((n_lanes, t_max), dtype=np.int32)
+        fparams = np.zeros((n_lanes, _N_FPARAMS), dtype=np.float64)
+        iparams = np.full((n_lanes, _N_IPARAMS), -1, dtype=np.int32)
+        iparams[:, 0] = 0                      # padding lanes replay nothing
+        for l, req in enumerate(requests):
+            trace, cfg = req.trace, req.config
+            req.prefetcher.reset()
+            lo, _ = dense_bounds(trace, req.prefetcher)
+            pages[l, :len(trace.pages)] = (
+                np.asarray(trace.pages, dtype=np.int64) - lo)
+            fparams[l] = (
+                cycles_per_access(trace, cfg), cfg.page_transfer_cycles,
+                cfg.far_fault_cycles, cfg.page_table_walk_cycles,
+                cfg.pcie_latency_cycles, cfg.prefetch_overhead_cycles,
+                req.prefetcher.extra_latency_cycles, cfg.page_size)
+            iparams[l] = (
+                len(trace.pages),
+                -1 if cfg.device_pages is None else int(cfg.device_pages),
+                int(cfg.mshr_entries),
+                1 if isinstance(req.prefetcher, BlockPrefetcher) else 0)
+
+        interpret = _interpret_mode()
+        with enable_x64():
+            fn = _lane_replay_fn(n_lanes, t_max, span, buf_len, interpret)
+            raw = np.asarray(fn(pages, fparams, iparams))
+
+        out = []
+        for l, req in enumerate(requests):
+            row = raw[l]
+            stats = UVMStats(
+                name=req.trace.name,
+                prefetcher=req.prefetcher.name,
+                n_accesses=len(req.trace.pages),
+                n_instructions=req.trace.n_instructions,
+                cycles=float(row[0]),
+                hits=int(row[1]),
+                late=int(row[2]),
+                faults=int(row[3]),
+                prefetch_issued=int(row[4]),
+                prefetch_used=int(row[5]),
+                pages_migrated=int(row[6]),
+                pages_evicted=int(row[7]),
+                pcie_bytes=float(row[8]),
+                zero_copy_bytes=0.0,
+                timeline=None,
+            )
+            stats.backend = self.name
+            out.append(stats)
+        return out
+
+
+def _interpret_mode() -> bool:
+    """Shared repo policy (``repro.kernels.ops.default_interpret``):
+    interpret everywhere except on a real TPU.  ``REPRO_PALLAS_COMPILE=1``
+    forces native compilation for experiments on other accelerators."""
+    if os.environ.get("REPRO_PALLAS_COMPILE", "0") == "1":
+        return False
+    from repro.kernels.ops import default_interpret
+    return default_interpret()

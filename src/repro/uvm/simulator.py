@@ -49,6 +49,10 @@ class UVMStats:
     pcie_bytes: float
     zero_copy_bytes: float
     timeline: Optional[np.ndarray] = None   # (cycle, bytes) per transfer
+    #: replay backend that actually produced these stats ("legacy" /
+    #: "numpy" / "pallas"); set by the backend layer so sweep rows can
+    #: surface silent fallbacks.  None when a simulator was run directly.
+    backend: Optional[str] = None
 
     @property
     def ipc(self) -> float:

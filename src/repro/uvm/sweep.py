@@ -1,7 +1,7 @@
-"""Batched UVM sweep orchestrator.
+"""Batched UVM sweep orchestrator + backend scheduler.
 
-Runs (trace × prefetcher × config) grids through the vectorized replay
-engine: cached trace generation, optional process fan-out, structured
+Runs (trace × prefetcher × config) grids through the backend-pluggable
+replay core: cached trace generation, optional process fan-out, structured
 JSON/CSV results, and resumability (each completed cell is persisted, so an
 interrupted sweep picks up where it stopped).
 
@@ -17,7 +17,25 @@ CLI::
     PYTHONPATH=src python -m repro.uvm.sweep \
         --benches ATAX,BICG,Pathfinder,Hotspot \
         --prefetchers none,tree,learned,oracle \
-        --out results/ --workers 8
+        --backend pallas --out results/ --workers 8
+
+Backend scheduling
+------------------
+
+Each cell names a replay backend (``--backend {numpy,pallas,auto}``; also
+the ``REPRO_SWEEP_BACKEND`` env var).  The scheduler groups pending
+pallas-eligible cells — on-demand/block cells whose page span fits a lane —
+into multi-lane batches by span/length compatibility and replays each
+batch in ONE ``jax_pallas`` kernel launch (one lane per cell, padded to
+the longest trace; see ``repro.uvm.backends.pallas_backend``).  Everything
+unpackable falls back *per cell* down the ``pallas → numpy → legacy``
+chain, and every result row records the backend that actually ran in its
+``backend`` column, so fallbacks are visible instead of silently reading
+as covered.  ``auto`` resolves to the pallas lanes only when jax is
+already up on a platform the lanes compile natively for (TPU, or
+``REPRO_PALLAS_COMPILE=1`` on other accelerators); everywhere else —
+including CPU hosts, where the lanes would run in interpret mode — it is
+the NumPy engine.
 
 Train-once learned cells
 ------------------------
@@ -25,7 +43,8 @@ Train-once learned cells
 The ``learned`` prefetcher needs the paper's predictor service (jax;
 expensive to train), but its predictions depend only on the *trace content*
 and the *predictor config* — not on the replay knobs (``prediction_us``,
-``device_frac``/``device_pages``, engine) a sensitivity grid varies.
+``device_frac``/``device_pages``, engine, backend) a sensitivity grid
+varies.
 :func:`make_prefetcher` therefore routes predictions through
 ``repro.uvm.predcache``: a grid trains **once per (trace, model) pair** and
 every other learned cell of the grid reuses the cached array, in-process
@@ -52,13 +71,14 @@ from __future__ import annotations
 import argparse
 import csv
 import dataclasses
+import functools
 import hashlib
 import json
 import multiprocessing
 import os
 import sys
 import time
-from typing import Dict, Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -68,19 +88,27 @@ from repro.uvm.engine import simulate
 from repro.uvm.prefetchers import (BlockPrefetcher, NoPrefetcher,
                                    OraclePrefetcher, Prefetcher,
                                    TreePrefetcher)
+from repro.uvm.replay_core import (ReplayRequest, backend_chain,
+                                   dispatch as replay_dispatch, get_backend)
+from repro.uvm.simulator import UVMStats
 
 PREFETCHERS = ("none", "block", "tree", "learned", "oracle")
+BACKENDS = ("auto", "numpy", "pallas")
 
 #: bump on any intentional change to the timing model, trace generators,
 #: prediction pipeline, or row schema — invalidates persisted sweep cells
 #: and cached traces so a resumed sweep never mixes pre- and post-change
-#: numbers (v2: batched cls/conf inference path for learned predictions)
-SWEEP_VERSION = 2
+#: numbers (v3: backend-pluggable replay core — cells carry a ``backend``
+#: axis and rows record the backend that actually ran)
+SWEEP_VERSION = 3
 
-#: columns of the structured results, in CSV order
+#: columns of the structured results, in CSV order (``engine`` is the
+#: requested replay style, ``backend`` the implementation that actually
+#: ran the cell: legacy / numpy / pallas)
 ROW_FIELDS = [
     "bench", "prefetcher", "scale", "seed", "window", "prediction_us",
-    "device_pages", "device_frac", "engine", "n_accesses", "n_instructions",
+    "device_pages", "device_frac", "engine", "backend", "n_accesses",
+    "n_instructions",
     "cycles", "ipc", "hits", "late", "faults", "hit_rate", "prefetch_issued",
     "prefetch_used", "accuracy", "coverage", "unity", "pages_migrated",
     "pages_evicted", "pcie_bytes", "seconds",
@@ -100,6 +128,7 @@ class SweepCell:
     device_pages: Optional[int] = None  # absolute capacity, or ...
     device_frac: Optional[float] = None  # ... fraction of the working set
     engine: str = "auto"
+    backend: str = "auto"               # numpy | pallas | auto
     service_steps: int = 150            # learned-predictor training steps
 
     def to_dict(self) -> Dict:
@@ -118,6 +147,7 @@ def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
                 prediction_us: Sequence[float] = (1.0,),
                 device_fracs: Sequence[Optional[float]] = (None,),
                 engine: str = "auto",
+                backend: str = "auto",
                 service_steps: int = 150) -> List[SweepCell]:
     """Cartesian product of the sweep axes, in deterministic order."""
     cells = []
@@ -132,7 +162,7 @@ def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
                                     bench=bench, prefetcher=pf, scale=scale,
                                     seed=seed, window=window,
                                     prediction_us=us, device_frac=frac,
-                                    engine=engine,
+                                    engine=engine, backend=backend,
                                     service_steps=service_steps))
     return cells
 
@@ -222,14 +252,15 @@ def make_prefetcher(cell: SweepCell, trace: Trace, config: UVMConfig,
     raise ValueError(f"unknown prefetcher {cell.prefetcher!r}")
 
 
-def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
-                  trace: Optional[Trace] = None,
-                  prefetcher: Optional[Prefetcher] = None,
-                  record_timeline: bool = False) -> Dict:
-    """Run one cell and return its structured row.  ``trace`` /
-    ``prefetcher`` overrides let callers inject pre-built objects (e.g. a
-    LearnedPrefetcher sharing one trained service across cells)."""
-    t0 = time.time()
+def prepare_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
+                 trace: Optional[Trace] = None,
+                 prefetcher: Optional[Prefetcher] = None):
+    """Materialize one cell's (trace, config, prefetcher, device_pages).
+
+    Shared by the per-cell path (:func:`simulate_cell`) and the lane-batch
+    scheduler, so a cell resolves to the same replay inputs no matter which
+    backend ends up running it.
+    """
     if trace is None:
         trace = load_trace(cell.bench, cell.scale, cell.seed, cell.window,
                            cache_dir=cache_dir)
@@ -241,12 +272,17 @@ def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
     if prefetcher is None:
         prefetcher = make_prefetcher(cell, trace, config,
                                      cache_dir=cache_dir)
-    stats = simulate(trace, prefetcher, config, engine=cell.engine,
-                     record_timeline=record_timeline)
+    return trace, config, prefetcher, device_pages
+
+
+def _finish_row(cell: SweepCell, stats: UVMStats,
+                device_pages: Optional[int], seconds: float,
+                record_timeline: bool = False) -> Dict:
     row = cell.to_dict()
     row.pop("service_steps", None)
     row.update(
         device_pages=device_pages,
+        backend=stats.backend,
         n_accesses=stats.n_accesses,
         n_instructions=stats.n_instructions,
         cycles=stats.cycles,
@@ -263,11 +299,27 @@ def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
         pages_migrated=stats.pages_migrated,
         pages_evicted=stats.pages_evicted,
         pcie_bytes=stats.pcie_bytes,
-        seconds=time.time() - t0,
+        seconds=seconds,
     )
     if record_timeline and stats.timeline is not None:
         row["timeline"] = stats.timeline.tolist()
     return row
+
+
+def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
+                  trace: Optional[Trace] = None,
+                  prefetcher: Optional[Prefetcher] = None,
+                  record_timeline: bool = False) -> Dict:
+    """Run one cell and return its structured row.  ``trace`` /
+    ``prefetcher`` overrides let callers inject pre-built objects (e.g. a
+    LearnedPrefetcher sharing one trained service across cells)."""
+    t0 = time.time()
+    trace, config, prefetcher, device_pages = prepare_cell(
+        cell, cache_dir=cache_dir, trace=trace, prefetcher=prefetcher)
+    stats = simulate(trace, prefetcher, config, engine=cell.engine,
+                     backend=cell.backend, record_timeline=record_timeline)
+    return _finish_row(cell, stats, device_pages, time.time() - t0,
+                       record_timeline)
 
 
 def _worker(args) -> Dict:
@@ -284,11 +336,99 @@ def _init_worker(path: List[str]) -> None:
 
 
 # ---------------------------------------------------------------------------
-# orchestration: fan-out, persistence, resume
+# orchestration: lane-batch scheduling, fan-out, persistence, resume
 # ---------------------------------------------------------------------------
 
 def _cell_path(out_dir: str, cell: SweepCell) -> str:
     return os.path.join(out_dir, "cells", f"{cell.key()}.json")
+
+
+@functools.lru_cache(maxsize=1)
+def _packable_prefetcher_names() -> Tuple[str, ...]:
+    """Cheap pre-filter vocabulary for the lane scheduler, derived from
+    the pallas backend's own packable-prefetcher set so extending the
+    backend (e.g. packing tree cells) automatically widens the filter."""
+    from repro.uvm.backends.pallas_backend import PACKABLE_PREFETCHERS
+    name_to_type = {"none": NoPrefetcher, "block": BlockPrefetcher,
+                    "tree": TreePrefetcher, "oracle": OraclePrefetcher}
+    return tuple(n for n, t in name_to_type.items()
+                 if t in PACKABLE_PREFETCHERS)
+
+
+def _wants_lanes(cell: SweepCell) -> bool:
+    """True when this cell's backend chain starts at the pallas lanes (an
+    explicit ``backend="pallas"`` or ``auto`` on an accelerator host) and
+    its prefetcher can be packed at all — anything else skips
+    trace/prefetcher preparation and goes straight to the per-cell path."""
+    return (cell.engine in ("auto", "vectorized")
+            and cell.prefetcher in _packable_prefetcher_names()
+            and backend_chain(cell.backend)[0] == "pallas")
+
+
+def _run_lane_batches(cells: Sequence[SweepCell],
+                      cache_dir: Optional[str],
+                      verbose: bool = False) -> Dict[int, Dict]:
+    """Replay the pallas-eligible subset of ``cells`` as multi-lane batches.
+
+    Returns ``{position: row}`` for every cell that was packed into a
+    lane.  Batches are built incrementally and flushed as soon as the
+    backend's shape budgets fill, so at most one batch of traces is
+    resident at a time — whole-grid scheduling never materializes every
+    trace at once.  Cells the backend declines (span too large, empty
+    trace, ...) are left out of the result and flow back to the per-cell
+    pool path, which re-reads their traces from the on-disk cache and
+    keeps the ``--workers`` fan-out for them.  A runtime failure of a
+    lane batch (experimental-backend lowering faults) degrades its cells
+    to the NumPy path inline, with a warning; their rows record the
+    backend that actually ran.
+    """
+    from repro.uvm.backends.pallas_backend import _lane_shape
+
+    backend = get_backend("pallas")
+    rows: Dict[int, Dict] = {}
+    batch: List[int] = []
+    requests: List[ReplayRequest] = []
+    caps: List[Optional[int]] = []
+    shapes: List[Tuple[int, int]] = []   # (length, span) per queued lane
+
+    def _flush() -> None:
+        if not batch:
+            return
+        if verbose:
+            print(f"[sweep] pallas lanes: replaying {len(batch)} cells "
+                  "in one batch", flush=True)
+        t0 = time.time()
+        try:
+            stats = backend.replay(list(requests))
+        except Exception as e:  # pragma: no cover - backend runtime faults
+            import warnings
+            warnings.warn(f"pallas lane batch failed at runtime ({e!r}); "
+                          "replaying the affected cells on the NumPy path",
+                          RuntimeWarning)
+            stats = [replay_dispatch(r, "numpy") for r in requests]
+        per_cell = (time.time() - t0) / len(batch)
+        for i, st, cap in zip(batch, stats, caps):
+            rows[i] = _finish_row(cells[i], st, cap, per_cell)
+        batch.clear()
+        requests.clear()
+        caps.clear()
+        shapes.clear()
+
+    for i, cell in enumerate(cells):
+        trace, config, prefetcher, pages = prepare_cell(
+            cell, cache_dir=cache_dir)
+        req = ReplayRequest(trace, prefetcher, config)
+        if not backend.can_replay(req):
+            continue                     # back to the per-cell pool path
+        shape = _lane_shape(req)
+        if not backend.fits_batch(shapes, shape):
+            _flush()
+        batch.append(i)
+        requests.append(req)
+        caps.append(pages)
+        shapes.append(shape)
+    _flush()
+    return rows
 
 
 def run_sweep(cells: Sequence[SweepCell], *, out_dir: Optional[str] = None,
@@ -330,8 +470,22 @@ def run_sweep(cells: Sequence[SweepCell], *, out_dir: Optional[str] = None,
         if verbose:
             print(f"[sweep] {row['bench']}/{row['prefetcher']}"
                   f" frac={row.get('device_frac')}"
+                  f" backend={row.get('backend')}"
                   f" hit={row['hit_rate']:.3f} ipc={row['ipc']:.2f}"
                   f" ({row['seconds']:.2f}s)", flush=True)
+
+    # lane-batch scheduler: pack pallas-bound cells into multi-lane kernel
+    # launches in the parent process (they are already batched — worker
+    # fan-out would only serialize them again); whatever the backend
+    # declines falls back to the per-cell path below
+    lane_pending = [i for i in pending if _wants_lanes(cells[i])]
+    if lane_pending:
+        lane_rows = _run_lane_batches([cells[i] for i in lane_pending],
+                                      cache_dir, verbose=verbose)
+        for j, row in lane_rows.items():
+            _record(lane_pending[j], row)
+        handled = {lane_pending[j] for j in lane_rows}
+        pending = [i for i in pending if i not in handled]
 
     if pending and workers > 1:
         # fork is the cheap default, but forking a jax/XLA-initialized
@@ -420,6 +574,13 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="e.g. '0.5,0.75' (empty = no oversubscription)")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "vectorized", "legacy"])
+    ap.add_argument("--backend", default=None, choices=list(BACKENDS),
+                    help="replay backend: numpy, pallas (multi-lane "
+                         "kernel batches), or auto (pallas only where "
+                         "the lanes compile natively — TPU, or "
+                         "REPRO_PALLAS_COMPILE=1 on other accelerators; "
+                         "numpy otherwise); defaults to "
+                         "$REPRO_SWEEP_BACKEND or auto")
     ap.add_argument("--out", default=None, help="results directory")
     ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--no-resume", action="store_true")
@@ -439,13 +600,17 @@ def main(argv: Optional[List[str]] = None) -> None:
     fracs: List[Optional[float]] = [None]
     if args.device_fracs:
         fracs += [float(x) for x in args.device_fracs.split(",")]
+    backend = args.backend or os.environ.get("REPRO_SWEEP_BACKEND", "auto")
+    if backend not in BACKENDS:
+        ap.error(f"unknown backend {backend!r}; "
+                 f"choose from {','.join(BACKENDS)}")
     cells = expand_grid(
         benches, pfs,
         scales=[float(x) for x in args.scales.split(",")],
         windows=[None if x == "full" else float(x)
                  for x in args.windows.split(",")],
         prediction_us=[float(x) for x in args.prediction_us.split(",")],
-        device_fracs=fracs, engine=args.engine)
+        device_fracs=fracs, engine=args.engine, backend=backend)
     t0 = time.time()
     rows = run_sweep(cells, out_dir=args.out, workers=args.workers,
                      resume=not args.no_resume, verbose=True)
@@ -453,7 +618,8 @@ def main(argv: Optional[List[str]] = None) -> None:
     print(f"\n{len(rows)} cells in {dt:.1f}s "
           f"({sum(r['n_accesses'] for r in rows) / max(dt, 1e-9) / 1e6:.2f}"
           " M accesses/s aggregate)")
-    cols = ["bench", "prefetcher", "device_frac", "hit_rate", "ipc", "unity"]
+    cols = ["bench", "prefetcher", "device_frac", "backend", "hit_rate",
+            "ipc", "unity"]
     print(",".join(cols))
     for r in rows:
         print(",".join(f"{r[c]:.4f}" if isinstance(r[c], float) else str(r[c])

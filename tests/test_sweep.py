@@ -132,6 +132,107 @@ def test_engine_choice_is_equivalent():
     for f in ("hits", "late", "faults", "pages_migrated", "prefetch_issued"):
         assert vec[f] == legacy[f]
     assert vec["cycles"] == pytest.approx(legacy["cycles"], rel=1e-6)
+    # the backend that actually ran is recorded, never silent
+    assert vec["backend"] == "numpy"
+    assert legacy["backend"] == "legacy"
+
+
+# ---------------------------------------------------------------------------
+# backend scheduling: pallas lane batches + visible fallbacks
+# ---------------------------------------------------------------------------
+
+INT_ROW_FIELDS = ("n_accesses", "hits", "late", "faults", "prefetch_issued",
+                  "prefetch_used", "pages_migrated", "pages_evicted")
+
+
+def _backend_grid(backend):
+    return expand_grid(BENCHES, ["none", "block"], scales=[0.25],
+                       device_fracs=[None, 0.6], backend=backend)
+
+
+def test_backend_axis_distinguishes_cells():
+    keys = {c.key() for b in ("auto", "numpy", "pallas")
+            for c in _backend_grid(b)}
+    assert len(keys) == 3 * len(_backend_grid("auto"))
+
+
+def test_sweep_pallas_grid_matches_numpy(tmp_path):
+    """A >=8-cell grid replayed as ONE pallas lane batch produces rows
+    identical (integer counters exact, floats to golden tolerance) to the
+    NumPy backend, with the backend recorded per row."""
+    from repro.uvm.replay_core import ReplayRequest, get_backend
+    from repro.uvm.sweep import prepare_cell
+
+    cells_p = _backend_grid("pallas")
+    assert len(cells_p) >= 8
+    # the whole grid packs into a single multi-lane kernel launch
+    backend = get_backend("pallas")
+    requests = []
+    for cell in cells_p:
+        trace, config, prefetcher, _ = prepare_cell(cell)
+        requests.append(ReplayRequest(trace, prefetcher, config))
+    assert all(backend.can_replay(r) for r in requests)
+    assert len(backend.pack_lanes(requests)) == 1
+
+    rows_p = run_sweep(cells_p, out_dir=str(tmp_path / "pallas"), workers=1)
+    rows_n = run_sweep(_backend_grid("numpy"),
+                       out_dir=str(tmp_path / "numpy"), workers=1)
+    assert [r["backend"] for r in rows_p] == ["pallas"] * len(rows_p)
+    assert [r["backend"] for r in rows_n] == ["numpy"] * len(rows_n)
+    for got, want in zip(rows_p, rows_n):
+        for f in INT_ROW_FIELDS:
+            assert got[f] == want[f], f
+        assert got["cycles"] == pytest.approx(want["cycles"], rel=1e-6)
+        assert got["pcie_bytes"] == pytest.approx(want["pcie_bytes"],
+                                                  rel=1e-6)
+        assert got["hit_rate"] == pytest.approx(want["hit_rate"], rel=1e-6)
+
+
+def test_sweep_pallas_fallback_is_recorded(tmp_path):
+    """Unpackable cells under --backend pallas fall back per cell to the
+    NumPy path and the row says so instead of reading as covered."""
+    cells = expand_grid(["ATAX"], ["tree"], scales=[0.25], backend="pallas")
+    rows = run_sweep(cells, out_dir=str(tmp_path / "out"), workers=1)
+    assert rows[0]["backend"] == "numpy"
+
+
+def test_sweep_pallas_runtime_failure_degrades_per_cell(tmp_path,
+                                                        monkeypatch):
+    """A lane batch that dies at runtime (not structurally) must not abort
+    the grid: affected cells replay per cell on the NumPy path and their
+    rows say so."""
+    from repro.uvm.backends.pallas_backend import PallasReplayBackend
+
+    def _boom(self, requests):
+        raise RuntimeError("synthetic kernel failure")
+
+    monkeypatch.setattr(PallasReplayBackend, "replay", _boom)
+    cells = _backend_grid("pallas")[:4]
+    with pytest.warns(RuntimeWarning, match="lane batch failed"):
+        rows = run_sweep(cells, out_dir=str(tmp_path / "out"), workers=1)
+    assert [r["backend"] for r in rows] == ["numpy"] * len(rows)
+    want = run_sweep(_backend_grid("numpy")[:4],
+                     out_dir=str(tmp_path / "ref"), workers=1)
+    for got, ref in zip(rows, want):
+        for f in INT_ROW_FIELDS:
+            assert got[f] == ref[f], f
+
+
+def test_sweep_pallas_resume_skips_lane_batches(tmp_path, monkeypatch):
+    """Resumed pallas grids read persisted cells — no kernel relaunch."""
+    import repro.uvm.sweep as sweep_mod
+
+    out = str(tmp_path / "out")
+    cells = _backend_grid("pallas")[:4]
+    first = run_sweep(cells, out_dir=out, workers=1)
+
+    def _boom(*a, **k):
+        raise AssertionError("resume must not replay any lane batch")
+
+    monkeypatch.setattr(sweep_mod, "_run_lane_batches", _boom)
+    monkeypatch.setattr(sweep_mod, "simulate_cell", _boom)
+    resumed = run_sweep(cells, out_dir=out, workers=1)
+    assert _strip_timing(resumed) == _strip_timing(first)
 
 
 # ---------------------------------------------------------------------------
