@@ -4,6 +4,14 @@
     PYTHONPATH=src python -m benchmarks.sim_throughput --n 200000
     PYTHONPATH=src python -m benchmarks.sim_throughput --bench ATAX --scale 1.0
     PYTHONPATH=src python -m benchmarks.sim_throughput --json BENCH_sim.json
+    PYTHONPATH=src python -m benchmarks.sim_throughput --backends numpy,pallas
+
+``--backends numpy,pallas`` adds per-backend rows: each prefetcher cell
+(tree/learned included) also replays through the pallas multi-lane
+kernels and its row records ``backend == "pallas"`` — a cross-backend
+counter-drift gate (interpret mode on CPU hosts, so the pallas rows are
+a correctness smoke, not a speed contest; the wall-clock floors below
+only ever look at the NumPy rows).
 
 The default workload is a 1M-access DP-style trace (per "row", a block of
 newly-streamed pages plus repeated sweeps over two reused result buffers —
@@ -93,35 +101,98 @@ def prefetchers(trace: Trace, cfg: UVMConfig) -> List:
     ]
 
 
-def run(trace: Trace, cfg: UVMConfig, skip_oracle: bool = False):
+def _stats_close(got, want) -> bool:
+    """Integer counters exact; cycles/pcie_bytes to 1e-9 relative (the
+    pallas lanes replay the legacy op order but a ULP of slack keeps the
+    gate about *drift*, not about heroic bit-equality on every host)."""
+    import math
+    for f in CHECK_FIELDS:
+        g, w = getattr(got, f), getattr(want, f)
+        if f in ("cycles", "pcie_bytes"):
+            if not math.isclose(g, w, rel_tol=1e-9, abs_tol=1e-9):
+                return False
+        elif g != w:
+            return False
+    return True
+
+
+def run(trace: Trace, cfg: UVMConfig, skip_oracle: bool = False,
+        backends=("numpy",)):
     n = len(trace)
     rows = []
     print(f"\n== sim_throughput: {trace.name} ({n} accesses) ==")
-    print("prefetcher,legacy_s,legacy_acc_per_s,vec_s,vec_acc_per_s,"
-          "speedup,identical")
+    print("prefetcher,backend,legacy_s,legacy_acc_per_s,backend_s,"
+          "backend_acc_per_s,speedup,identical")
     for name, factory in prefetchers(trace, cfg):
         if skip_oracle and name == "oracle":
             continue
         t0 = time.time()
         s_legacy = UVMSimulator(cfg).run(trace, factory())
         t_legacy = time.time() - t0
-        t0 = time.time()
-        s_vec = VectorizedUVMSimulator(cfg).run(trace, factory())
-        t_vec = time.time() - t0
-        same = all(getattr(s_legacy, f) == getattr(s_vec, f)
-                   for f in CHECK_FIELDS)
-        speedup = t_legacy / max(t_vec, 1e-9)
-        rows.append({"trace": trace.name, "n_accesses": n,
-                     "prefetcher": name, "speedup": speedup, "same": same,
-                     "backend": s_vec.backend,
-                     "legacy_s": t_legacy, "vec_s": t_vec,
-                     "legacy_aps": n / max(t_legacy, 1e-9),
-                     "vec_aps": n / max(t_vec, 1e-9)})
-        print(f"{name},{t_legacy:.3f},{n / max(t_legacy, 1e-9):.0f},"
-              f"{t_vec:.3f},{n / max(t_vec, 1e-9):.0f},"
-              f"{speedup:.2f},{same}")
-    gm = geomean([r["speedup"] for r in rows])
-    print(f"GEOMEAN speedup: {gm:.2f}x; all identical: "
+        if "numpy" in backends:
+            t0 = time.time()
+            s_vec = VectorizedUVMSimulator(cfg).run(trace, factory())
+            t_vec = time.time() - t0
+            same = all(getattr(s_legacy, f) == getattr(s_vec, f)
+                       for f in CHECK_FIELDS)
+            speedup = t_legacy / max(t_vec, 1e-9)
+            rows.append({"trace": trace.name, "n_accesses": n,
+                         "prefetcher": name, "speedup": speedup,
+                         "same": same, "backend": s_vec.backend,
+                         "legacy_s": t_legacy, "vec_s": t_vec,
+                         "legacy_aps": n / max(t_legacy, 1e-9),
+                         "vec_aps": n / max(t_vec, 1e-9)})
+            print(f"{name},{s_vec.backend},{t_legacy:.3f},"
+                  f"{n / max(t_legacy, 1e-9):.0f},"
+                  f"{t_vec:.3f},{n / max(t_vec, 1e-9):.0f},"
+                  f"{speedup:.2f},{same}")
+        if "pallas" in backends:
+            # per-backend rows: the same cell through the pallas lanes
+            # (interpret mode on CPU hosts — a correctness smoke, not a
+            # speed contest; rows record the backend so downstream perf
+            # tracking can split the trajectories).  Asking for pallas
+            # asserts lane eligibility at this size: a declined cell is
+            # recorded as a failed row so the drift gate can never pass
+            # vacuously by silently skipping a family — run pallas
+            # smokes at sizes the lanes cover (see can_replay's
+            # per-family ceilings).
+            from repro.uvm.replay_core import ReplayRequest, get_backend
+            backend = get_backend("pallas")
+            req = ReplayRequest(trace, factory(), cfg)
+            if not backend.can_replay(req):
+                rows.append({"trace": trace.name, "n_accesses": n,
+                             "prefetcher": name, "speedup": 0.0,
+                             "same": False, "backend": "pallas",
+                             "declined": True,
+                             "legacy_s": t_legacy, "vec_s": None,
+                             "legacy_aps": n / max(t_legacy, 1e-9),
+                             "vec_aps": 0.0})
+                print(f"{name},pallas,{t_legacy:.3f},"
+                      f"{n / max(t_legacy, 1e-9):.0f},,,"
+                      f",False (cell declined by can_replay)")
+                continue
+            t0 = time.time()
+            s_pal = backend.replay([req])[0]
+            t_pal = time.time() - t0
+            same_p = _stats_close(s_pal, s_legacy)
+            rows.append({"trace": trace.name, "n_accesses": n,
+                         "prefetcher": name,
+                         "speedup": t_legacy / max(t_pal, 1e-9),
+                         "same": same_p, "backend": s_pal.backend,
+                         "legacy_s": t_legacy, "vec_s": t_pal,
+                         "legacy_aps": n / max(t_legacy, 1e-9),
+                         "vec_aps": n / max(t_pal, 1e-9)})
+            print(f"{name},pallas,{t_legacy:.3f},"
+                  f"{n / max(t_legacy, 1e-9):.0f},"
+                  f"{t_pal:.3f},{n / max(t_pal, 1e-9):.0f},"
+                  f"{t_legacy / max(t_pal, 1e-9):.2f},{same_p}")
+    # interpret-mode pallas rows are correctness smokes — the wall-clock
+    # floors and the geomean track the NumPy engine only
+    numpy_speedups = [r["speedup"] for r in rows
+                      if r["backend"] != "pallas"]
+    gm = geomean(numpy_speedups) if numpy_speedups else None
+    gm_str = f"{gm:.2f}x" if gm is not None else "n/a (no numpy rows)"
+    print(f"GEOMEAN speedup (non-pallas): {gm_str}; all identical: "
           f"{all(r['same'] for r in rows)}")
     return rows, gm
 
@@ -136,24 +207,37 @@ def main() -> None:
     ap.add_argument("--skip-oracle", action="store_true",
                     help="oracle is slow on both engines at large n")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write per-prefetcher engine-throughput rows + "
-                         "geomean as JSON (perf trajectory for future PRs)")
+                    help="write per-prefetcher per-backend "
+                         "engine-throughput rows + geomean as JSON (perf "
+                         "trajectory for future PRs)")
+    ap.add_argument("--backends", default="numpy",
+                    help="comma list from numpy,pallas — 'pallas' adds "
+                         "per-backend rows replaying each cell through "
+                         "the multi-lane kernels (interpret mode on CPU; "
+                         "counter drift fails the run, wall-clock floors "
+                         "track the NumPy rows only)")
     args = ap.parse_args()
 
+    backends = tuple(args.backends.split(","))
+    bad = [b for b in backends if b not in ("numpy", "pallas")]
+    if bad:
+        ap.error(f"unknown backend(s) {','.join(bad)}; choose from "
+                 "numpy,pallas")
     cfg = UVMConfig()
     all_rows = []
     geomeans = {}
-    rows, gm = run(dp_sweep_trace(args.n), cfg, skip_oracle=args.skip_oracle)
+    rows, gm = run(dp_sweep_trace(args.n), cfg, skip_oracle=args.skip_oracle,
+                   backends=backends)
     all_rows += rows
     geomeans["dp-sweep"] = gm
     if args.bench:
         rows, gm = run(bench_trace(args.bench, args.scale), cfg,
-                       skip_oracle=args.skip_oracle)
+                       skip_oracle=args.skip_oracle, backends=backends)
         all_rows += rows
         geomeans[args.bench] = gm
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"version": 1, "benchmark": "sim_throughput",
+            json.dump({"version": 2, "benchmark": "sim_throughput",
                        "rows": all_rows, "geomean_speedup": geomeans},
                       f, indent=1, sort_keys=True)
             f.write("\n")
@@ -161,7 +245,11 @@ def main() -> None:
     if not all(r["same"] for r in all_rows):
         # any counter drift between the engines is a correctness failure,
         # not a perf data point — make CI smoke runs fail loudly
-        sys.exit("FAIL: vectorized engine diverged from legacy counters")
+        bad = [f"{r['trace']}/{r['prefetcher']}/{r['backend']}"
+               + (" (declined)" if r.get("declined") else "")
+               for r in all_rows if not r["same"]]
+        sys.exit("FAIL: backend rows diverged from legacy counters or "
+                 "were declined: " + ", ".join(bad))
 
     # wall-clock floors (dp-sweep run only; env-overridable so slow CI
     # machines fail on counter drift above, not on scheduling noise here)
@@ -170,12 +258,14 @@ def main() -> None:
                            args.n)
     failures = []
     tree = next((r["speedup"] for r in all_rows
-                 if r["trace"] == "dp-sweep" and r["prefetcher"] == "tree"),
+                 if r["trace"] == "dp-sweep" and r["prefetcher"] == "tree"
+                 and r["backend"] != "pallas"),
                 None)
     if min_tree and tree is not None and tree < min_tree:
         failures.append(f"tree speedup {tree:.2f}x < {min_tree:.2f}x "
                         "(REPRO_SIM_MIN_TREE)")
-    if min_gm and geomeans.get("dp-sweep", min_gm) < min_gm:
+    dp_gm = geomeans.get("dp-sweep")
+    if min_gm and dp_gm is not None and dp_gm < min_gm:
         failures.append(f"geomean speedup {geomeans['dp-sweep']:.2f}x < "
                         f"{min_gm:.2f}x (REPRO_SIM_MIN_GEOMEAN)")
     if failures:

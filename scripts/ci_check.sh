@@ -23,11 +23,13 @@ python -m pytest -x -q --ignore=tests/test_uvm_golden.py \
     --ignore=tests/test_sweep.py --ignore=tests/test_predcache.py \
     --ignore=tests/test_backends.py
 
-echo "[ci] replay backends: golden suite against numpy AND pallas lanes,"
-echo "[ci] backend contract + lane-packing property suite, sweep, predcache"
-echo "[ci] (pallas runs in interpret mode, pinned to the CPU platform)"
+echo "[ci] replay backends: golden suite against numpy AND pallas lanes"
+echo "[ci] (all five prefetcher families), backend contract + lane-packing"
+echo "[ci] property suite, cross-backend differential fuzzer, sweep,"
+echo "[ci] predcache (pallas runs in interpret mode, CPU platform pinned)"
 JAX_PLATFORMS=cpu python -m pytest -q tests/test_uvm_golden.py \
-    tests/test_backends.py tests/test_sweep.py tests/test_predcache.py
+    tests/test_backends.py tests/test_differential.py \
+    tests/test_sweep.py tests/test_predcache.py
 
 echo "[ci] sim_throughput smoke: engines must stay counter-identical"
 # the 60k smoke is warmup-dominated, so the default wall-clock floors
@@ -36,5 +38,12 @@ echo "[ci] sim_throughput smoke: engines must stay counter-identical"
 # REPRO_SIM_MIN_GEOMEAN — counter drift fails the run regardless
 python -m benchmarks.sim_throughput --n 60000 \
     --json "${TMPDIR:-/tmp}/ci_sim_throughput.json"
+
+echo "[ci] pallas lane smoke: tree/learned/oracle cells through the"
+echo "[ci] multi-lane kernels (interpret mode, sub-500k so wall-clock"
+echo "[ci] floors stay off; cross-backend counter drift fails the run)"
+JAX_PLATFORMS=cpu python -m benchmarks.sim_throughput --n 24000 \
+    --backends numpy,pallas \
+    --json "${TMPDIR:-/tmp}/ci_sim_throughput_pallas.json"
 
 echo "[ci] OK"

@@ -23,13 +23,49 @@ OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
                    "uvm_golden.json")
 
 
+def audit_pallas_eligibility(requests) -> None:
+    """Report which lane family replays each golden cell in-kernel.
+
+    The golden suite pins every family's cells as ONE pallas lane batch
+    (``tests/test_uvm_golden.py::test_pallas_lane_batch_matches_legacy``);
+    this audit fails regeneration loudly if any cell stops being
+    pallas-eligible, so the fixtures can never quietly outgrow the
+    kernel's equivalence coverage.  ``requests`` are the (cell_id,
+    ReplayRequest) pairs main() already materialized.
+    """
+    from repro.uvm.backends.pallas_backend import lane_family
+    from repro.uvm.replay_core import get_backend
+
+    backend = get_backend("pallas")
+    families = {}
+    declined = []
+    for cell_id, req in requests:
+        family = lane_family(req.prefetcher)
+        families.setdefault(family, []).append(cell_id)
+        if not backend.can_replay(req):
+            declined.append(cell_id)
+    for family in sorted(families):
+        print(f"pallas lane family {family}: {len(families[family])} cells")
+    if declined:
+        raise SystemExit(
+            f"pallas backend declines golden cells {declined}; the lane "
+            "equivalence batches would silently shrink — fix eligibility "
+            "before regenerating")
+
+
 def main() -> None:
+    from repro.uvm.replay_core import ReplayRequest
+
     cells = {}
+    requests = []
     for cell_id, trace, config, factory in iter_golden_cells():
         stats = UVMSimulator(config).run(trace, factory())
         cells[cell_id] = stats_to_dict(stats)
+        # a fresh prefetcher for the audit — the legacy run consumed its own
+        requests.append((cell_id, ReplayRequest(trace, factory(), config)))
         print(f"{cell_id}: faults={stats.faults} hits={stats.hits} "
               f"late={stats.late} cycles={stats.cycles:.1f}")
+    audit_pallas_eligibility(requests)
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     doc = {
         "_regenerate": "PYTHONPATH=src python scripts/regen_uvm_golden.py",

@@ -8,53 +8,93 @@ sweep batch replays concurrently; on CPU hosts the kernel runs in
 interpret mode (exact same jaxpr, executed through XLA-CPU), which is what
 CI exercises under ``JAX_PLATFORMS=cpu``.
 
-Packable cells
---------------
-A lane replays the *full* legacy timing model — far-fault service windows,
-PCIe queueing, batch-DMA block prefetches, MSHR stalls, and LRU eviction
-under oversubscription with in-flight-victim reinsertion — for the
-prefetchers whose per-access behavior is pure array arithmetic:
-``NoPrefetcher`` (on-demand) and ``BlockPrefetcher`` (64 KB basic-block
-batch DMA).  Stateful prefetchers (tree/learned/oracle) keep their exact
-NumPy adapters; the scheduler in ``repro.uvm.sweep`` routes those cells to
-the ``numpy`` backend per cell, and the result rows record which backend
-actually ran.
+Packable cells and lane families
+--------------------------------
+Every paper-facing prefetcher replays *fully in-kernel* — far-fault
+service windows, PCIe queueing, batch-DMA prefetches, MSHR stalls, and
+LRU eviction under oversubscription with in-flight-victim reinsertion —
+so ``none``/``block``/``tree``/``learned``/``oracle`` cells are all
+pallas-eligible.  Cells are bucketed into **lane families** and a batch
+is always family-homogeneous (each family is a different kernel with
+different per-lane state and inputs):
+
+* ``demand`` — ``NoPrefetcher`` / ``BlockPrefetcher``: the faulting 64 KB
+  basic-block window is one 16-page slice compare (no extra lane state).
+* ``tree`` — ``TreePrefetcher``: dense per-level node-occupancy count
+  arrays (``span >> (4+lv)`` int32 per level, lv = 0..5, mirroring the
+  NumPy ``_TreeAdapter``) ride in the lane carry; a fault classifies the
+  2 MB root window and walks the >50% escalation levels in-kernel,
+  emitting extras in the exact legacy order (per level, ascending page)
+  so LRU stamps — and therefore eviction order — stay bit-equal.
+* ``learned`` — ``LearnedPrefetcher``: the precomputed ``predict_trace``
+  array (content-addressed by ``repro.uvm.predcache``) is fed into the
+  lane as a per-access prefetch-decision input stream (page indices
+  relative to the lane span, ``-1`` = no prediction), and the serialized
+  inference-server gate (``clock >= next_free``) is one float64 carry.
+* ``oracle`` — ``OraclePrefetcher``: the first-touch page stream and the
+  per-access stream position (a pure function of the access index) are
+  precomputed host-side; each access scans a ``lookahead``-wide window of
+  the stream for up to 16 non-resident pages, twice on faults (batch DMA
+  then continuous), exactly like the legacy object.  Lanes with different
+  ``lookahead`` are different families (the window width is a static
+  kernel shape).
+
+Stateful-prefetcher cells the backend still declines (oversized spans,
+too-long traces, timeline recording) keep their exact NumPy adapters; the
+scheduler in ``repro.uvm.sweep`` routes those cells to the ``numpy``
+backend per cell, and the result rows record which backend actually ran.
 
 Exactness
 ---------
 Every float chain in the kernel replays the legacy loop's IEEE-754
 operation order in float64 (the lane functions are traced under
 ``jax.experimental.enable_x64``), including a branch-free emulation of
-CPython's float floor-division in the fault-service window computation.
-Integer counters are therefore exact and cycles/pcie_bytes agree with the
-legacy engine to well inside the golden 1e-6 relative tolerance (bit-equal
-in practice); ``tests/test_uvm_golden.py`` pins this per golden cell and
+CPython's float floor-division in the fault-service window computation
+and the sequential ``t += page_tx`` arrival chain of non-batch (oracle
+continuous) prefetches.  Integer counters are therefore exact and
+cycles/pcie_bytes agree with the legacy engine to well inside the golden
+1e-6 relative tolerance (bit-equal in practice);
+``tests/test_uvm_golden.py`` pins this per golden cell for every family,
 ``tests/test_backends.py`` property-tests random lane batches against
-independent NumPy replays.
+independent NumPy replays, and ``tests/test_differential.py`` fuzzes all
+registered backend pairs.
 
-The per-lane state (arrival/stamp/pfu spans) is carried through a
-``lax.fori_loop`` over trace positions — the functional-carry form keeps
-the kernel identical between interpret mode and compiled execution.  A
-device-native Mosaic/Triton lowering would move the span state into
-scratch refs; the lane packing, parameter blocks, and stats layout here
-are already shaped for that (see ``README.md``).
+The per-lane state (arrival/stamp/pfu spans, tree counts) is carried
+through a ``lax.fori_loop`` over trace positions — the functional-carry
+form keeps the kernel identical between interpret mode and compiled
+execution.  A device-native Mosaic/Triton lowering would move the span
+state into scratch refs; the lane packing, parameter blocks, and stats
+layout here are already shaped for that (see ``README.md``).
 """
 from __future__ import annotations
 
 import functools
 import os
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.traces.trace import BASIC_BLOCK_PAGES, ROOT_PAGES
-from repro.uvm.prefetchers import BlockPrefetcher, NoPrefetcher
+from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
+                                   NoPrefetcher, OraclePrefetcher,
+                                   Prefetcher, TreePrefetcher)
 from repro.uvm.replay_core import (ReplayBackend, ReplayRequest,
                                    cycles_per_access, dense_bounds)
 from repro.uvm.simulator import UVMStats
 
+#: lane-family kind per exact prefetcher type — the single source of
+#: truth the scheduler derives its name-level family map from (oracle
+#: lanes additionally carry their lookahead in the full family id)
+FAMILY_BY_TYPE = {
+    NoPrefetcher: "demand",
+    BlockPrefetcher: "demand",
+    TreePrefetcher: "tree",
+    LearnedPrefetcher: "learned",
+    OraclePrefetcher: "oracle",
+}
+
 #: prefetchers a pallas lane can replay entirely in-kernel
-PACKABLE_PREFETCHERS = (NoPrefetcher, BlockPrefetcher)
+PACKABLE_PREFETCHERS = tuple(FAMILY_BY_TYPE)
 
 #: hard per-lane page-span ceiling (beyond it the dense lane state would
 #: dwarf the batch; such cells fall back to the NumPy path per cell)
@@ -67,16 +107,54 @@ MAX_BATCH_STATE_PAGES = 1 << 23
 MAX_BATCH_ACCESSES = 1 << 24
 
 #: per-lane trace-length ceiling.  Must stay well below int32 range /
-#: the max per-access touch-counter growth (1 demand + 15 block extras =
-#: 16, plus a retouch): the kernel's LRU stamps are int32, so a lane of
-#: 2^24 accesses tops out near 2^28 touches — 8x headroom under 2^31.
+#: the max per-access touch-counter growth: the kernel's LRU stamps are
+#: int32.  Demand/learned/oracle lanes grow the counter by at most
+#: 1 + 16 + 16 = 33 per access (2^24 * 33 ~ 2^29, 4x headroom under
+#: 2^31); a tree fault can stamp a whole 2 MB root window (1 + 511 per
+#: access worst case), so tree lanes cap at 2^21 (2^21 * 512 = 2^30).
 MAX_LANE_ACCESSES = MAX_BATCH_ACCESSES
+MAX_TREE_LANE_ACCESSES = 1 << 21
+
+#: oracle lookahead is a static kernel shape (the per-access window scan
+#: width); absurd lookaheads fall back rather than bloat the kernel
+MAX_ORACLE_LOOKAHEAD = 512
+
+#: the legacy OraclePrefetcher emits at most 16 extras per callback
+ORACLE_MAX_EXTRAS = 16
 
 _N_FPARAMS = 8       # cpa, page_tx, far_fault, ptw, pcie_lat, pfo, extra, page_size
-_N_IPARAMS = 4       # n_accesses, device_pages(-1=uncapped), mshr, has_block
+_N_IPARAMS = 5       # n_accesses, device_pages(-1=uncapped), mshr, has_block, n_ft
 STAT_FIELDS = ("cycles", "hits", "late", "faults", "prefetch_issued",
                "prefetch_used", "pages_migrated", "pages_evicted",
                "pcie_bytes")
+
+#: lane-family max trace lengths (see MAX_LANE_ACCESSES note above)
+_FAMILY_MAX_ACCESSES = {
+    "demand": MAX_LANE_ACCESSES,
+    "tree": MAX_TREE_LANE_ACCESSES,
+    "learned": MAX_LANE_ACCESSES,
+    "oracle": MAX_LANE_ACCESSES,
+}
+
+
+def lane_family(pf: Prefetcher) -> Optional[str]:
+    """Lane-family bucket of a prefetcher, or None when unpackable.
+
+    A lane batch is always family-homogeneous: each family is a distinct
+    kernel with different per-lane state/inputs, so the scheduler and
+    :meth:`PallasReplayBackend.fits_batch` must never co-bucket two
+    families.  Oracle lanes carry their lookahead in the family id (the
+    scan-window width is a static kernel shape).
+    """
+    family = FAMILY_BY_TYPE.get(type(pf))    # exact type: unknown
+    if family == "oracle":                   # subclasses are unpackable
+        return f"oracle/{int(pf.lookahead)}"
+    return family
+
+
+def _family_kind(family: str) -> str:
+    """Kernel kind of a family id (strips the oracle lookahead suffix)."""
+    return family.split("/")[0]
 
 
 def _bucket(n: int, floor: int) -> int:
@@ -89,19 +167,37 @@ def _bucket(n: int, floor: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
+def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
+                    buf_len: int, ft_len: int, lookahead: int,
                     interpret: bool):
-    """Build (and cache) the jitted multi-lane replay for one batch shape."""
+    """Build (and cache) the jitted multi-lane replay for one batch shape.
+
+    ``family`` is the kernel kind (demand/tree/learned/oracle); ``ft_len``
+    and ``lookahead`` are only meaningful for oracle lanes (0 otherwise).
+    """
     import jax
     import jax.numpy as jnp
     from jax.experimental import pallas as pl
 
     blk_pages = BASIC_BLOCK_PAGES
+    blk_shift = blk_pages.bit_length() - 1
+    levels = TreePrefetcher.LEVELS
     i32 = jnp.int32
+    IMAX_NP = np.iinfo(np.int32).max
+    # oracle lanes get one extra "trash" slot at index ``span``: window
+    # scatters direct every masked-off write there, so duplicate scatter
+    # indices never land on a real page.  The slot reads as resident
+    # (arrival 0.0) and is never the LRU victim (stamp pinned at IMAX).
+    state_len = span + 1 if family == "oracle" else span
+    n_inputs = {"demand": 3, "tree": 3, "learned": 4, "oracle": 5}[family]
 
-    def kernel(pages_ref, fparams_ref, iparams_ref, out_ref):
+    def kernel(*refs):
+        pages_ref = refs[0]
+        fparams_ref = refs[n_inputs - 2]
+        iparams_ref = refs[n_inputs - 1]
+        out_ref = refs[-1]
         INF = jnp.float64(jnp.inf)
-        IMAX = jnp.int32(np.iinfo(np.int32).max)
+        IMAX = jnp.int32(IMAX_NP)
         pages = pages_ref[0]
         fp = fparams_ref[0]
         cpa, page_tx, ff, ptw, pcie_lat = fp[0], fp[1], fp[2], fp[3], fp[4]
@@ -111,27 +207,46 @@ def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
         mshr = iparams_ref[0, 2]
         has_block = iparams_ref[0, 3] > 0
         track_lru = cap >= 0
+        # The legacy loop rounds every multiply before the dependent add,
+        # but LLVM contracts ``a + b * c`` into a fused multiply-add
+        # (single rounding, 1-ULP drift vs CPython) and neither
+        # optimization_barrier nor a bitcast round-trip survives to
+        # codegen.  ``abs`` does: it is an identity on these provably
+        # non-negative products and fabs() breaks the fmul->fadd
+        # contraction pattern, pinning the separately-rounded product.
+        def _nofma(x):
+            return jnp.abs(x)
 
-        def step(t, carry):
-            (arrival, stamp, pfu, buf, clock, pcie_free, counter, resident,
-             nbuf, hits, late, faults, issued, used, migrated, evicted,
-             wbacks) = carry
+        if family == "learned":
+            preds = refs[1][0]
+        if family == "oracle":
+            ft = refs[1][0]
+            posarr = refs[2][0]
+            n_ft = iparams_ref[0, 4]
+            look_iota = jnp.arange(lookahead, dtype=i32)
+
+        def step(t, s):
+            arrival, stamp, pfu = s["arrival"], s["stamp"], s["pfu"]
+            buf = s["buf"]
+            counter = s["counter"]
+            pcie_free = s["pcie_free"]
+            if family == "tree":
+                counts = list(s["counts"])
 
             p = pages[t]
-            clock = clock + cpa
+            clock = s["clock"] + cpa
             a = arrival[p]
             is_res = a < INF
             is_hit = is_res & (a <= clock)
             is_late = is_res & ~is_hit
             is_fault = ~is_res
-            hits = hits + is_hit.astype(i32)
-            late = late + is_late.astype(i32)
-            faults = faults + is_fault.astype(i32)
+            hits = s["hits"] + is_hit.astype(i32)
+            late = s["late"] + is_late.astype(i32)
+            faults = s["faults"] + is_fault.astype(i32)
 
             # prefetched-but-unused consumption (False on faults by
             # construction: eviction clears the flag with the residency)
-            was_pfu = pfu[p]
-            used = used + was_pfu.astype(i32)
+            used = s["used"] + pfu[p].astype(i32)
             pfu = pfu.at[p].set(False)
 
             # far-fault service window.  ``(clock // ff)`` in the legacy
@@ -142,7 +257,7 @@ def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
             div = (clock - mod) / ff
             fd = jnp.floor(div)
             fd = jnp.where(div - fd > 0.5, fd + 1.0, fd)
-            ready = (fd + 2.0) * ff + ptw
+            ready = _nofma((fd + 2.0) * ff) + ptw
             start = jnp.maximum(ready, pcie_free)
             arr_v = start + pcie_lat + page_tx
 
@@ -151,8 +266,8 @@ def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
             arrival = arrival.at[p].set(jnp.where(is_fault, arr_v, a))
             stamp = stamp.at[p].set(counter)
             counter = counter + 1
-            resident = resident + is_fault.astype(i32)
-            migrated = migrated + is_fault.astype(i32)
+            resident = s["resident"] + is_fault.astype(i32)
+            migrated = s["migrated"] + is_fault.astype(i32)
             pcie_free = jnp.where(is_fault, start + page_tx, pcie_free)
 
             # outstanding-stall push: a fault waits on its own migration,
@@ -162,33 +277,200 @@ def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
             push_val = jnp.where(is_fault, arr_v, a)
             slot = jnp.argmax(buf)               # some empty (+inf) slot
             buf = buf.at[slot].set(jnp.where(push, push_val, buf[slot]))
-            nbuf = nbuf + push.astype(i32)
+            nbuf = s["nbuf"] + push.astype(i32)
 
-            # block prefetcher on_fault: batch-DMA the faulting 64 KB
-            # basic block's non-resident pages (the demand page is already
-            # in flight, so the window compare excludes it)
-            blk = (p // blk_pages) * blk_pages
-            win = jax.lax.dynamic_slice(arrival, (blk,), (blk_pages,))
-            mask = (win == INF) & is_fault & has_block
-            k = jnp.sum(mask, dtype=i32)
-            kf = k.astype(jnp.float64)
-            ex_ready = clock + pfo + extra_lat
-            ex_start = jnp.maximum(pcie_free, ex_ready)
-            end = ex_start + kf * page_tx
-            ex_arr = end + pcie_lat              # batch completes as one DMA
-            arrival = jax.lax.dynamic_update_slice(
-                arrival, jnp.where(mask, ex_arr, win), (blk,))
-            pwin = jax.lax.dynamic_slice(pfu, (blk,), (blk_pages,))
-            pfu = jax.lax.dynamic_update_slice(pfu, pwin | mask, (blk,))
-            swin = jax.lax.dynamic_slice(stamp, (blk,), (blk_pages,))
-            rank = counter + jnp.cumsum(mask, dtype=i32) - 1
-            stamp = jax.lax.dynamic_update_slice(
-                stamp, jnp.where(mask, rank, swin), (blk,))
-            counter = counter + k
-            resident = resident + k
-            migrated = migrated + k
-            issued = issued + k
-            pcie_free = jnp.where(k > 0, end, pcie_free)
+            issued = s["issued"]
+
+            if family == "tree":
+                # the engine raises on_migrate([demand]) BEFORE on_fault,
+                # so node occupancy includes the demand page when the
+                # escalation walk below reads it (legacy double-counts it
+                # again through ``pending`` — replayed exactly)
+                for lv in range(levels + 1):
+                    counts[lv] = counts[lv].at[p >> (blk_shift + lv)].add(
+                        is_fault.astype(i32))
+
+            if family in ("demand", "learned"):
+                # block prefetcher on_fault: batch-DMA the faulting 64 KB
+                # basic block's non-resident pages (the demand page is
+                # already in flight, so the window compare excludes it)
+                blk = (p // blk_pages) * blk_pages
+                win = jax.lax.dynamic_slice(arrival, (blk,), (blk_pages,))
+                mask = (win == INF) & is_fault & has_block
+                k = jnp.sum(mask, dtype=i32)
+                kf = k.astype(jnp.float64)
+                ex_ready = clock + pfo + extra_lat
+                ex_start = jnp.maximum(pcie_free, ex_ready)
+                end = ex_start + _nofma(kf * page_tx)
+                ex_arr = end + pcie_lat          # batch completes as one DMA
+                arrival = jax.lax.dynamic_update_slice(
+                    arrival, jnp.where(mask, ex_arr, win), (blk,))
+                pwin = jax.lax.dynamic_slice(pfu, (blk,), (blk_pages,))
+                pfu = jax.lax.dynamic_update_slice(pfu, pwin | mask, (blk,))
+                swin = jax.lax.dynamic_slice(stamp, (blk,), (blk_pages,))
+                rank = counter + jnp.cumsum(mask, dtype=i32) - 1
+                stamp = jax.lax.dynamic_update_slice(
+                    stamp, jnp.where(mask, rank, swin), (blk,))
+                counter = counter + k
+                resident = resident + k
+                migrated = migrated + k
+                issued = issued + k
+                pcie_free = jnp.where(k > 0, end, pcie_free)
+
+            if family == "tree":
+                # tree on_fault: classify the 2 MB root window, then the
+                # >50% escalation walk.  Extras are emitted per level in
+                # ascending page order (the legacy list order), which the
+                # per-level cumsum ranks reproduce so LRU stamps match.
+                root = (p // ROOT_PAGES) * ROOT_PAGES
+                rwin = jax.lax.dynamic_slice(arrival, (root,), (ROOT_PAGES,))
+                nonres = rwin == INF
+                offs = jnp.arange(ROOT_PAGES, dtype=i32)
+                rel = p - root
+                in_blk = (offs >> blk_shift) == (rel >> blk_shift)
+                m0 = in_blk & nonres & is_fault
+                out_mask = m0
+                pend = m0 | (offs == rel)        # about-to-arrive + demand
+                rank = jnp.where(m0, jnp.cumsum(m0.astype(i32)) - 1, 0)
+                k = jnp.sum(m0, dtype=i32)
+                go = is_fault
+                for lv in range(1, levels + 1):
+                    span_lv = blk_pages << lv
+                    in_node = (offs // span_lv) == (rel // span_lv)
+                    node_abs = ((root + (rel // span_lv) * span_lv)
+                                >> (blk_shift + lv))
+                    cnt = (counts[lv][node_abs]
+                           + jnp.sum(in_node & pend, dtype=i32))
+                    fire = go & (cnt * 2 > span_lv)
+                    ex = in_node & nonres & ~pend & fire
+                    rank = jnp.where(
+                        ex, k + jnp.cumsum(ex.astype(i32)) - 1, rank)
+                    k = k + jnp.sum(ex, dtype=i32)
+                    pend = pend | ex
+                    out_mask = out_mask | ex
+                    go = fire
+                kf = k.astype(jnp.float64)
+                ex_ready = clock + pfo + extra_lat
+                ex_start = jnp.maximum(pcie_free, ex_ready)
+                end = ex_start + _nofma(kf * page_tx)
+                ex_arr = end + pcie_lat
+                arrival = jax.lax.dynamic_update_slice(
+                    arrival, jnp.where(out_mask, ex_arr, rwin), (root,))
+                pwin = jax.lax.dynamic_slice(pfu, (root,), (ROOT_PAGES,))
+                pfu = jax.lax.dynamic_update_slice(
+                    pfu, pwin | out_mask, (root,))
+                swin = jax.lax.dynamic_slice(stamp, (root,), (ROOT_PAGES,))
+                stamp = jax.lax.dynamic_update_slice(
+                    stamp, jnp.where(out_mask, counter + rank, swin), (root,))
+                counter = counter + k
+                resident = resident + k
+                migrated = migrated + k
+                issued = issued + k
+                pcie_free = jnp.where(k > 0, end, pcie_free)
+                # on_migrate of the batch: per-level node occupancy grows
+                # by the per-node page counts of the scheduled window
+                for lv in range(levels + 1):
+                    node_span = blk_pages << lv
+                    n_nodes = ROOT_PAGES // node_span
+                    inc = jnp.sum(
+                        out_mask.reshape(n_nodes, node_span).astype(i32),
+                        axis=1, dtype=i32)
+                    node0 = root >> (blk_shift + lv)
+                    cwin = jax.lax.dynamic_slice(
+                        counts[lv], (node0,), (n_nodes,))
+                    counts[lv] = jax.lax.dynamic_update_slice(
+                        counts[lv], cwin + inc, (node0,))
+
+            if family == "learned":
+                # LearnedPrefetcher.on_access: serialized inference server
+                # — an access consumes the gate iff clock >= next_free
+                # (whether or not a prefetch results), and only a valid,
+                # non-demand, non-resident top-1 prediction migrates.
+                # Runs after the fault path, so the prediction's residency
+                # check sees the block batch, exactly like the legacy
+                # callback order.
+                next_free = s["next_free"]
+                fire = clock >= next_free
+                next_free = jnp.where(fire, clock + extra_lat, next_free)
+                pred = preds[t]
+                safe = jnp.maximum(pred, 0)
+                do_pf = (fire & (pred >= 0) & (pred != p)
+                         & (arrival[safe] == INF))
+                ex_ready2 = clock + pfo + extra_lat
+                ex_start2 = jnp.maximum(pcie_free, ex_ready2)
+                end2 = ex_start2 + page_tx       # single-page transfer
+                ex_arr2 = end2 + pcie_lat
+                arrival = arrival.at[safe].set(
+                    jnp.where(do_pf, ex_arr2, arrival[safe]))
+                stamp = stamp.at[safe].set(
+                    jnp.where(do_pf, counter, stamp[safe]))
+                pfu = pfu.at[safe].set(do_pf | pfu[safe])
+                counter = counter + do_pf.astype(i32)
+                resident = resident + do_pf.astype(i32)
+                migrated = migrated + do_pf.astype(i32)
+                issued = issued + do_pf.astype(i32)
+                pcie_free = jnp.where(do_pf, end2, pcie_free)
+
+            if family == "oracle":
+                # OraclePrefetcher: scan a lookahead window of the
+                # first-touch stream (position precomputed per access) for
+                # up to 16 non-resident pages, in stream order.  A fault
+                # scans twice — on_fault (batch DMA) then on_access
+                # (continuous, sequential per-page arrivals) — with the
+                # second scan seeing the first's insertions.
+                pos_t = posarr[t]
+                base_valid = (pos_t + look_iota) < n_ft
+                win_idx = jax.lax.dynamic_slice(ft, (pos_t,), (lookahead,))
+
+                def scan(arrival, stamp, pfu, counter, resident, migrated,
+                         issued, pcie_free, active, batch):
+                    got = arrival[win_idx]
+                    nonres = base_valid & (got == INF) & active
+                    csum = jnp.cumsum(nonres.astype(i32))
+                    take = nonres & (csum <= ORACLE_MAX_EXTRAS)
+                    k = jnp.sum(take, dtype=i32)
+                    rank = csum - 1              # emission order rank
+                    kf = k.astype(jnp.float64)
+                    ex_ready = clock + pfo + extra_lat
+                    ex_start = jnp.maximum(pcie_free, ex_ready)
+                    end = ex_start + _nofma(kf * page_tx)
+                    if batch:
+                        arr_vals = jnp.broadcast_to(end + pcie_lat,
+                                                    (lookahead,))
+                    else:
+                        # legacy non-batch arrivals are the sequential
+                        # ``t += page_tx`` chain — replay the exact fp
+                        # additions, not ex_start + j * page_tx
+                        chain = []
+                        tv = ex_start
+                        for _ in range(ORACLE_MAX_EXTRAS):
+                            tv = tv + page_tx
+                            chain.append(tv)
+                        chain = jnp.stack(chain)
+                        arr_vals = chain[jnp.clip(
+                            rank, 0, ORACLE_MAX_EXTRAS - 1)] + pcie_lat
+                    tgt = jnp.where(take, win_idx, span)   # span = trash
+                    arrival = arrival.at[tgt].set(
+                        jnp.where(take, arr_vals, 0.0))
+                    stamp = stamp.at[tgt].set(
+                        jnp.where(take, counter + rank, IMAX))
+                    pfu = pfu.at[tgt].set(take)
+                    counter = counter + k
+                    resident = resident + k
+                    migrated = migrated + k
+                    issued = issued + k
+                    pcie_free = jnp.where(k > 0, end, pcie_free)
+                    return (arrival, stamp, pfu, counter, resident,
+                            migrated, issued, pcie_free)
+
+                (arrival, stamp, pfu, counter, resident, migrated, issued,
+                 pcie_free) = scan(arrival, stamp, pfu, counter, resident,
+                                   migrated, issued, pcie_free,
+                                   is_fault, True)
+                (arrival, stamp, pfu, counter, resident, migrated, issued,
+                 pcie_free) = scan(arrival, stamp, pfu, counter, resident,
+                                   migrated, issued, pcie_free,
+                                   jnp.bool_(True), False)
 
             # MSHR pressure: beyond ``mshr`` outstanding stalls the clock
             # jumps to the oldest completion (single pop suffices: pushes
@@ -204,11 +486,11 @@ def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
             # at MRU and stops the loop (exact OrderedDict order — stamps
             # are unique, so argmin is the heap pop)
             def econd(c):
-                return c[0] & (c[5] > cap)
+                return c["cont"] & (c["resident"] > cap)
 
             def ebody(c):
-                (_, arrival, stamp, pfu, counter, resident, evicted, wbacks,
-                 pcie_free) = c
+                arrival, stamp, pfu = c["arrival"], c["stamp"], c["pfu"]
+                counter = c["counter"]
                 vi = jnp.argmin(jnp.where(arrival < INF, stamp, IMAX))
                 v_arr = arrival[vi]
                 in_flight = v_arr > clock
@@ -219,63 +501,101 @@ def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
                     jnp.where(in_flight, v_arr, INF))
                 pfu = pfu.at[vi].set(jnp.where(in_flight, pfu[vi], False))
                 ev = (~in_flight).astype(i32)
-                resident = resident - ev
-                evicted = evicted + ev
+                resident = c["resident"] - ev
+                evicted = c["evicted"] + ev
                 # writeback traffic (half the evictions dirty)
                 wb = (~in_flight) & (evicted % 2 == 0)
-                wbacks = wbacks + wb.astype(i32)
-                pcie_free = pcie_free + jnp.where(wb, page_tx, 0.0)
-                return (~in_flight, arrival, stamp, pfu, counter, resident,
-                        evicted, wbacks, pcie_free)
+                wbacks = c["wbacks"] + wb.astype(i32)
+                pcie_free = c["pcie_free"] + jnp.where(wb, page_tx, 0.0)
+                out = dict(c, cont=~in_flight, arrival=arrival, stamp=stamp,
+                           pfu=pfu, counter=counter, resident=resident,
+                           evicted=evicted, wbacks=wbacks,
+                           pcie_free=pcie_free)
+                if family == "tree":
+                    cts = list(c["counts"])
+                    for lv in range(levels + 1):
+                        cts[lv] = cts[lv].at[vi >> (blk_shift + lv)].add(-ev)
+                    out["counts"] = tuple(cts)
+                return out
 
-            (_, arrival, stamp, pfu, counter, resident, evicted, wbacks,
-             pcie_free) = jax.lax.while_loop(
-                econd, ebody,
-                (track_lru, arrival, stamp, pfu, counter, resident, evicted,
-                 wbacks, pcie_free))
+            ecarry = {"cont": track_lru, "arrival": arrival, "stamp": stamp,
+                      "pfu": pfu, "counter": counter, "resident": resident,
+                      "evicted": s["evicted"], "wbacks": s["wbacks"],
+                      "pcie_free": pcie_free}
+            if family == "tree":
+                ecarry["counts"] = tuple(counts)
+            ecarry = jax.lax.while_loop(econd, ebody, ecarry)
 
-            return (arrival, stamp, pfu, buf, clock, pcie_free, counter,
-                    resident, nbuf, hits, late, faults, issued, used,
-                    migrated, evicted, wbacks)
+            out = {
+                "arrival": ecarry["arrival"], "stamp": ecarry["stamp"],
+                "pfu": ecarry["pfu"], "buf": buf,
+                "clock": clock, "pcie_free": ecarry["pcie_free"],
+                "counter": ecarry["counter"],
+                "resident": ecarry["resident"], "nbuf": nbuf,
+                "hits": hits, "late": late, "faults": faults,
+                "issued": issued, "used": used, "migrated": migrated,
+                "evicted": ecarry["evicted"], "wbacks": ecarry["wbacks"],
+            }
+            if family == "learned":
+                out["next_free"] = next_free
+            if family == "tree":
+                out["counts"] = ecarry["counts"]
+            return out
 
         zero = jnp.int32(0)
-        init = (
-            jnp.full((span,), jnp.inf, dtype=jnp.float64),   # arrival
-            jnp.zeros((span,), dtype=i32),                   # LRU stamps
-            jnp.zeros((span,), dtype=jnp.bool_),             # pfu flags
-            jnp.full((buf_len,), jnp.inf, dtype=jnp.float64),  # MSHR buffer
-            jnp.float64(0.0), jnp.float64(0.0),              # clock, pcie_free
-            zero, zero, zero,                  # counter, resident, nbuf
-            zero, zero, zero,                  # hits, late, faults
-            zero, zero, zero, zero, zero,      # issued, used, migr, evic, wb
-        )
-        (arrival, stamp, pfu, buf, clock, pcie_free, counter, resident,
-         nbuf, hits, late, faults, issued, used, migrated, evicted,
-         wbacks) = jax.lax.fori_loop(0, n, step, init)
+        init = {
+            "arrival": jnp.full((state_len,), jnp.inf, dtype=jnp.float64),
+            "stamp": jnp.zeros((state_len,), dtype=i32),
+            "pfu": jnp.zeros((state_len,), dtype=jnp.bool_),
+            "buf": jnp.full((buf_len,), jnp.inf, dtype=jnp.float64),
+            "clock": jnp.float64(0.0), "pcie_free": jnp.float64(0.0),
+            "counter": zero, "resident": zero, "nbuf": zero,
+            "hits": zero, "late": zero, "faults": zero,
+            "issued": zero, "used": zero, "migrated": zero,
+            "evicted": zero, "wbacks": zero,
+        }
+        if family == "oracle":
+            # trash slot: reads resident, never the LRU victim
+            init["arrival"] = init["arrival"].at[span].set(0.0)
+            init["stamp"] = init["stamp"].at[span].set(IMAX)
+        if family == "learned":
+            init["next_free"] = jnp.float64(0.0)
+        if family == "tree":
+            init["counts"] = tuple(
+                jnp.zeros((span >> (blk_shift + lv),), dtype=i32)
+                for lv in range(levels + 1))
+        final = jax.lax.fori_loop(0, n, step, init)
 
         # drain: every outstanding stall resolves (max over the buffer is
         # the max over any heap-pop order)
+        buf = final["buf"]
         tail = jnp.max(jnp.where(buf < jnp.inf, buf, -jnp.inf))
-        clock = jnp.where(nbuf > 0, jnp.maximum(clock, tail), clock)
+        clock = jnp.where(final["nbuf"] > 0,
+                          jnp.maximum(final["clock"], tail), final["clock"])
 
         out_ref[0, 0] = clock
-        out_ref[0, 1] = hits.astype(jnp.float64)
-        out_ref[0, 2] = late.astype(jnp.float64)
-        out_ref[0, 3] = faults.astype(jnp.float64)
-        out_ref[0, 4] = issued.astype(jnp.float64)
-        out_ref[0, 5] = used.astype(jnp.float64)
-        out_ref[0, 6] = migrated.astype(jnp.float64)
-        out_ref[0, 7] = evicted.astype(jnp.float64)
-        out_ref[0, 8] = ((migrated + wbacks).astype(jnp.float64) * page_size)
+        out_ref[0, 1] = final["hits"].astype(jnp.float64)
+        out_ref[0, 2] = final["late"].astype(jnp.float64)
+        out_ref[0, 3] = final["faults"].astype(jnp.float64)
+        out_ref[0, 4] = final["issued"].astype(jnp.float64)
+        out_ref[0, 5] = final["used"].astype(jnp.float64)
+        out_ref[0, 6] = final["migrated"].astype(jnp.float64)
+        out_ref[0, 7] = final["evicted"].astype(jnp.float64)
+        out_ref[0, 8] = ((final["migrated"] + final["wbacks"])
+                         .astype(jnp.float64) * page_size)
 
+    in_specs = [pl.BlockSpec((1, t_max), lambda l: (l, 0))]
+    if family == "learned":
+        in_specs.append(pl.BlockSpec((1, t_max), lambda l: (l, 0)))
+    if family == "oracle":
+        in_specs.append(pl.BlockSpec((1, ft_len), lambda l: (l, 0)))
+        in_specs.append(pl.BlockSpec((1, t_max), lambda l: (l, 0)))
+    in_specs += [pl.BlockSpec((1, _N_FPARAMS), lambda l: (l, 0)),
+                 pl.BlockSpec((1, _N_IPARAMS), lambda l: (l, 0))]
     call = pl.pallas_call(
         kernel,
         grid=(n_lanes,),
-        in_specs=[
-            pl.BlockSpec((1, t_max), lambda l: (l, 0)),
-            pl.BlockSpec((1, _N_FPARAMS), lambda l: (l, 0)),
-            pl.BlockSpec((1, _N_IPARAMS), lambda l: (l, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, len(STAT_FIELDS)), lambda l: (l, 0)),
         out_shape=jax.ShapeDtypeStruct((n_lanes, len(STAT_FIELDS)),
                                        jnp.float64),
@@ -284,9 +604,11 @@ def _lane_replay_fn(n_lanes: int, t_max: int, span: int, buf_len: int,
     return jax.jit(call)
 
 
-def _lane_shape(request: ReplayRequest) -> Tuple[int, int]:
+def _lane_shape(request: ReplayRequest) -> Tuple[str, int, int]:
+    """(family, length, span) of one request's lane."""
     lo, hi = dense_bounds(request.trace, request.prefetcher)
-    return len(request.trace.pages), hi - lo
+    return (lane_family(request.prefetcher) or "unpackable",
+            len(request.trace.pages), hi - lo)
 
 
 class PallasReplayBackend(ReplayBackend):
@@ -312,47 +634,61 @@ class PallasReplayBackend(ReplayBackend):
 
     # ------------------------------------------------------------------
     def can_replay(self, request: ReplayRequest) -> bool:
-        if type(request.prefetcher) not in PACKABLE_PREFETCHERS:
+        pf = request.prefetcher
+        family = lane_family(pf)
+        if family is None:
             return False
+        kind = _family_kind(family)
         if request.record_timeline:
             return False          # per-transfer timelines stay host-side
         n = len(request.trace.pages)
-        if n == 0 or n > MAX_LANE_ACCESSES:
+        if n == 0 or n > _FAMILY_MAX_ACCESSES[kind]:
             return False          # int32 stamp/counter headroom (above)
-        lo, hi = dense_bounds(request.trace, request.prefetcher)
+        if kind == "learned" and len(pf.predicted_pages) < n:
+            return False          # decision stream must cover the trace
+        if kind == "oracle" and not (0 < pf.lookahead
+                                     <= MAX_ORACLE_LOOKAHEAD):
+            return False          # window width is a static kernel shape
+        lo, hi = dense_bounds(request.trace, pf)
         span = hi - lo
         return lo >= 0 and span <= min(request.max_span_pages,
                                        MAX_LANE_SPAN_PAGES)
 
     # ------------------------------------------------------------------
     @staticmethod
-    def fits_batch(shapes: Sequence[Tuple[int, int]],
-                   shape: Tuple[int, int]) -> bool:
-        """True if a lane of ``shape`` = (length, span) fits a batch that
-        already holds lanes of ``shapes`` under the lane-count, padded
-        state, and padded access budgets.  The scheduler uses this to
-        flush batches incrementally instead of materializing whole grids.
+    def fits_batch(shapes: Sequence[Tuple[str, int, int]],
+                   shape: Tuple[str, int, int]) -> bool:
+        """True if a lane of ``shape`` = (family, length, span) — the
+        :func:`_lane_shape` of a request — fits a batch that already
+        holds lanes of ``shapes`` under the family-homogeneity rule and
+        the lane-count, padded state, and padded access budgets.  The
+        scheduler uses this to flush batches incrementally instead of
+        materializing whole grids.
         """
+        fam, t, sp = shape
+        if any(f != fam for f, _, _ in shapes):
+            return False          # never co-bucket prefetcher families
         n = len(shapes) + 1
-        t = max([shape[0]] + [s[0] for s in shapes])
-        span = max([shape[1]] + [s[1] for s in shapes])
+        t = max([t] + [s[1] for s in shapes])
+        sp = max([sp] + [s[2] for s in shapes])
         return (n <= MAX_LANES_PER_BATCH
-                and n * span <= MAX_BATCH_STATE_PAGES
+                and n * sp <= MAX_BATCH_STATE_PAGES
                 and n * t <= MAX_BATCH_ACCESSES)
 
     def pack_lanes(self, requests: Sequence[ReplayRequest]
                    ) -> List[List[int]]:
-        """Group request indices into lane batches.
+        """Group request indices into family-homogeneous lane batches.
 
-        Cells are sorted by (span, length) so lanes of one batch pad to
-        similar shapes, then greedily packed under :meth:`fits_batch`'s
-        budgets.  Deterministic in the request order.
+        Cells are sorted by (family, length, span) so lanes of one batch
+        share a kernel and pad to similar shapes, then greedily packed
+        under :meth:`fits_batch`'s budgets.  Deterministic in the request
+        order.
         """
         order = sorted(range(len(requests)),
                        key=lambda i: _lane_shape(requests[i]), reverse=True)
         batches: List[List[int]] = []
         cur: List[int] = []
-        cur_shapes: List[Tuple[int, int]] = []
+        cur_shapes: List[Tuple[str, int, int]] = []
         for i in order:
             shape = _lane_shape(requests[i])
             if cur and not self.fits_batch(cur_shapes, shape):
@@ -383,42 +719,77 @@ class PallasReplayBackend(ReplayBackend):
     # ------------------------------------------------------------------
     def _replay_batch(self, requests: Sequence[ReplayRequest]
                       ) -> List[UVMStats]:
-        """Replay one lane batch: pad, launch, unpack."""
+        """Replay one family-homogeneous lane batch: pad, launch, unpack."""
         import jax  # noqa: F401  (jax must import before enable_x64)
         from jax.experimental import enable_x64
 
+        families = {lane_family(r.prefetcher) for r in requests}
+        assert len(families) == 1, \
+            f"lane batch must be family-homogeneous, got {families}"
+        family = families.pop()
+        kind = _family_kind(family)
+        lookahead = int(family.split("/")[1]) if kind == "oracle" else 0
+
         lanes = len(requests)
         shapes = [_lane_shape(r) for r in requests]
-        t_max = _bucket(max(t for t, _ in shapes), 64)
-        span = _bucket(max(s for _, s in shapes), ROOT_PAGES)
+        t_max = _bucket(max(t for _, t, _ in shapes), 64)
+        span = _bucket(max(s for _, _, s in shapes), ROOT_PAGES)
         buf_len = max(int(r.config.mshr_entries) for r in requests) + 1
         n_lanes = _bucket(lanes, 1)
+        ft_len = 0
+        if kind == "oracle":
+            ft_len = _bucket(max(len(r.prefetcher.ft_pages)
+                                 for r in requests), 64) + lookahead
 
         pages = np.zeros((n_lanes, t_max), dtype=np.int32)
         fparams = np.zeros((n_lanes, _N_FPARAMS), dtype=np.float64)
         iparams = np.full((n_lanes, _N_IPARAMS), -1, dtype=np.int32)
         iparams[:, 0] = 0                      # padding lanes replay nothing
+        extra_in: List[np.ndarray] = []
+        if kind == "learned":
+            preds_in = np.full((n_lanes, t_max), -1, dtype=np.int32)
+            extra_in = [preds_in]
+        elif kind == "oracle":
+            # padded first-touch entries point at the trash slot ``span``
+            ft_in = np.full((n_lanes, ft_len), span, dtype=np.int32)
+            pos_in = np.zeros((n_lanes, t_max), dtype=np.int32)
+            extra_in = [ft_in, pos_in]
         for l, req in enumerate(requests):
-            trace, cfg = req.trace, req.config
-            req.prefetcher.reset()
-            lo, _ = dense_bounds(trace, req.prefetcher)
-            pages[l, :len(trace.pages)] = (
-                np.asarray(trace.pages, dtype=np.int64) - lo)
+            trace, cfg, pf = req.trace, req.config, req.prefetcher
+            pf.reset()
+            n = len(trace.pages)
+            lo, _ = dense_bounds(trace, pf)
+            pages[l, :n] = np.asarray(trace.pages, dtype=np.int64) - lo
             fparams[l] = (
                 cycles_per_access(trace, cfg), cfg.page_transfer_cycles,
                 cfg.far_fault_cycles, cfg.page_table_walk_cycles,
                 cfg.pcie_latency_cycles, cfg.prefetch_overhead_cycles,
-                req.prefetcher.extra_latency_cycles, cfg.page_size)
-            iparams[l] = (
-                len(trace.pages),
+                pf.extra_latency_cycles, cfg.page_size)
+            has_block = (type(pf) is BlockPrefetcher
+                         or (type(pf) is LearnedPrefetcher
+                             and pf.prefetch_block))
+            iparams[l, :4] = (
+                n,
                 -1 if cfg.device_pages is None else int(cfg.device_pages),
                 int(cfg.mshr_entries),
-                1 if isinstance(req.prefetcher, BlockPrefetcher) else 0)
+                1 if has_block else 0)
+            if kind == "learned":
+                pr = np.asarray(pf.predicted_pages, dtype=np.int64)[:n]
+                preds_in[l, :n] = np.where(pr >= 0, pr - lo, -1)
+            elif kind == "oracle":
+                ftp = np.asarray(pf.ft_pages, dtype=np.int64) - lo
+                ft_in[l, :len(ftp)] = ftp
+                # the stream position is a pure function of the access
+                # index (it only ever advances): precompute it host-side
+                pos_in[l, :n] = np.searchsorted(
+                    pf.ft_index, np.arange(n), side="right")
+                iparams[l, 4] = len(ftp)
 
         interpret = _interpret_mode()
         with enable_x64():
-            fn = _lane_replay_fn(n_lanes, t_max, span, buf_len, interpret)
-            raw = np.asarray(fn(pages, fparams, iparams))
+            fn = _lane_replay_fn(kind, n_lanes, t_max, span, buf_len,
+                                 ft_len, lookahead, interpret)
+            raw = np.asarray(fn(pages, *extra_in, fparams, iparams))
 
         out = []
         for l, req in enumerate(requests):

@@ -24,14 +24,17 @@ Backend scheduling
 
 Each cell names a replay backend (``--backend {numpy,pallas,auto}``; also
 the ``REPRO_SWEEP_BACKEND`` env var).  The scheduler groups pending
-pallas-eligible cells — on-demand/block cells whose page span fits a lane —
-into multi-lane batches by span/length compatibility and replays each
-batch in ONE ``jax_pallas`` kernel launch (one lane per cell, padded to
-the longest trace; see ``repro.uvm.backends.pallas_backend``).  Everything
-unpackable falls back *per cell* down the ``pallas → numpy → legacy``
-chain, and every result row records the backend that actually ran in its
-``backend`` column, so fallbacks are visible instead of silently reading
-as covered.  ``auto`` resolves to the pallas lanes only when jax is
+pallas-eligible cells — every paper-facing prefetcher
+(none/block/tree/learned/oracle) whose page span fits a lane — into
+multi-lane batches bucketed by *prefetcher family* in addition to
+span/length (a lane batch is always family-homogeneous: demand, tree,
+learned, and oracle lanes are different kernels with different per-lane
+state) and replays each batch in ONE ``jax_pallas`` kernel launch (one
+lane per cell, padded to the longest trace; see
+``repro.uvm.backends.pallas_backend``).  Everything unpackable falls back
+*per cell* down the ``pallas → numpy → legacy`` chain, and every result
+row records the backend that actually ran in its ``backend`` column, so
+fallbacks are visible instead of silently reading as covered.  ``auto`` resolves to the pallas lanes only when jax is
 already up on a platform the lanes compile natively for (TPU, or
 ``REPRO_PALLAS_COMPILE=1`` on other accelerators); everywhere else —
 including CPU hosts, where the lanes would run in interpret mode — it is
@@ -85,14 +88,21 @@ import numpy as np
 from repro.traces.trace import ACCESS_DTYPE, Trace
 from repro.uvm.config import UVMConfig
 from repro.uvm.engine import simulate
-from repro.uvm.prefetchers import (BlockPrefetcher, NoPrefetcher,
-                                   OraclePrefetcher, Prefetcher,
-                                   TreePrefetcher)
+from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
+                                   NoPrefetcher, OraclePrefetcher,
+                                   Prefetcher, TreePrefetcher)
 from repro.uvm.replay_core import (ReplayRequest, backend_chain,
                                    dispatch as replay_dispatch, get_backend)
 from repro.uvm.simulator import UVMStats
 
-PREFETCHERS = ("none", "block", "tree", "learned", "oracle")
+#: cell-spec prefetcher names to concrete types — the single source the
+#: CLI vocabulary (PREFETCHERS), :func:`make_prefetcher`, and the lane
+#: scheduler's packability/family maps all derive from, so a new
+#: prefetcher added here flows everywhere at once
+_PREFETCHER_TYPES = {"none": NoPrefetcher, "block": BlockPrefetcher,
+                     "tree": TreePrefetcher, "learned": LearnedPrefetcher,
+                     "oracle": OraclePrefetcher}
+PREFETCHERS = tuple(_PREFETCHER_TYPES)
 BACKENDS = ("auto", "numpy", "pallas")
 
 #: bump on any intentional change to the timing model, trace generators,
@@ -227,12 +237,6 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
 
 def make_prefetcher(cell: SweepCell, trace: Trace, config: UVMConfig,
                     cache_dir: Optional[str] = None) -> Prefetcher:
-    if cell.prefetcher == "none":
-        return NoPrefetcher()
-    if cell.prefetcher == "block":
-        return BlockPrefetcher()
-    if cell.prefetcher == "tree":
-        return TreePrefetcher()
     if cell.prefetcher == "oracle":
         return OraclePrefetcher(np.asarray(trace.pages))
     if cell.prefetcher == "learned":
@@ -241,7 +245,6 @@ def make_prefetcher(cell: SweepCell, trace: Trace, config: UVMConfig,
         # prediction_us / capacity variant, process, and (with cache_dir)
         # run.  See repro.uvm.predcache.
         from repro.uvm import predcache
-        from repro.uvm.prefetchers import LearnedPrefetcher
         pred_dir = (os.path.join(cache_dir, predcache.DEFAULT_SUBDIR)
                     if cache_dir else None)
         preds = predcache.get_or_train(trace, steps=cell.service_steps,
@@ -249,7 +252,10 @@ def make_prefetcher(cell: SweepCell, trace: Trace, config: UVMConfig,
         return LearnedPrefetcher(
             preds,
             extra_latency_cycles=cell.prediction_us * config.cycles_per_us)
-    raise ValueError(f"unknown prefetcher {cell.prefetcher!r}")
+    cls = _PREFETCHER_TYPES.get(cell.prefetcher)
+    if cls is None:
+        raise ValueError(f"unknown prefetcher {cell.prefetcher!r}")
+    return cls()
 
 
 def prepare_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
@@ -347,12 +353,22 @@ def _cell_path(out_dir: str, cell: SweepCell) -> str:
 def _packable_prefetcher_names() -> Tuple[str, ...]:
     """Cheap pre-filter vocabulary for the lane scheduler, derived from
     the pallas backend's own packable-prefetcher set so extending the
-    backend (e.g. packing tree cells) automatically widens the filter."""
+    backend with new families automatically widens the filter."""
     from repro.uvm.backends.pallas_backend import PACKABLE_PREFETCHERS
-    name_to_type = {"none": NoPrefetcher, "block": BlockPrefetcher,
-                    "tree": TreePrefetcher, "oracle": OraclePrefetcher}
-    return tuple(n for n, t in name_to_type.items()
+    return tuple(n for n, t in _PREFETCHER_TYPES.items()
                  if t in PACKABLE_PREFETCHERS)
+
+
+@functools.lru_cache(maxsize=1)
+def _family_of_prefetcher_name() -> Dict[str, str]:
+    """Lane-family kind per cell-spec prefetcher name, derived from the
+    pallas backend's own type map so a new packable family automatically
+    gets grouped by the scheduler (lane batches are family-homogeneous:
+    processing cells family-by-family packs full batches instead of
+    flushing a half-filled one at every family change)."""
+    from repro.uvm.backends.pallas_backend import FAMILY_BY_TYPE
+    return {n: FAMILY_BY_TYPE[t] for n, t in _PREFETCHER_TYPES.items()
+            if t in FAMILY_BY_TYPE}
 
 
 def _wants_lanes(cell: SweepCell) -> bool:
@@ -371,8 +387,11 @@ def _run_lane_batches(cells: Sequence[SweepCell],
     """Replay the pallas-eligible subset of ``cells`` as multi-lane batches.
 
     Returns ``{position: row}`` for every cell that was packed into a
-    lane.  Batches are built incrementally and flushed as soon as the
-    backend's shape budgets fill, so at most one batch of traces is
+    lane.  Cells are visited family-by-family (lane batches must be
+    family-homogeneous — ``fits_batch`` refuses to co-bucket two
+    prefetcher families, so interleaved families would flush half-empty
+    batches), and batches are built incrementally and flushed as soon as
+    the backend's shape budgets fill, so at most one batch of traces is
     resident at a time — whole-grid scheduling never materializes every
     trace at once.  Cells the backend declines (span too large, empty
     trace, ...) are left out of the result and flow back to the per-cell
@@ -389,7 +408,9 @@ def _run_lane_batches(cells: Sequence[SweepCell],
     batch: List[int] = []
     requests: List[ReplayRequest] = []
     caps: List[Optional[int]] = []
-    shapes: List[Tuple[int, int]] = []   # (length, span) per queued lane
+    # (family, length, span) per queued lane — the family element is what
+    # makes fits_batch refuse to co-bucket two prefetcher families
+    shapes: List[Tuple[str, int, int]] = []
 
     def _flush() -> None:
         if not batch:
@@ -414,7 +435,12 @@ def _run_lane_batches(cells: Sequence[SweepCell],
         caps.clear()
         shapes.clear()
 
-    for i, cell in enumerate(cells):
+    families = _family_of_prefetcher_name()
+    order = sorted(range(len(cells)),
+                   key=lambda i: (families.get(cells[i].prefetcher, "~"),
+                                  i))
+    for i in order:
+        cell = cells[i]
         trace, config, prefetcher, pages = prepare_cell(
             cell, cache_dir=cache_dir)
         req = ReplayRequest(trace, prefetcher, config)

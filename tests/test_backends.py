@@ -11,10 +11,13 @@ import pytest
 
 from repro.traces.trace import Trace, make_records
 from repro.uvm import UVMConfig
-from repro.uvm.backends.pallas_backend import (MAX_LANES_PER_BATCH,
-                                               PallasReplayBackend, _bucket)
+from repro.uvm.backends.pallas_backend import (MAX_LANE_SPAN_PAGES,
+                                               MAX_LANES_PER_BATCH,
+                                               PallasReplayBackend, _bucket,
+                                               lane_family)
+from repro.uvm.golden import make_prefetcher as golden_prefetcher
 from repro.uvm.prefetchers import (BlockPrefetcher, NoPrefetcher,
-                                   TreePrefetcher)
+                                   OraclePrefetcher, TreePrefetcher)
 from repro.uvm.replay_core import (ReplayRequest, available_backends,
                                    backend_chain, dispatch, get_backend,
                                    resolve_backend)
@@ -71,12 +74,28 @@ def test_dispatch_records_backend():
 
 
 def test_unpackable_request_falls_back_visibly():
-    """Tree cells cannot pack into pallas lanes: the chain drops to the
-    NumPy path and says so in the stats instead of silently covering."""
-    r = _req(np.arange(200) % 64, pf=TreePrefetcher())
+    """A cell the lanes decline (page span beyond the per-lane ceiling)
+    drops down the chain to the NumPy path and says so in the stats
+    instead of silently covering."""
+    pages = np.array([0, MAX_LANE_SPAN_PAGES + 1, 0, 7], dtype=np.int64)
+    r = _req(pages)
     assert not get_backend("pallas").can_replay(r)
     assert resolve_backend(r, "pallas").name == "numpy"
     assert dispatch(r, "pallas").backend == "numpy"
+
+
+def test_every_prefetcher_family_is_packable():
+    """All five paper-facing prefetcher families replay in-kernel: the
+    pallas chain keeps them instead of falling back."""
+    pages = np.arange(200) % 64
+    tr = _mk_trace(pages)
+    config = UVMConfig()
+    for name in ("none", "block", "tree", "learned", "oracle"):
+        r = ReplayRequest(_mk_trace(pages),
+                          golden_prefetcher(name, tr, config), config)
+        assert get_backend("pallas").can_replay(r), name
+        assert resolve_backend(r, "pallas").name == "pallas", name
+        assert dispatch(r, "pallas").backend == "pallas", name
 
 
 def test_pallas_declines_timelines_and_empty_traces():
@@ -105,8 +124,24 @@ def test_pallas_declines_overlong_lanes():
 
 def test_pallas_replay_rejects_unpackable():
     backend = get_backend("pallas")
+    too_wide = _req(np.array([0, MAX_LANE_SPAN_PAGES + 1], dtype=np.int64))
     with pytest.raises(ValueError, match="not packable"):
-        backend.replay([_req(np.arange(10), pf=TreePrefetcher())])
+        backend.replay([too_wide])
+
+
+def test_pallas_declines_oversized_oracle_lookahead():
+    """The oracle scan window is a static kernel shape: absurd lookaheads
+    fall back instead of bloating the kernel."""
+    from repro.uvm.backends.pallas_backend import MAX_ORACLE_LOOKAHEAD
+
+    backend = get_backend("pallas")
+    pages = np.arange(100, dtype=np.int64)
+    ok = _req(pages, pf=OraclePrefetcher(pages))
+    too_wide = _req(pages, pf=OraclePrefetcher(
+        pages, lookahead=MAX_ORACLE_LOOKAHEAD + 1))
+    assert backend.can_replay(ok)
+    assert not backend.can_replay(too_wide)
+    assert dispatch(too_wide, "pallas").backend == "numpy"
 
 
 def test_numpy_runtime_failure_propagates(monkeypatch):
@@ -146,14 +181,46 @@ def test_is_native_consistent_with_interpret_policy():
 
 def test_fits_batch_budgets():
     backend = get_backend("pallas")
-    assert backend.fits_batch([], (100, 512))
-    assert backend.fits_batch([(100, 512)], (100, 512))
+    assert backend.fits_batch([], ("demand", 100, 512))
+    assert backend.fits_batch([("demand", 100, 512)], ("demand", 100, 512))
     from repro.uvm.backends.pallas_backend import (MAX_BATCH_STATE_PAGES,
                                                    MAX_LANES_PER_BATCH)
-    assert not backend.fits_batch([(100, 512)] * MAX_LANES_PER_BATCH,
-                                  (100, 512))
+    assert not backend.fits_batch(
+        [("demand", 100, 512)] * MAX_LANES_PER_BATCH, ("demand", 100, 512))
     huge_span = MAX_BATCH_STATE_PAGES // 2 + 1
-    assert not backend.fits_batch([(100, huge_span)], (100, huge_span))
+    assert not backend.fits_batch([("demand", 100, huge_span)],
+                                  ("demand", 100, huge_span))
+
+
+def test_fits_batch_never_mixes_families():
+    """A lane batch is one kernel: incompatible prefetcher families must
+    never share it, whatever the shape budgets say."""
+    backend = get_backend("pallas")
+    assert not backend.fits_batch([("demand", 100, 512)],
+                                  ("tree", 100, 512))
+    assert not backend.fits_batch([("tree", 100, 512)],
+                                  ("learned", 100, 512))
+    # different oracle lookaheads are different kernels too
+    assert not backend.fits_batch([("oracle/96", 100, 512)],
+                                  ("oracle/32", 100, 512))
+    assert backend.fits_batch([("oracle/96", 100, 512)],
+                              ("oracle/96", 100, 512))
+
+
+def test_lane_family_buckets():
+    assert lane_family(NoPrefetcher()) == "demand"
+    assert lane_family(BlockPrefetcher()) == "demand"
+    assert lane_family(TreePrefetcher()) == "tree"
+    pages = np.arange(10, dtype=np.int64)
+    assert lane_family(OraclePrefetcher(pages)) == "oracle/96"
+    tr = _mk_trace(pages)
+    assert lane_family(
+        golden_prefetcher("learned", tr, UVMConfig())) == "learned"
+
+    class Unknown(NoPrefetcher):
+        pass
+
+    assert lane_family(Unknown()) is None
 
 
 def test_bucketing_reuses_kernel_shapes():
@@ -174,13 +241,41 @@ def test_pack_lanes_respects_budgets():
     assert len(batches) == 2
 
 
+def _mixed_family_requests():
+    pages = np.arange(200) % 64
+    tr = _mk_trace(pages)
+    config = UVMConfig()
+    reqs = []
+    for name in ("none", "tree", "block", "learned", "oracle",
+                 "tree", "none", "learned", "oracle", "block"):
+        reqs.append(ReplayRequest(_mk_trace(pages),
+                                  golden_prefetcher(name, tr, config),
+                                  config))
+    return reqs
+
+
+def test_pack_lanes_never_cobuckets_families():
+    """Interleaved cells of every prefetcher family pack into
+    family-homogeneous batches covering every request exactly once."""
+    backend = PallasReplayBackend()
+    reqs = _mixed_family_requests()
+    batches = backend.pack_lanes(reqs)
+    assert sorted(i for b in batches for i in b) == list(range(len(reqs)))
+    for b in batches:
+        fams = {lane_family(reqs[i].prefetcher) for i in b}
+        assert len(fams) == 1, f"mixed-family batch: {fams}"
+    # 4 families -> exactly 4 batches (shapes are identical, so nothing
+    # else may force a flush)
+    assert len(batches) == 4
+
+
 # ---------------------------------------------------------------------------
 # multi-lane equivalence (deterministic)
 # ---------------------------------------------------------------------------
 
 def test_lane_batch_matches_numpy_mixed_cells():
-    """One batch mixing ragged lengths, both packable prefetchers, an
-    oversubscribed cell, and a tight-MSHR fault storm."""
+    """One batch mixing ragged lengths, both demand-family prefetchers,
+    an oversubscribed cell, and a tight-MSHR fault storm."""
     rng = np.random.default_rng(7)
     cases = [
         # cyclic sweep, on-demand
@@ -208,6 +303,47 @@ def test_lane_batch_matches_numpy_mixed_cells():
         _assert_equivalent(g, w, context=f"lane {i}")
 
 
+def test_all_family_lane_replay_matches_numpy():
+    """Every prefetcher family through the lanes in one replay() call —
+    tree escalation churn under oversubscription, learned decision
+    streams, oracle lookahead windows — equals independent NumPy
+    replays."""
+    rng = np.random.default_rng(11)
+    perm = (np.arange(3 * 512) * 7) % (3 * 512)
+    cases = [
+        ("tree", np.arange(0, 2000, 3), None, 64),
+        ("tree", perm.repeat(2), 700, 16),      # escalate + evict churn
+        ("learned", np.tile(np.arange(350), 3), None, 64),
+        ("learned", np.tile(np.arange(400), 4), 180, 64),
+        ("oracle", rng.integers(0, 3000, size=500), None, 64),
+        ("oracle", np.tile(np.arange(400), 3), 220, 64),
+        ("none", np.tile(np.arange(300), 2), None, 64),
+        ("block", np.arange(0, 1500, 5), 200, 64),
+    ]
+
+    def build(name, pages):
+        tr = _mk_trace(np.asarray(pages, dtype=np.int64))
+        return tr, golden_prefetcher(name, tr, UVMConfig())
+
+    backend = get_backend("pallas")
+    requests = []
+    for name, pages, cap, mshr in cases:
+        tr, pf = build(name, pages)
+        requests.append(ReplayRequest(
+            tr, pf, UVMConfig(device_pages=cap, mshr_entries=mshr)))
+    assert all(backend.can_replay(r) for r in requests)
+    got = backend.replay(requests)
+    want = []
+    for name, pages, cap, mshr in cases:
+        tr, pf = build(name, pages)
+        want.append(dispatch(ReplayRequest(
+            tr, pf, UVMConfig(device_pages=cap, mshr_entries=mshr)),
+            "numpy"))
+    for (name, _, cap, _), g, w in zip(cases, got, want):
+        assert g.backend == "pallas"
+        _assert_equivalent(g, w, context=f"{name} cap={cap}")
+
+
 # ---------------------------------------------------------------------------
 # property-based lane packing (skipped when hypothesis is absent)
 # ---------------------------------------------------------------------------
@@ -224,24 +360,31 @@ if HAVE_HYPOTHESIS:
 
     _cell = st_.tuples(
         st_.lists(st_.integers(0, 600), min_size=1, max_size=120),
-        st_.sampled_from(["none", "block"]),
+        st_.sampled_from(["none", "block", "tree", "learned", "oracle"]),
         st_.sampled_from([None, 48, 200]),
     )
 
     @settings(max_examples=15, deadline=None)
     @given(st_.lists(_cell, min_size=1, max_size=5))
     def test_lane_batch_property(cells):
-        """A lane-batched pallas replay of N random cells equals N
-        independent NumPy replays on every integer counter — ragged
-        lengths and oversubscribed (cap=48/200) cells included."""
+        """A lane-batched pallas replay of N random cells — every
+        prefetcher family — equals N independent NumPy replays on every
+        integer counter; ragged lengths and oversubscribed (cap=48/200)
+        cells included.  Interleaved families exercise the
+        family-homogeneous packing."""
         def build(spec):
             pages, pf_name, cap = spec
-            pf = NoPrefetcher() if pf_name == "none" else BlockPrefetcher()
-            return _req(np.asarray(pages), pf=pf, cap=cap)
+            tr = _mk_trace(np.asarray(pages, dtype=np.int64))
+            config = UVMConfig(device_pages=cap, mshr_entries=64)
+            return ReplayRequest(tr, golden_prefetcher(pf_name, tr, config),
+                                 config)
 
         backend = get_backend("pallas")
         requests = [build(c) for c in cells]
         assert all(backend.can_replay(r) for r in requests)
+        for b in backend.pack_lanes(requests):
+            assert len({lane_family(requests[i].prefetcher)
+                        for i in b}) == 1
         got = backend.replay(requests)
         want = [dispatch(build(c), "numpy") for c in cells]
         for i, (g, w) in enumerate(zip(got, want)):

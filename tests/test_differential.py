@@ -1,0 +1,214 @@
+"""Cross-backend differential fuzzer for the UVM replay stack.
+
+Every registered :class:`~repro.uvm.replay_core.ReplayBackend` claims the
+same timing model; this suite *derives* the pairwise guarantee instead of
+hand-writing one test per backend pair.  For each generated (trace,
+config, prefetcher) cell, the cell is replayed through **every** backend
+whose ``can_replay`` accepts it, and all replays are compared pairwise:
+integer counters exactly, cycles/pcie_bytes to 1e-9 relative.  A backend
+registered tomorrow is covered by construction — it only has to show up
+in ``available_backends()``.
+
+Coverage is deliberately skewed toward the paper's hard regimes:
+
+* tree cells under oversubscription (escalation counts rising and falling
+  through LRU churn — the regime the dense count arrays must track),
+* learned cells whose predictions ride through the ``repro.uvm.predcache``
+  atomic store (the ``learned-cached`` variant),
+* tight-MSHR fault storms and ragged tiny traces.
+
+The legacy backend accepts everything, and the numpy/pallas backends must
+accept every generated cell here (spans are small), so each example
+compares at least three implementations; the suite fails loudly if a
+backend silently stops accepting the fuzzed families (vacuous-pass
+guard).  The deterministic seeded sweep below always runs; the
+hypothesis-driven fuzzers widen it when hypothesis is installed (CI
+installs it — see ``scripts/ci_check.sh``).
+"""
+import numpy as np
+import pytest
+
+from repro.traces.trace import ROOT_PAGES, Trace, make_records
+from repro.uvm import UVMConfig
+from repro.uvm.golden import make_prefetcher
+from repro.uvm.replay_core import (ReplayRequest, available_backends,
+                                   get_backend)
+
+INT_FIELDS = ("n_accesses", "hits", "late", "faults", "prefetch_issued",
+              "prefetch_used", "pages_migrated", "pages_evicted")
+FLOAT_FIELDS = ("cycles", "pcie_bytes")
+
+#: every fuzzed cell must be accepted by at least these backends — a
+#: regression that silently shrinks a backend's eligibility would
+#: otherwise turn the differential guarantee vacuous
+REQUIRED_BACKENDS = {"legacy", "numpy", "pallas"}
+
+PREFETCHER_NAMES = ("none", "block", "tree", "learned", "learned-cached",
+                    "oracle")
+
+
+def _mk_trace(pages):
+    pages = np.asarray(pages, dtype=np.int64)
+    recs = make_records(len(pages))
+    recs["page"] = pages
+    return Trace("fuzz", recs, {}, {}, len(pages) * 100)
+
+
+def _assert_pairwise_equal(stats_by_backend, context):
+    names = sorted(stats_by_backend)
+    ref_name = names[0]
+    ref = stats_by_backend[ref_name]
+    for name in names[1:]:
+        got = stats_by_backend[name]
+        for f in INT_FIELDS:
+            assert getattr(got, f) == getattr(ref, f), (
+                f"{context}: {name} vs {ref_name}: {f} "
+                f"{getattr(got, f)} != {getattr(ref, f)}")
+        for f in FLOAT_FIELDS:
+            assert getattr(got, f) == pytest.approx(
+                getattr(ref, f), rel=1e-9, abs=1e-9), (
+                f"{context}: {name} vs {ref_name}: {f} "
+                f"{getattr(got, f)} != {getattr(ref, f)}")
+
+
+def _replay_everywhere(pages, pf_name, cap, mshr):
+    """Replay one cell through every accepting backend; returns
+    {backend_name: stats}."""
+    trace = _mk_trace(pages)
+    config = UVMConfig(device_pages=cap, mshr_entries=mshr)
+    stats_by_backend = {}
+    for name in available_backends():
+        backend = get_backend(name)
+        # a fresh prefetcher per backend: replay consumes its state
+        request = ReplayRequest(trace, make_prefetcher(pf_name, trace,
+                                                       config), config)
+        if not backend.can_replay(request):
+            continue
+        stats = backend.replay([request])[0]
+        assert stats.backend == name
+        stats_by_backend[name] = stats
+    missing = REQUIRED_BACKENDS - set(stats_by_backend)
+    assert not missing, (
+        f"backends {sorted(missing)} declined a fuzzed "
+        f"({pf_name}, cap={cap}) cell — the differential guarantee "
+        "would pass vacuously")
+    return stats_by_backend
+
+
+def _random_pages(rng):
+    kind = rng.integers(0, 3)
+    if kind == 0:
+        # arbitrary small traces (ragged lengths, repeats, tiny sets)
+        return rng.integers(0, 600, size=int(rng.integers(1, 160)))
+    if kind == 1:
+        # dense cyclic sweeps: oversubscription caps make these churn
+        return np.tile(np.arange(int(rng.integers(64, 320))),
+                       int(rng.integers(1, 5)))
+    # strided sweeps crossing many basic blocks (block/tree escalation)
+    return np.arange(0, int(rng.integers(256, 2048)),
+                     int(rng.integers(1, 9)))
+
+
+def _churn_pages(rng):
+    """Permuted two-region sweeps: tree node counts rise and fall
+    continuously (migrate/evict/re-migrate) under a tight cap."""
+    n_churn = 2 * ROOT_PAGES
+    perm = rng.permutation(n_churn)
+    return np.concatenate([perm + (0 if k % 2 == 0 else 4096)
+                           for k in range(4)])
+
+
+# ---------------------------------------------------------------------------
+# deterministic seeded sweep — always runs, even without hypothesis
+# ---------------------------------------------------------------------------
+
+def _seeded_cells():
+    rng = np.random.default_rng(20260728)
+    cells = []
+    # every prefetcher family over random traces / caps / MSHR depths
+    for i, pf_name in enumerate(PREFETCHER_NAMES * 3):
+        cells.append((f"seed{i}", _random_pages(rng), pf_name,
+                      [None, 48, 200][i % 3], [4, 16, 64][i % 3]))
+    # tree-churn oversubscription cells (the ISSUE-called-out regime)
+    for i, cap in enumerate([700, 1100, None]):
+        cells.append((f"churn{i}", _churn_pages(rng), "tree", cap, 16))
+    return cells
+
+
+@pytest.mark.parametrize("cell", _seeded_cells(), ids=lambda c: c[0])
+def test_differential_seeded_cells(cell):
+    """Seeded random cells agree across every registered backend pair."""
+    name, pages, pf_name, cap, mshr = cell
+    stats = _replay_everywhere(pages, pf_name, cap, mshr)
+    _assert_pairwise_equal(stats,
+                           f"[{name}: {pf_name} cap={cap} mshr={mshr} "
+                           f"n={len(pages)}]")
+
+
+def test_differential_learned_cached_matches_plain():
+    """Learned cells whose predictions round-trip the predcache store
+    agree across all backends AND with the direct-array learned cell on
+    every backend (the cache must be replay-invisible everywhere)."""
+    rng = np.random.default_rng(7)
+    for cap in (None, 48):
+        pages = rng.integers(0, 500, size=120)
+        cached = _replay_everywhere(pages, "learned-cached", cap, 16)
+        plain = _replay_everywhere(pages, "learned", cap, 16)
+        _assert_pairwise_equal(cached, f"[learned-cached cap={cap}]")
+        merged = dict(plain)
+        merged.update({f"cached-{k}": v for k, v in cached.items()})
+        _assert_pairwise_equal(merged, f"[learned vs cached cap={cap}]")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzzers (skipped when hypothesis is absent; CI installs it)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st_
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - degraded environment
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    _pages = st_.one_of(
+        st_.lists(st_.integers(0, 600), min_size=1, max_size=160),
+        st_.builds(lambda n, reps: np.tile(np.arange(n, dtype=np.int64),
+                                           reps).tolist(),
+                   st_.integers(64, 320), st_.integers(1, 4)),
+        st_.builds(lambda stop, step: np.arange(0, stop, step,
+                                                dtype=np.int64).tolist(),
+                   st_.integers(256, 2048), st_.integers(1, 9)),
+    )
+
+    _cell = st_.tuples(
+        _pages,
+        st_.sampled_from(PREFETCHER_NAMES),
+        st_.sampled_from([None, 48, 200]),       # device capacity (pages)
+        st_.sampled_from([4, 16, 64]),           # MSHR entries
+    )
+
+    @settings(max_examples=25, deadline=None)
+    @given(_cell)
+    def test_differential_random_cells(cell):
+        """Random (trace, config, prefetcher) cells agree across every
+        registered backend pair."""
+        pages, pf_name, cap, mshr = cell
+        stats = _replay_everywhere(pages, pf_name, cap, mshr)
+        _assert_pairwise_equal(stats,
+                               f"[{pf_name} cap={cap} mshr={mshr} "
+                               f"n={len(pages)}]")
+
+    @settings(max_examples=8, deadline=None)
+    @given(st_.integers(0, 2 ** 32 - 1), st_.sampled_from([None, 700, 1100]))
+    def test_differential_tree_churn_oversubscription(seed, cap):
+        """Tree cells on permuted two-region sweeps under
+        oversubscription: node counts rise and fall continuously, the
+        regime where per-level count state diverges first if any backend
+        drifts."""
+        pages = _churn_pages(np.random.default_rng(seed))
+        stats = _replay_everywhere(pages, "tree", cap, 16)
+        _assert_pairwise_equal(stats, f"[tree-churn seed={seed} cap={cap}]")

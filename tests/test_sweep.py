@@ -188,9 +188,33 @@ def test_sweep_pallas_grid_matches_numpy(tmp_path):
         assert got["hit_rate"] == pytest.approx(want["hit_rate"], rel=1e-6)
 
 
-def test_sweep_pallas_fallback_is_recorded(tmp_path):
-    """Unpackable cells under --backend pallas fall back per cell to the
-    NumPy path and the row says so instead of reading as covered."""
+def test_sweep_mixed_family_grid_runs_on_lanes(tmp_path):
+    """A grid interleaving every non-learned prefetcher family under
+    --backend pallas replays every cell on the lanes (family-homogeneous
+    batches), with rows matching the NumPy backend."""
+    cells_p = expand_grid(BENCHES, ["none", "tree", "oracle", "block"],
+                          scales=[0.25], device_fracs=[None, 0.6],
+                          backend="pallas")
+    rows_p = run_sweep(cells_p, out_dir=str(tmp_path / "pallas"), workers=1)
+    assert [r["backend"] for r in rows_p] == ["pallas"] * len(rows_p)
+    cells_n = expand_grid(BENCHES, ["none", "tree", "oracle", "block"],
+                          scales=[0.25], device_fracs=[None, 0.6],
+                          backend="numpy")
+    rows_n = run_sweep(cells_n, out_dir=str(tmp_path / "numpy"), workers=1)
+    for got, want in zip(rows_p, rows_n):
+        for f in INT_ROW_FIELDS:
+            assert got[f] == want[f], (got["bench"], got["prefetcher"], f)
+        assert got["cycles"] == pytest.approx(want["cycles"], rel=1e-6)
+
+
+def test_sweep_pallas_fallback_is_recorded(tmp_path, monkeypatch):
+    """Cells the lanes decline under --backend pallas fall back per cell
+    to the NumPy path and the row says so instead of reading as
+    covered."""
+    from repro.uvm.backends.pallas_backend import PallasReplayBackend
+
+    monkeypatch.setattr(PallasReplayBackend, "can_replay",
+                        lambda self, request: False)
     cells = expand_grid(["ATAX"], ["tree"], scales=[0.25], backend="pallas")
     rows = run_sweep(cells, out_dir=str(tmp_path / "out"), workers=1)
     assert rows[0]["backend"] == "numpy"

@@ -9,10 +9,13 @@ Three guarantees, pinned by recorded fixtures (tests/golden/uvm_golden.json):
    float accumulators (bit-equal in practice) for every
    (trace × prefetcher) cell, and
 3. the jax_pallas multi-lane backend reproduces the legacy engine for
-   every packable (on-demand / block) cell — integer counters exact,
-   cycles/pcie_bytes within 1e-6 relative — with ALL packable cells
+   EVERY golden cell — all five paper-facing prefetcher families
+   (none/block/tree/learned/oracle, plus the cached-prediction learned
+   variant) — integer counters exact, cycles/pcie_bytes within 1e-6
+   relative (bit-equal in practice), with each lane family's cells
    replayed in one lane batch (interpret mode on CPU, so CI covers it
-   without a GPU).
+   without a GPU).  A family whose eligibility silently shrinks to zero
+   cells fails the suite (``test_pallas_eligibility_is_not_vacuous``).
 
 Regenerate fixtures after an intentional model change with
 ``PYTHONPATH=src python scripts/regen_uvm_golden.py``.
@@ -89,27 +92,64 @@ def test_fixture_has_no_stale_cells():
 
 
 # ---------------------------------------------------------------------------
-# pallas multi-lane backend: every packable golden cell in ONE lane batch
+# pallas multi-lane backend: every golden cell of each lane family in ONE
+# lane batch (demand = none/block, tree, learned (+cached), oracle)
 # ---------------------------------------------------------------------------
 
-PALLAS_CELLS = [c for c in golden_cell_ids()
-                if c.split("/")[1] in ("none", "block")]
+PALLAS_FAMILY_CELLS = {
+    "demand": [c for c in golden_cell_ids()
+               if c.split("/")[1] in ("none", "block")],
+    "tree": [c for c in golden_cell_ids() if c.split("/")[1] == "tree"],
+    "learned": [c for c in golden_cell_ids()
+                if c.split("/")[1] in ("learned", "learned-cached")],
+    "oracle": [c for c in golden_cell_ids() if c.split("/")[1] == "oracle"],
+}
 
 
-def test_pallas_lane_batch_matches_legacy():
-    """All on-demand/block golden cells — including the oversubscribed
-    LRU-churn traces and the MSHR-pressure storm — replayed as one
-    multi-lane pallas batch: integer counters exact, floats to 1e-6."""
+def test_pallas_eligibility_is_not_vacuous():
+    """Empty-eligibility regression guard: every lane family must have
+    golden cells AND the pallas backend must accept all of them, so the
+    per-family equivalence batches below can never silently replay zero
+    cells (which would let the golden guarantee pass vacuously)."""
+    from repro.uvm.backends.pallas_backend import lane_family
+
+    backend = get_backend("pallas")
+    seen_families = set()
+    for family, cells in PALLAS_FAMILY_CELLS.items():
+        assert cells, f"no golden cells for lane family {family!r}"
+        for cell_id in cells:
+            trace, config, factory = golden_cell(cell_id)
+            req = ReplayRequest(trace, factory(), config)
+            assert backend.can_replay(req), (
+                f"pallas backend declines golden cell {cell_id}: the "
+                f"{family} lane batch would silently shrink")
+            seen_families.add(lane_family(req.prefetcher).split("/")[0])
+    # all five paper-facing prefetchers map onto these four kernel
+    # families; every family must actually be exercised
+    assert seen_families == {"demand", "tree", "learned", "oracle"}
+    assert sum(len(c) for c in PALLAS_FAMILY_CELLS.values()) == len(
+        golden_cell_ids())
+
+
+@pytest.mark.parametrize("family", sorted(PALLAS_FAMILY_CELLS))
+def test_pallas_lane_batch_matches_legacy(family):
+    """All golden cells of one lane family — including the oversubscribed
+    LRU-churn traces, the MSHR-pressure storm, tree escalation churn, and
+    cached learned predictions — replayed as ONE multi-lane pallas batch:
+    integer counters exact, floats to 1e-6 (bit-equal in practice)."""
+    cells = PALLAS_FAMILY_CELLS[family]
+    assert cells, f"vacuous lane batch for family {family!r}"
     backend = get_backend("pallas")
     requests = []
-    for cell_id in PALLAS_CELLS:
+    for cell_id in cells:
         trace, config, factory = golden_cell(cell_id)
         requests.append(ReplayRequest(trace, factory(), config))
     assert all(backend.can_replay(r) for r in requests)
     assert len(backend.pack_lanes(requests)) == 1, \
-        "golden cells must pack into a single lane batch"
+        f"{family} golden cells must pack into a single lane batch"
     all_stats = backend.replay(requests)
-    for cell_id, stats in zip(PALLAS_CELLS, all_stats):
+    assert len(all_stats) == len(cells)
+    for cell_id, stats in zip(cells, all_stats):
         assert stats.backend == "pallas"
         _assert_stats_match(stats_to_dict(stats),
                             stats_to_dict(_legacy_stats(cell_id)), rel=1e-6,
