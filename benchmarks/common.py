@@ -172,10 +172,12 @@ def _service_predictions(bench: str, steps: int):
 
 
 def _eval_cell(bench: str, prefetcher: str, *, prediction_us: float = 1.0,
-               device_pages: Optional[int] = None) -> SweepCell:
+               device_pages: Optional[int] = None,
+               eviction: str = "lru") -> SweepCell:
     """The sweep-grid point matching the paper's evaluation setup."""
     return SweepCell(bench=bench, prefetcher=prefetcher,
                      prediction_us=prediction_us, device_pages=device_pages,
+                     eviction=eviction,
                      window=EVAL_WINDOW, engine="vectorized",
                      backend=SWEEP_BACKEND, service_steps=SERVICE_STEPS)
 

@@ -7,6 +7,8 @@ summary CSV at the end (per-table CSVs above it).
     PYTHONPATH=src python -m benchmarks.run --only table10,table11,oversub \
         --workers 8                                    # parallel UVM sweeps
     PYTHONPATH=src python -m benchmarks.run --emit-json BENCH_sweep.json
+    PYTHONPATH=src python -m benchmarks.run --scenario oversub-full \
+        --workers 8     # full 11-bench x ratio x eviction-policy matrix
 
 The UVM suites (table10/table11/perf/oversub/fig10/fig12) all route through
 ``repro.uvm.sweep``: simulations run on the backend-pluggable replay core
@@ -48,7 +50,9 @@ SUITES = [
     ("perf", perf_ipc.main),
     ("kernels", kernels_bench.main),
     ("offload", offload_bench.main),
-    ("oversub", oversub_bench.main),
+    # explicit empty argv: oversub_bench has its own CLI and must not
+    # re-parse run.py's flags when invoked as a suite
+    ("oversub", lambda: oversub_bench.main([])),
 ]
 
 
@@ -70,17 +74,38 @@ def main() -> None:
     ap.add_argument("--emit-json", default=None, metavar="PATH",
                     help="write per-suite wall-clock rows as JSON so "
                          "future PRs can diff the perf trajectory")
+    ap.add_argument("--scenario", default=None,
+                    help="run a named repro.uvm.scenarios oversubscription "
+                         "matrix (e.g. oversub-full) as the only suite, "
+                         "through the shared sweep caches; honors "
+                         "--workers/--backend")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.workers is not None:
         common.SWEEP_WORKERS = args.workers
     if args.backend is not None:
         common.SWEEP_BACKEND = args.backend
+    suites = SUITES
+    if args.scenario and args.only:
+        ap.error("--scenario replaces the suite list; it cannot be "
+                 "combined with --only")
+    if args.scenario:
+        # scenario routing replaces the suite list: one registry-defined
+        # (bench x ratio x eviction x prefetcher) matrix, resumable;
+        # oversub_bench's own --emit-json writes the row-level JSON (the
+        # per-suite wall-clock doc below is still written when asked)
+        scenario_argv = ["--scenario", args.scenario]
+        if args.emit_json:
+            scenario_argv += ["--emit-json",
+                              args.emit_json + ".rows.json"]
+        suites = [(f"scenario:{args.scenario}",
+                   lambda: oversub_bench.main(scenario_argv))]
+        only = None
 
     t_start = time.time()
     summary = []
     failed = []
-    for name, fn in SUITES:
+    for name, fn in suites:
         if only and name not in only:
             continue
         t0 = time.time()
@@ -103,6 +128,7 @@ def main() -> None:
             "quick": common.QUICK,
             "workers": common.SWEEP_WORKERS,
             "backend": common.SWEEP_BACKEND,
+            "scenario": args.scenario,
             "total_seconds": time.time() - t_start,
             "rows": [{"suite": name, "seconds": us / 1e6, "status": status}
                      for name, us, status in summary],

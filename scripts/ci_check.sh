@@ -24,12 +24,13 @@ python -m pytest -x -q --ignore=tests/test_uvm_golden.py \
     --ignore=tests/test_backends.py
 
 echo "[ci] replay backends: golden suite against numpy AND pallas lanes"
-echo "[ci] (all five prefetcher families), backend contract + lane-packing"
-echo "[ci] property suite, cross-backend differential fuzzer, sweep,"
+echo "[ci] (all five prefetcher families x all eviction policies),"
+echo "[ci] backend contract + lane-packing property suite, cross-backend"
+echo "[ci] differential fuzzer (policy axis included), sweep, scenarios,"
 echo "[ci] predcache (pallas runs in interpret mode, CPU platform pinned)"
 JAX_PLATFORMS=cpu python -m pytest -q tests/test_uvm_golden.py \
     tests/test_backends.py tests/test_differential.py \
-    tests/test_sweep.py tests/test_predcache.py
+    tests/test_scenarios.py tests/test_sweep.py tests/test_predcache.py
 
 echo "[ci] sim_throughput smoke: engines must stay counter-identical"
 # the 60k smoke is warmup-dominated, so the default wall-clock floors
@@ -45,5 +46,27 @@ echo "[ci] floors stay off; cross-backend counter drift fails the run)"
 JAX_PLATFORMS=cpu python -m benchmarks.sim_throughput --n 24000 \
     --backends numpy,pallas \
     --json "${TMPDIR:-/tmp}/ci_sim_throughput_pallas.json"
+
+echo "[ci] scenario-matrix smoke: oversub-smoke (2 benchmarks x 2 ratios"
+echo "[ci] x all eviction policies, < 100k total accesses) through the"
+echo "[ci] pallas lanes in interpret mode; every row must record"
+echo "[ci] backend=pallas and its eviction policy"
+SCN_OUT="$(mktemp -d "${TMPDIR:-/tmp}/ci_scenario_smoke.XXXXXX")"
+JAX_PLATFORMS=cpu python -m repro.uvm.sweep --scenario oversub-smoke \
+    --backend pallas --out "$SCN_OUT"
+python - "$SCN_OUT" <<'PYEOF'
+import json, sys
+rows = json.load(open(sys.argv[1] + "/results.json"))["rows"]
+assert len(rows) == 24, f"scenario smoke expanded {len(rows)} cells, not 24"
+bad = [r for r in rows if r["backend"] != "pallas"]
+assert not bad, f"{len(bad)} smoke cells fell off the pallas lanes"
+policies = {r["eviction"] for r in rows}
+assert policies == {"lru", "random", "hotcold"}, policies
+assert all(r["scenario"] == "oversub-smoke" for r in rows)
+assert all(r["pages_evicted"] > 0 for r in rows
+           if r["device_frac"] == 0.5 and r["prefetcher"] == "none")
+print(f"[ci] scenario smoke ok: {len(rows)} rows, policies {sorted(policies)}")
+PYEOF
+rm -rf "$SCN_OUT"
 
 echo "[ci] OK"

@@ -24,33 +24,44 @@ OUT = os.path.join(os.path.dirname(__file__), "..", "tests", "golden",
 
 
 def audit_pallas_eligibility(requests) -> None:
-    """Report which lane family replays each golden cell in-kernel.
+    """Report which (lane family, eviction policy) bucket replays each
+    golden cell in-kernel.
 
-    The golden suite pins every family's cells as ONE pallas lane batch
+    The golden suite pins every (family, policy) bucket's cells as ONE
+    pallas lane batch
     (``tests/test_uvm_golden.py::test_pallas_lane_batch_matches_legacy``);
     this audit fails regeneration loudly if any cell stops being
-    pallas-eligible, so the fixtures can never quietly outgrow the
-    kernel's equivalence coverage.  ``requests`` are the (cell_id,
-    ReplayRequest) pairs main() already materialized.
+    pallas-eligible — or any eviction policy loses all its eligible cells
+    — so the fixtures can never quietly outgrow the kernel's equivalence
+    coverage.  ``requests`` are the (cell_id, ReplayRequest) pairs main()
+    already materialized.
     """
     from repro.uvm.backends.pallas_backend import lane_family
+    from repro.uvm.eviction import EVICTION_POLICIES
     from repro.uvm.replay_core import get_backend
 
     backend = get_backend("pallas")
-    families = {}
+    buckets = {}
     declined = []
     for cell_id, req in requests:
-        family = lane_family(req.prefetcher)
-        families.setdefault(family, []).append(cell_id)
+        bucket = (lane_family(req.prefetcher), req.config.eviction)
+        buckets.setdefault(bucket, []).append(cell_id)
         if not backend.can_replay(req):
             declined.append(cell_id)
-    for family in sorted(families):
-        print(f"pallas lane family {family}: {len(families[family])} cells")
+    for family, policy in sorted(buckets):
+        print(f"pallas lane bucket {family}/{policy}: "
+              f"{len(buckets[(family, policy)])} cells")
     if declined:
         raise SystemExit(
             f"pallas backend declines golden cells {declined}; the lane "
             "equivalence batches would silently shrink — fix eligibility "
             "before regenerating")
+    missing = set(EVICTION_POLICIES) - {pol for _, pol in buckets}
+    if missing:
+        raise SystemExit(
+            f"eviction policies {sorted(missing)} have no pallas-eligible "
+            "golden cells; their lane equivalence would be vacuous — add "
+            "per-policy cases to repro.uvm.golden before regenerating")
 
 
 def main() -> None:

@@ -2,9 +2,13 @@
 
 Implements on-demand page migration with far-faults, a PCIe interconnect
 queue, the CUDA-driver tree-based neighborhood prefetcher (the UVMSmart
-baseline), delayed migration / zero-copy policies, LRU eviction under
-oversubscription, and the paper's evaluation metrics (page hit rate, PCIe
-traffic, prefetcher accuracy/coverage, Unity).
+baseline), delayed migration / zero-copy policies, pluggable eviction
+under oversubscription (LRU / counter-based random / access-frequency
+hot-cold, see ``repro.uvm.eviction``), and the paper's evaluation metrics
+(page hit rate, PCIe traffic, prefetcher accuracy/coverage, Unity).
+``repro.uvm.scenarios`` holds the declarative oversubscription scenario
+matrix (benchmark × capacity ratio × eviction policy × prefetcher;
+``python -m repro.uvm.sweep --scenario oversub-full``).
 
 Backend-pluggable replay core
 -----------------------------
@@ -52,6 +56,7 @@ write-rename + training lock), and across runs — reuses the cached array.
 """
 from repro.uvm.config import UVMConfig
 from repro.uvm.engine import VectorizedUVMSimulator, simulate
+from repro.uvm.eviction import EVICTION_POLICIES
 from repro.uvm.metrics import unity
 from repro.uvm.replay_core import (ReplayBackend, ReplayRequest,
                                    available_backends, get_backend)
@@ -63,7 +68,7 @@ from repro.uvm.simulator import UVMSimulator, UVMStats
 
 __all__ = [
     "UVMConfig", "UVMSimulator", "UVMStats", "VectorizedUVMSimulator",
-    "simulate", "unity",
+    "simulate", "unity", "EVICTION_POLICIES",
     "ReplayBackend", "ReplayRequest", "available_backends", "get_backend",
     "Prefetcher", "NoPrefetcher", "TreePrefetcher", "LearnedPrefetcher",
     "OraclePrefetcher",

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import List, Sequence
 
+from repro.uvm.eviction import EVICTION_POLICIES
 from repro.uvm.replay_core import (SUPPORTED_PREFETCHERS, ReplayBackend,
                                    ReplayRequest, replay_chunked, span_ok)
 from repro.uvm.simulator import UVMStats
@@ -19,6 +20,7 @@ class NumpyReplayBackend(ReplayBackend):
 
     def can_replay(self, request: ReplayRequest) -> bool:
         return (type(request.prefetcher) in SUPPORTED_PREFETCHERS
+                and request.config.eviction in EVICTION_POLICIES
                 and span_ok(request))
 
     def replay(self, requests: Sequence[ReplayRequest]) -> List[UVMStats]:

@@ -39,6 +39,14 @@ different per-lane state and inputs):
   ``lookahead`` are different families (the window width is a static
   kernel shape).
 
+Cells are additionally bucketed by **eviction policy**
+(``UVMConfig.eviction``, see ``repro.uvm.eviction``): victim selection
+and the extra per-lane carry (``random`` insert-time priority draws,
+``hotcold`` touch-frequency counts) are static kernel structure, so a
+batch is policy-homogeneous — ``_lane_shape`` is (family, policy,
+length, span) and ``fits_batch`` refuses to co-bucket policies exactly
+like families.
+
 Stateful-prefetcher cells the backend still declines (oversized spans,
 too-long traces, timeline recording) keep their exact NumPy adapters; the
 scheduler in ``repro.uvm.sweep`` routes those cells to the ``numpy``
@@ -75,6 +83,8 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.traces.trace import BASIC_BLOCK_PAGES, ROOT_PAGES
+from repro.uvm.eviction import (EVICTION_POLICIES, SCORE_MULT_1,
+                                SCORE_MULT_2, SCORE_SEED_MULT)
 from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
                                    NoPrefetcher, OraclePrefetcher,
                                    Prefetcher, TreePrefetcher)
@@ -123,7 +133,8 @@ MAX_ORACLE_LOOKAHEAD = 512
 ORACLE_MAX_EXTRAS = 16
 
 _N_FPARAMS = 8       # cpa, page_tx, far_fault, ptw, pcie_lat, pfo, extra, page_size
-_N_IPARAMS = 5       # n_accesses, device_pages(-1=uncapped), mshr, has_block, n_ft
+_N_IPARAMS = 6       # n_accesses, device_pages(-1=uncapped), mshr, has_block,
+#                      n_ft, lane-lo mod 2^32 (random-policy priority draws)
 STAT_FIELDS = ("cycles", "hits", "late", "faults", "prefetch_issued",
                "prefetch_used", "pages_migrated", "pages_evicted",
                "pcie_bytes")
@@ -167,13 +178,17 @@ def _bucket(n: int, floor: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
-                    buf_len: int, ft_len: int, lookahead: int,
+def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
+                    span: int, buf_len: int, ft_len: int, lookahead: int,
                     interpret: bool):
     """Build (and cache) the jitted multi-lane replay for one batch shape.
 
     ``family`` is the kernel kind (demand/tree/learned/oracle); ``ft_len``
     and ``lookahead`` are only meaningful for oracle lanes (0 otherwise).
+    ``policy`` is the eviction policy every lane of the batch runs under
+    (a batch is policy-homogeneous: the victim-selection code and the
+    extra per-lane carry — ``random`` priority draws, ``hotcold``
+    frequency counts — are static kernel structure).
     """
     import jax
     import jax.numpy as jnp
@@ -183,7 +198,30 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
     blk_shift = blk_pages.bit_length() - 1
     levels = TreePrefetcher.LEVELS
     i32 = jnp.int32
+    u32 = jnp.uint32
     IMAX_NP = np.iinfo(np.int32).max
+    IMAX64_NP = np.iinfo(np.int64).max
+    hotcold = policy == "hotcold"
+    randomp = policy == "random"
+    # the random victim key is (prio << 21) | slot: every state slot
+    # (span + oracle trash) must fit the low 21 bits or slot indices
+    # would bleed into the priority bits and silently reorder victims —
+    # raising MAX_LANE_SPAN_PAGES past 2^21 - 1 must fail loudly here
+    assert span + 1 <= 1 << 21, (
+        f"lane span {span} overflows the random-policy victim key; "
+        "widen the slot field before raising MAX_LANE_SPAN_PAGES")
+
+    def _rand_score(pages_u32, draw_i32):
+        """jnp port of ``repro.uvm.eviction.eviction_scores`` — the exact
+        same uint32 wraparound chain, pinned equal by the golden and
+        differential suites."""
+        x = pages_u32 ^ (draw_i32.astype(u32) * u32(SCORE_SEED_MULT))
+        x = x ^ (x >> u32(16))
+        x = x * u32(SCORE_MULT_1)
+        x = x ^ (x >> u32(15))
+        x = x * u32(SCORE_MULT_2)
+        x = x ^ (x >> u32(15))
+        return x
     # oracle lanes get one extra "trash" slot at index ``span``: window
     # scatters direct every masked-off write there, so duplicate scatter
     # indices never land on a real page.  The slot reads as resident
@@ -207,6 +245,14 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
         mshr = iparams_ref[0, 2]
         has_block = iparams_ref[0, 3] > 0
         track_lru = cap >= 0
+        IMAX64 = jnp.int64(IMAX64_NP)
+        if randomp:
+            # absolute page ids mod 2^32 per state slot: the random
+            # policy's priority draws hash the absolute page, so all
+            # backends agree whatever the lane's dense-span offset is
+            lane_lo = iparams_ref[0, 5].astype(u32)
+            abs_u32 = lane_lo + jnp.arange(state_len, dtype=i32).astype(u32)
+            iota64 = jnp.arange(state_len, dtype=jnp.int64)
         # The legacy loop rounds every multiply before the dependent add,
         # but LLVM contracts ``a + b * c`` into a fused multiply-add
         # (single rounding, 1-ULP drift vs CPython) and neither
@@ -232,6 +278,10 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
             pcie_free = s["pcie_free"]
             if family == "tree":
                 counts = list(s["counts"])
+            if hotcold:
+                freq = s["freq"]
+            if randomp:
+                prio = s["prio"]
 
             p = pages[t]
             clock = s["clock"] + cpa
@@ -265,6 +315,13 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
             # the page at the current touch counter
             arrival = arrival.at[p].set(jnp.where(is_fault, arr_v, a))
             stamp = stamp.at[p].set(counter)
+            if hotcold:
+                # touches since migration: reset at insert, +1 per touch
+                freq = freq.at[p].set(jnp.where(is_fault, 0, freq[p] + 1))
+            if randomp:
+                # insert-time priority draw, seeded by the touch counter
+                prio = prio.at[p].set(jnp.where(
+                    is_fault, _rand_score(abs_u32[p], counter), prio[p]))
             counter = counter + 1
             resident = s["resident"] + is_fault.astype(i32)
             migrated = s["migrated"] + is_fault.astype(i32)
@@ -311,6 +368,18 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
                 rank = counter + jnp.cumsum(mask, dtype=i32) - 1
                 stamp = jax.lax.dynamic_update_slice(
                     stamp, jnp.where(mask, rank, swin), (blk,))
+                if hotcold:
+                    fwin = jax.lax.dynamic_slice(freq, (blk,), (blk_pages,))
+                    freq = jax.lax.dynamic_update_slice(
+                        freq, jnp.where(mask, 0, fwin), (blk,))
+                if randomp:
+                    uwin = jax.lax.dynamic_slice(abs_u32, (blk,),
+                                                 (blk_pages,))
+                    prwin = jax.lax.dynamic_slice(prio, (blk,), (blk_pages,))
+                    prio = jax.lax.dynamic_update_slice(
+                        prio,
+                        jnp.where(mask, _rand_score(uwin, rank), prwin),
+                        (blk,))
                 counter = counter + k
                 resident = resident + k
                 migrated = migrated + k
@@ -362,6 +431,20 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
                 swin = jax.lax.dynamic_slice(stamp, (root,), (ROOT_PAGES,))
                 stamp = jax.lax.dynamic_update_slice(
                     stamp, jnp.where(out_mask, counter + rank, swin), (root,))
+                if hotcold:
+                    fwin = jax.lax.dynamic_slice(freq, (root,), (ROOT_PAGES,))
+                    freq = jax.lax.dynamic_update_slice(
+                        freq, jnp.where(out_mask, 0, fwin), (root,))
+                if randomp:
+                    uwin = jax.lax.dynamic_slice(abs_u32, (root,),
+                                                 (ROOT_PAGES,))
+                    prwin = jax.lax.dynamic_slice(prio, (root,),
+                                                  (ROOT_PAGES,))
+                    prio = jax.lax.dynamic_update_slice(
+                        prio,
+                        jnp.where(out_mask,
+                                  _rand_score(uwin, counter + rank), prwin),
+                        (root,))
                 counter = counter + k
                 resident = resident + k
                 migrated = migrated + k
@@ -404,6 +487,13 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
                     jnp.where(do_pf, ex_arr2, arrival[safe]))
                 stamp = stamp.at[safe].set(
                     jnp.where(do_pf, counter, stamp[safe]))
+                if hotcold:
+                    freq = freq.at[safe].set(
+                        jnp.where(do_pf, 0, freq[safe]))
+                if randomp:
+                    prio = prio.at[safe].set(jnp.where(
+                        do_pf, _rand_score(abs_u32[safe], counter),
+                        prio[safe]))
                 pfu = pfu.at[safe].set(do_pf | pfu[safe])
                 counter = counter + do_pf.astype(i32)
                 resident = resident + do_pf.astype(i32)
@@ -423,7 +513,7 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
                 win_idx = jax.lax.dynamic_slice(ft, (pos_t,), (lookahead,))
 
                 def scan(arrival, stamp, pfu, counter, resident, migrated,
-                         issued, pcie_free, active, batch):
+                         issued, pcie_free, pol, active, batch):
                     got = arrival[win_idx]
                     nonres = base_valid & (got == INF) & active
                     csum = jnp.cumsum(nonres.astype(i32))
@@ -455,22 +545,43 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
                     stamp = stamp.at[tgt].set(
                         jnp.where(take, counter + rank, IMAX))
                     pfu = pfu.at[tgt].set(take)
+                    if hotcold:
+                        (freq,) = pol
+                        freq = freq.at[tgt].set(
+                            jnp.where(take, 0, freq[tgt]))
+                        pol = (freq,)
+                    if randomp:
+                        (prio,) = pol
+                        prw = _rand_score(abs_u32[win_idx], counter + rank)
+                        prio = prio.at[tgt].set(
+                            jnp.where(take, prw, prio[tgt]))
+                        pol = (prio,)
                     counter = counter + k
                     resident = resident + k
                     migrated = migrated + k
                     issued = issued + k
                     pcie_free = jnp.where(k > 0, end, pcie_free)
                     return (arrival, stamp, pfu, counter, resident,
-                            migrated, issued, pcie_free)
+                            migrated, issued, pcie_free, pol)
 
+                pol = ()
+                if hotcold:
+                    pol = (freq,)
+                if randomp:
+                    pol = (prio,)
                 (arrival, stamp, pfu, counter, resident, migrated, issued,
-                 pcie_free) = scan(arrival, stamp, pfu, counter, resident,
-                                   migrated, issued, pcie_free,
-                                   is_fault, True)
+                 pcie_free, pol) = scan(arrival, stamp, pfu, counter,
+                                        resident, migrated, issued,
+                                        pcie_free, pol, is_fault, True)
                 (arrival, stamp, pfu, counter, resident, migrated, issued,
-                 pcie_free) = scan(arrival, stamp, pfu, counter, resident,
-                                   migrated, issued, pcie_free,
-                                   jnp.bool_(True), False)
+                 pcie_free, pol) = scan(arrival, stamp, pfu, counter,
+                                        resident, migrated, issued,
+                                        pcie_free, pol, jnp.bool_(True),
+                                        False)
+                if hotcold:
+                    (freq,) = pol
+                if randomp:
+                    (prio,) = pol
 
             # MSHR pressure: beyond ``mshr`` outstanding stalls the clock
             # jumps to the oldest completion (single pop suffices: pushes
@@ -481,21 +592,37 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
             buf = buf.at[mi].set(jnp.where(pop, INF, buf[mi]))
             nbuf = nbuf - pop.astype(i32)
 
-            # LRU eviction under oversubscription: pop the minimum touch
-            # stamp among resident pages; an in-flight victim is reinserted
-            # at MRU and stops the loop (exact OrderedDict order — stamps
-            # are unique, so argmin is the heap pop)
+            # eviction under oversubscription: the policy picks the victim
+            # (lru = min touch stamp, exact OrderedDict order; random =
+            # min insert-time priority draw; hotcold = min (freq, stamp));
+            # an in-flight victim is retouched at MRU and stops the loop
             def econd(c):
                 return c["cont"] & (c["resident"] > cap)
 
             def ebody(c):
                 arrival, stamp, pfu = c["arrival"], c["stamp"], c["pfu"]
                 counter = c["counter"]
-                vi = jnp.argmin(jnp.where(arrival < INF, stamp, IMAX))
+                if hotcold:
+                    fq = c["freq"]
+                    key = jnp.where(
+                        (arrival < INF) & (stamp < IMAX),
+                        (fq.astype(jnp.int64) << 32)
+                        | stamp.astype(jnp.int64), IMAX64)
+                    vi = jnp.argmin(key)
+                elif randomp:
+                    # prio is static while resident: safe to close over
+                    key = jnp.where(
+                        (arrival < INF) & (stamp < IMAX),
+                        (prio.astype(jnp.int64) << 21) | iota64, IMAX64)
+                    vi = jnp.argmin(key)
+                else:
+                    vi = jnp.argmin(jnp.where(arrival < INF, stamp, IMAX))
                 v_arr = arrival[vi]
                 in_flight = v_arr > clock
                 stamp = stamp.at[vi].set(
                     jnp.where(in_flight, counter, stamp[vi]))
+                if hotcold:
+                    fq = fq.at[vi].add(in_flight.astype(i32))
                 counter = counter + in_flight.astype(i32)
                 arrival = arrival.at[vi].set(
                     jnp.where(in_flight, v_arr, INF))
@@ -511,6 +638,8 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
                            pfu=pfu, counter=counter, resident=resident,
                            evicted=evicted, wbacks=wbacks,
                            pcie_free=pcie_free)
+                if hotcold:
+                    out["freq"] = fq
                 if family == "tree":
                     cts = list(c["counts"])
                     for lv in range(levels + 1):
@@ -522,6 +651,8 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
                       "pfu": pfu, "counter": counter, "resident": resident,
                       "evicted": s["evicted"], "wbacks": s["wbacks"],
                       "pcie_free": pcie_free}
+            if hotcold:
+                ecarry["freq"] = freq
             if family == "tree":
                 ecarry["counts"] = tuple(counts)
             ecarry = jax.lax.while_loop(econd, ebody, ecarry)
@@ -540,6 +671,10 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
                 out["next_free"] = next_free
             if family == "tree":
                 out["counts"] = ecarry["counts"]
+            if hotcold:
+                out["freq"] = ecarry["freq"]
+            if randomp:
+                out["prio"] = prio
             return out
 
         zero = jnp.int32(0)
@@ -564,6 +699,10 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
             init["counts"] = tuple(
                 jnp.zeros((span >> (blk_shift + lv),), dtype=i32)
                 for lv in range(levels + 1))
+        if hotcold:
+            init["freq"] = jnp.zeros((state_len,), dtype=i32)
+        if randomp:
+            init["prio"] = jnp.zeros((state_len,), dtype=u32)
         final = jax.lax.fori_loop(0, n, step, init)
 
         # drain: every outstanding stall resolves (max over the buffer is
@@ -604,10 +743,17 @@ def _lane_replay_fn(family: str, n_lanes: int, t_max: int, span: int,
     return jax.jit(call)
 
 
-def _lane_shape(request: ReplayRequest) -> Tuple[str, int, int]:
-    """(family, length, span) of one request's lane."""
+def _lane_shape(request: ReplayRequest) -> Tuple[str, str, int, int]:
+    """(family, eviction policy, length, span) of one request's lane.
+
+    The eviction policy is part of the shape because a batch must be
+    policy-homogeneous: victim selection and the extra per-lane carry
+    (random priorities, hotcold frequencies) are static kernel structure,
+    so :meth:`PallasReplayBackend.fits_batch` never co-buckets policies.
+    """
     lo, hi = dense_bounds(request.trace, request.prefetcher)
     return (lane_family(request.prefetcher) or "unpackable",
+            request.config.eviction,
             len(request.trace.pages), hi - lo)
 
 
@@ -639,6 +785,8 @@ class PallasReplayBackend(ReplayBackend):
         if family is None:
             return False
         kind = _family_kind(family)
+        if request.config.eviction not in EVICTION_POLICIES:
+            return False          # unknown policy: legacy raises clearly
         if request.record_timeline:
             return False          # per-transfer timelines stay host-side
         n = len(request.trace.pages)
@@ -656,39 +804,40 @@ class PallasReplayBackend(ReplayBackend):
 
     # ------------------------------------------------------------------
     @staticmethod
-    def fits_batch(shapes: Sequence[Tuple[str, int, int]],
-                   shape: Tuple[str, int, int]) -> bool:
-        """True if a lane of ``shape`` = (family, length, span) — the
-        :func:`_lane_shape` of a request — fits a batch that already
-        holds lanes of ``shapes`` under the family-homogeneity rule and
-        the lane-count, padded state, and padded access budgets.  The
-        scheduler uses this to flush batches incrementally instead of
-        materializing whole grids.
+    def fits_batch(shapes: Sequence[Tuple[str, str, int, int]],
+                   shape: Tuple[str, str, int, int]) -> bool:
+        """True if a lane of ``shape`` = (family, policy, length, span) —
+        the :func:`_lane_shape` of a request — fits a batch that already
+        holds lanes of ``shapes`` under the family- and
+        policy-homogeneity rules and the lane-count, padded state, and
+        padded access budgets.  The scheduler uses this to flush batches
+        incrementally instead of materializing whole grids.
         """
-        fam, t, sp = shape
-        if any(f != fam for f, _, _ in shapes):
-            return False          # never co-bucket prefetcher families
+        fam, pol, t, sp = shape
+        if any(f != fam or p != pol for f, p, _, _ in shapes):
+            return False    # never co-bucket families or eviction policies
         n = len(shapes) + 1
-        t = max([t] + [s[1] for s in shapes])
-        sp = max([sp] + [s[2] for s in shapes])
+        t = max([t] + [s[2] for s in shapes])
+        sp = max([sp] + [s[3] for s in shapes])
         return (n <= MAX_LANES_PER_BATCH
                 and n * sp <= MAX_BATCH_STATE_PAGES
                 and n * t <= MAX_BATCH_ACCESSES)
 
     def pack_lanes(self, requests: Sequence[ReplayRequest]
                    ) -> List[List[int]]:
-        """Group request indices into family-homogeneous lane batches.
+        """Group request indices into family- and policy-homogeneous lane
+        batches.
 
-        Cells are sorted by (family, length, span) so lanes of one batch
-        share a kernel and pad to similar shapes, then greedily packed
-        under :meth:`fits_batch`'s budgets.  Deterministic in the request
-        order.
+        Cells are sorted by (family, policy, length, span) so lanes of
+        one batch share a kernel and pad to similar shapes, then greedily
+        packed under :meth:`fits_batch`'s budgets.  Deterministic in the
+        request order.
         """
         order = sorted(range(len(requests)),
                        key=lambda i: _lane_shape(requests[i]), reverse=True)
         batches: List[List[int]] = []
         cur: List[int] = []
-        cur_shapes: List[Tuple[str, int, int]] = []
+        cur_shapes: List[Tuple[str, str, int, int]] = []
         for i in order:
             shape = _lane_shape(requests[i])
             if cur and not self.fits_batch(cur_shapes, shape):
@@ -729,11 +878,15 @@ class PallasReplayBackend(ReplayBackend):
         family = families.pop()
         kind = _family_kind(family)
         lookahead = int(family.split("/")[1]) if kind == "oracle" else 0
+        policies = {r.config.eviction for r in requests}
+        assert len(policies) == 1, \
+            f"lane batch must be policy-homogeneous, got {policies}"
+        policy = policies.pop()
 
         lanes = len(requests)
         shapes = [_lane_shape(r) for r in requests]
-        t_max = _bucket(max(t for _, t, _ in shapes), 64)
-        span = _bucket(max(s for _, _, s in shapes), ROOT_PAGES)
+        t_max = _bucket(max(t for _, _, t, _ in shapes), 64)
+        span = _bucket(max(s for _, _, _, s in shapes), ROOT_PAGES)
         buf_len = max(int(r.config.mshr_entries) for r in requests) + 1
         n_lanes = _bucket(lanes, 1)
         ft_len = 0
@@ -773,6 +926,10 @@ class PallasReplayBackend(ReplayBackend):
                 -1 if cfg.device_pages is None else int(cfg.device_pages),
                 int(cfg.mshr_entries),
                 1 if has_block else 0)
+            # lane lo mod 2^32 (int32 bit pattern): random-policy draws
+            # hash the absolute page id, identical across backends
+            iparams[l, 5] = np.array(lo & 0xFFFFFFFF,
+                                     dtype=np.uint32).astype(np.int32)
             if kind == "learned":
                 pr = np.asarray(pf.predicted_pages, dtype=np.int64)[:n]
                 preds_in[l, :n] = np.where(pr >= 0, pr - lo, -1)
@@ -787,8 +944,8 @@ class PallasReplayBackend(ReplayBackend):
 
         interpret = _interpret_mode()
         with enable_x64():
-            fn = _lane_replay_fn(kind, n_lanes, t_max, span, buf_len,
-                                 ft_len, lookahead, interpret)
+            fn = _lane_replay_fn(kind, policy, n_lanes, t_max, span,
+                                 buf_len, ft_len, lookahead, interpret)
             raw = np.asarray(fn(pages, *extra_in, fparams, iparams))
 
         out = []
@@ -810,6 +967,7 @@ class PallasReplayBackend(ReplayBackend):
                 pcie_bytes=float(row[8]),
                 zero_copy_bytes=0.0,
                 timeline=None,
+                eviction=req.config.eviction,
             )
             stats.backend = self.name
             out.append(stats)

@@ -25,6 +25,12 @@ class UVMConfig:
     # device memory capacity in pages; None = never oversubscribed
     device_pages: int | None = None
 
+    # eviction policy under oversubscription: "lru" (default, the
+    # historical behavior), "random" (counter-based deterministic PRNG
+    # replacement), or "hotcold" (access-frequency cold-first, arXiv
+    # 2204.02974).  See repro.uvm.eviction.
+    eviction: str = "lru"
+
     # far-fault MSHR entries: outstanding faults the GPU can hide behind
     # fine-grained multithreading before the SMs fully stall
     mshr_entries: int = 64

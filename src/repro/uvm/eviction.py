@@ -1,0 +1,251 @@
+"""Pluggable eviction policies for the UVM replay stack.
+
+The paper's oversubscription results hinge on how the device frees pages
+when capacity runs out; "An Intelligent Framework for Oversubscription
+Management in CPU-GPU Unified Memory" (arXiv 2204.02974) shows the choice
+of policy (LRU vs. random vs. access-pattern-aware) swings oversubscribed
+performance by double digits.  This module defines the policy vocabulary
+shared by every replay backend:
+
+* ``lru`` — least-recently-used, the historical behavior (the legacy
+  ``OrderedDict`` order / the monotone touch-stamp argmin).  Default;
+  golden fixtures recorded before the policy axis replay bit-identically.
+* ``random`` — counter-based deterministic pseudo-random replacement: a
+  page draws a 32-bit priority from :func:`eviction_scores` **at insertion
+  time** (the draw is the monotone insert/touch counter, so re-insertions
+  draw fresh priorities), and the victim is the resident page with the
+  smallest ``(priority, page)``.  Deterministic, seedless, and identical
+  across backends: the legacy loop hashes Python ints, the NumPy engine
+  hashes ``uint32`` arrays, and the pallas kernel replays the same mixer
+  in ``jnp.uint32`` — all three wrap mod 2**32 by construction.
+* ``hotcold`` — access-frequency (cold-first) replacement per 2204.02974:
+  each resident page counts its touches since migration; the victim is
+  the resident page with the smallest ``(frequency, LRU-stamp)`` — the
+  coldest page, ties broken least-recently-used.  Prefetched-but-unused
+  pages (frequency 0) are evicted first, which is exactly the
+  access-pattern-aware intuition.
+
+Every backend must agree on the *victim sequence* (pinned by the golden
+and differential suites): the policy semantics here — including the
+in-flight-victim rule (a selected victim that has not arrived yet is
+spared, retouched at MRU, and the eviction round stops) and the event
+counter (one tick per page insert and per resident touch, shared with the
+LRU stamps) — are the single source of truth.
+
+The scalar/array scorer below is the reference for the ``random`` mixer;
+``pallas_backend`` re-implements the identical operation chain in jnp and
+the test suites pin the equality.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+#: policy vocabulary, in CLI/registry order (``lru`` is the default and
+#: must stay first: code that predates the policy axis assumes it)
+EVICTION_POLICIES = ("lru", "random", "hotcold")
+
+_MASK32 = 0xFFFFFFFF
+#: mixer constants (32-bit finalizer, low-bias): the jnp re-implementation
+#: in ``pallas_backend._rand_score`` must use the exact same chain
+SCORE_SEED_MULT = 0x9E3779B9
+SCORE_MULT_1 = 0x21F0AAAD
+SCORE_MULT_2 = 0x735A2D97
+
+
+def validate_policy(name: str) -> str:
+    if name not in EVICTION_POLICIES:
+        raise ValueError(f"unknown eviction policy {name!r}; "
+                         f"choose from {', '.join(EVICTION_POLICIES)}")
+    return name
+
+
+def eviction_scores(pages, draw) -> np.ndarray:
+    """uint32 priority per page for the ``random`` policy.
+
+    ``pages`` are absolute page ids (truncated mod 2**32); ``draw`` is the
+    per-page insert-event counter value (scalar or array).  All arithmetic
+    wraps mod 2**32 — NumPy array ops wrap silently, and the seeds are
+    pre-masked Python ints so no scalar-overflow warnings fire.
+    """
+    x = (np.asarray(pages, dtype=np.int64) & _MASK32).astype(np.uint32)
+    # at-least-1d operands: NumPy *array* integer ops wrap silently, but
+    # scalar ops would raise overflow RuntimeWarnings
+    d = np.atleast_1d(
+        (np.asarray(draw, dtype=np.int64) & _MASK32)).astype(np.uint32)
+    x = np.atleast_1d(x) ^ (d * np.uint32(SCORE_SEED_MULT))
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(SCORE_MULT_1)
+    x = x ^ (x >> np.uint32(15))
+    x = x * np.uint32(SCORE_MULT_2)
+    x = x ^ (x >> np.uint32(15))
+    return x
+
+
+def eviction_score(page: int, draw: int) -> int:
+    """Scalar :func:`eviction_scores` as a pure-int mixer — this sits in
+    the per-insert hot path of both the legacy loop and the NumPy
+    engine's ``random`` policy, where one-element array round trips cost
+    more than the hash itself.  ``tests/test_scenarios.py`` pins it equal
+    to the array version."""
+    x = (int(page) & _MASK32) ^ ((int(draw) * SCORE_SEED_MULT) & _MASK32)
+    x ^= x >> 16
+    x = (x * SCORE_MULT_1) & _MASK32
+    x ^= x >> 15
+    x = (x * SCORE_MULT_2) & _MASK32
+    x ^= x >> 15
+    return x
+
+
+# ---------------------------------------------------------------------------
+# reference policy objects (the legacy per-access loop drives these; the
+# NumPy and pallas engines replay the same semantics vectorized)
+# ---------------------------------------------------------------------------
+
+class EvictionPolicy:
+    """Victim-selection strategy for the legacy simulator.
+
+    The simulator calls, only when ``device_pages`` is set:
+
+    * ``on_insert(page)`` — page became resident (demand fault or
+      prefetch).  Idempotent for already-resident pages (matches the
+      engines, which never re-draw state for an overwrite).
+    * ``on_touch(page)`` — resident page touched (hit/late access, or an
+      in-flight victim spared by the eviction loop and retouched at MRU).
+    * ``on_evict(page)`` — page left residency.
+    * ``select_victim(resident)`` — the next victim among the keys of
+      ``resident`` (the simulator's page → arrival ``OrderedDict``, kept
+      in exact LRU order by the access loop).
+
+    The event counter (one tick per insert and per touch) is shared
+    vocabulary with the vectorized engines' LRU touch stamps — policies
+    that consume it (random draws, hotcold tie-breaks) stay identical
+    across backends because every backend ticks it on the same events.
+    """
+
+    name = "abstract"
+
+    def reset(self) -> None:
+        pass
+
+    def on_insert(self, page: int) -> None:
+        pass
+
+    def on_touch(self, page: int) -> None:
+        pass
+
+    def on_evict(self, page: int) -> None:
+        pass
+
+    def select_victim(self, resident) -> int:
+        raise NotImplementedError
+
+
+class LRUEviction(EvictionPolicy):
+    """Least-recently-used: the simulator's ``resident`` OrderedDict *is*
+    the LRU order (every touch moves to end), so the victim is simply its
+    first key — exactly the historical ``popitem(last=False)``."""
+
+    name = "lru"
+
+    def select_victim(self, resident) -> int:
+        return next(iter(resident))
+
+
+class RandomEviction(EvictionPolicy):
+    """Counter-based deterministic pseudo-random replacement.
+
+    Each page draws ``eviction_score(page, counter)`` when it becomes
+    resident (so re-insertions re-draw), and the victim is the resident
+    page minimizing ``(priority, page)``.  Priorities are static while
+    resident, so selection is a lazy min-heap: stale entries (evicted or
+    re-drawn pages) self-heal at pop time.
+    """
+
+    name = "random"
+
+    def reset(self) -> None:
+        self.counter = 0
+        self.prio: Dict[int, int] = {}
+        self.heap: List[Tuple[int, int]] = []
+
+    def on_insert(self, page: int) -> None:
+        if page in self.prio:
+            return
+        pr = eviction_score(page, self.counter)
+        self.prio[page] = pr
+        heapq.heappush(self.heap, (pr, page))
+        self.counter += 1
+
+    def on_touch(self, page: int) -> None:
+        self.counter += 1
+
+    def on_evict(self, page: int) -> None:
+        del self.prio[page]
+
+    def select_victim(self, resident) -> int:
+        while True:
+            pr, page = self.heap[0]
+            if self.prio.get(page) != pr:
+                heapq.heappop(self.heap)     # evicted or re-drawn: stale
+                continue
+            return page
+
+
+class HotColdEviction(EvictionPolicy):
+    """Access-frequency (cold-first) replacement per arXiv 2204.02974.
+
+    ``freq[page]`` counts touches since the page migrated (0 at insert:
+    prefetched-but-unused pages are the coldest); the victim minimizes
+    ``(freq, stamp)`` — stamps are the shared monotone touch counter, so
+    frequency ties resolve least-recently-used.  Lazy min-heap: keys only
+    grow while resident, so stale entries re-push and self-heal.
+    """
+
+    name = "hotcold"
+
+    def reset(self) -> None:
+        self.counter = 0
+        self.freq: Dict[int, int] = {}
+        self.stamp: Dict[int, int] = {}
+        self.heap: List[Tuple[int, int, int]] = []
+
+    def on_insert(self, page: int) -> None:
+        if page in self.stamp:
+            return
+        self.freq[page] = 0
+        self.stamp[page] = self.counter
+        heapq.heappush(self.heap, (0, self.counter, page))
+        self.counter += 1
+
+    def on_touch(self, page: int) -> None:
+        if page in self.stamp:
+            self.freq[page] += 1
+            self.stamp[page] = self.counter
+        self.counter += 1
+
+    def on_evict(self, page: int) -> None:
+        del self.freq[page]
+        del self.stamp[page]
+
+    def select_victim(self, resident) -> int:
+        while True:
+            f, s, page = self.heap[0]
+            cur = self.stamp.get(page)
+            if cur is None:                  # evicted: drop the entry
+                heapq.heappop(self.heap)
+                continue
+            if (self.freq[page], cur) != (f, s):
+                heapq.heapreplace(self.heap, (self.freq[page], cur, page))
+                continue
+            return page
+
+
+def make_eviction_policy(name: str) -> EvictionPolicy:
+    validate_policy(name)
+    policy = {"lru": LRUEviction, "random": RandomEviction,
+              "hotcold": HotColdEviction}[name]()
+    policy.reset()
+    return policy

@@ -20,6 +20,12 @@ against all six prefetcher variants: on-demand, block, tree, learned,
 learned-cached (identical predictions round-tripped through the
 ``repro.uvm.predcache`` atomic store, pinning the cache path bit-exact
 against plain learned), and oracle.
+
+Per-policy oversubscribed cells (``oversub-random``/``oversub-hotcold``
+on a thrashing cyclic sweep, ``churn-random``/``churn-hotcold`` on a
+permuted two-region sweep) pin the non-LRU eviction policies
+(``repro.uvm.eviction``) bit-equal across every backend, prefetcher
+included — the regime where victim-selection order diverges first.
 """
 from __future__ import annotations
 
@@ -94,6 +100,17 @@ def golden_cases() -> Tuple[GoldenCase, ...]:
     churn = np.concatenate([perm + (0 if k % 2 == 0 else 8192)
                             for k in range(8)])
 
+    # Per-policy oversubscribed regimes (smaller traces — every cell also
+    # replays through the interpret-mode pallas lanes in CI): a thrashing
+    # cyclic sweep at ~1.8x capacity, and a permuted two-region sweep
+    # whose blocks migrate/evict/re-migrate continuously, so random
+    # priority draws and hot/cold frequency ranks churn the whole replay.
+    pol_oversub = np.tile(np.arange(2000, dtype=np.int64), 4)
+    n_pol = 2 * ROOT_PAGES
+    pol_perm = (np.arange(n_pol, dtype=np.int64) * 5) % n_pol
+    pol_churn = np.concatenate([pol_perm + (0 if k % 2 == 0 else 4096)
+                                for k in range(6)])
+
     return (
         GoldenCase("atax", atax, UVMConfig()),
         GoldenCase("pathfinder", pathfinder, UVMConfig()),
@@ -103,6 +120,17 @@ def golden_cases() -> Tuple[GoldenCase, ...]:
                    UVMConfig(device_pages=1500)),
         GoldenCase("tree-churn", _mk_trace("tree-churn", churn),
                    UVMConfig(device_pages=2048)),
+        GoldenCase("oversub-random", _mk_trace("oversub-random", pol_oversub),
+                   UVMConfig(device_pages=1100, eviction="random")),
+        GoldenCase("oversub-hotcold",
+                   _mk_trace("oversub-hotcold", pol_oversub),
+                   UVMConfig(device_pages=1100, eviction="hotcold")),
+        GoldenCase("churn-random", _mk_trace("churn-random", pol_churn),
+                   UVMConfig(device_pages=700, eviction="random",
+                             mshr_entries=16)),
+        GoldenCase("churn-hotcold", _mk_trace("churn-hotcold", pol_churn),
+                   UVMConfig(device_pages=700, eviction="hotcold",
+                             mshr_entries=16)),
     )
 
 
@@ -165,6 +193,14 @@ def golden_cell(cell_id: str) -> Tuple[Trace, UVMConfig, Callable[[], Prefetcher
     case = next(c for c in golden_cases() if c.name == case_name)
     return (case.trace, case.config,
             lambda: make_prefetcher(pf_name, case.trace, case.config))
+
+
+def golden_cell_policy(cell_id: str) -> str:
+    """Eviction policy of one golden cell's config (lane batches are
+    policy-homogeneous, so the pallas harness groups by it)."""
+    case_name = cell_id.split("/")[0]
+    case = next(c for c in golden_cases() if c.name == case_name)
+    return case.config.eviction
 
 
 def iter_golden_cells() -> Iterator[Tuple[str, Trace, UVMConfig,

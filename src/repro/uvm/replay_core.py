@@ -47,6 +47,10 @@ Replay-core state machine
 * LRU order for eviction under oversubscription is kept as monotone touch
   stamps plus a lazy min-heap, reproducing ``OrderedDict`` order exactly,
   including the reinsert-at-MRU of in-flight victims.
+* Eviction is policy-pluggable (``UVMConfig.eviction``, see
+  ``repro.uvm.eviction``): ``random`` keeps per-page insert-time priority
+  draws in a lazy heap, ``hotcold`` a (frequency, stamp) lazy heap — all
+  three reproduce the reference policy objects' victim sequence exactly.
 """
 from __future__ import annotations
 
@@ -58,6 +62,8 @@ import numpy as np
 
 from repro.traces.trace import BASIC_BLOCK_PAGES, ROOT_PAGES, Trace
 from repro.uvm.config import UVMConfig
+from repro.uvm.eviction import (EVICTION_POLICIES, eviction_score,
+                                validate_policy)
 from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
                                    NoPrefetcher, OraclePrefetcher, Prefetcher,
                                    TreePrefetcher)
@@ -613,8 +619,17 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
     pg = pages - lo
     cap = cfg.device_pages
     track_lru = cap is not None
+    policy = validate_policy(cfg.eviction)
+    hotcold = policy == "hotcold"
+    randomp = policy == "random"
     stamp = np.zeros(span, dtype=np.int64) if track_lru else None
+    # hotcold: per-page touches since migration; random: per-page
+    # insert-time priority draws (lazy heaps over both, like the LRU one)
+    freq = np.zeros(span, dtype=np.int64) if (track_lru and hotcold) else None
+    prio = np.zeros(span, dtype=np.int64) if (track_lru and randomp) else None
     lru_heap: List[Tuple[int, int]] = []
+    hc_heap: List[Tuple[int, int, int]] = []
+    rand_heap: List[Tuple[int, int]] = []
     counter = 0                            # monotone LRU touch counter
     resident_count = 0
 
@@ -644,7 +659,15 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
             resident_count += 1
             if track_lru:
                 stamp[pi] = counter
-                heapq.heappush(lru_heap, (counter, pi))
+                if hotcold:
+                    freq[pi] = 0
+                    heapq.heappush(hc_heap, (0, counter, pi))
+                elif randomp:
+                    pr = eviction_score(pi + lo, counter)
+                    prio[pi] = pr
+                    heapq.heappush(rand_heap, (pr, pi))
+                else:
+                    heapq.heappush(lru_heap, (counter, pi))
             counter += 1
         arrival[pi] = t                    # overwrite keeps LRU position
 
@@ -653,6 +676,8 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
         nonlocal counter
         if track_lru:
             stamp[pi] = counter
+            if hotcold:
+                freq[pi] += 1
         counter += 1
 
     def _schedule(extras, batch: bool) -> None:
@@ -695,23 +720,53 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
         prefetch_issued += k
         adapter.on_migrate(extras)
 
+    def _select_victim() -> int:
+        """Policy victim: lazy-heap min of (stamp) / (prio, page) /
+        (freq, stamp) — stale entries self-heal at pop time.  The LRU
+        branch pops its entry (the spare path re-pushes); the other
+        policies peek (their stale tops heal on the next selection)."""
+        if hotcold:
+            while True:
+                f, s, vi = hc_heap[0]
+                if arrival[vi] == _INF:
+                    heapq.heappop(hc_heap)     # evicted since: stale
+                    continue
+                if freq[vi] != f or stamp[vi] != s:
+                    heapq.heapreplace(hc_heap,
+                                      (int(freq[vi]), int(stamp[vi]), vi))
+                    continue
+                return vi
+        if randomp:
+            while True:
+                pr, vi = rand_heap[0]
+                if arrival[vi] == _INF or prio[vi] != pr:
+                    heapq.heappop(rand_heap)   # evicted or re-drawn
+                    continue
+                return vi
+        while True:                        # lazy-heap pop of the true LRU
+            s, vi = heapq.heappop(lru_heap)
+            if arrival[vi] == _INF:
+                continue                   # evicted since: stale entry
+            if stamp[vi] != s:
+                heapq.heappush(lru_heap, (int(stamp[vi]), vi))
+                continue
+            return vi
+
     def _evict_loop() -> None:
         nonlocal resident_count, pages_evicted, pcie_bytes, pcie_free
         nonlocal counter
         while resident_count > cap:
-            while True:                    # lazy-heap pop of the true LRU
-                s, vi = heapq.heappop(lru_heap)
-                if arrival[vi] == _INF:
-                    continue               # evicted since: stale entry
-                if stamp[vi] != s:
-                    heapq.heappush(lru_heap, (int(stamp[vi]), vi))
-                    continue
-                break
+            vi = _select_victim()
             v_arr = float(arrival[vi])
             if v_arr > clock:
-                # never evict in-flight pages; reinsert at MRU
+                # never evict in-flight pages; retouch at MRU (the
+                # legacy loop's reinsert) — random keeps its insert-time
+                # priority, so only the shared counter ticks for it
                 stamp[vi] = counter
-                heapq.heappush(lru_heap, (counter, vi))
+                if hotcold:
+                    freq[vi] += 1
+                elif not randomp:
+                    heapq.heappush(lru_heap, (counter, vi))
                 counter += 1
                 break
             if strict:
@@ -820,6 +875,8 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
             if track_lru:
                 np.maximum.at(stamp, hseg,
                               counter + np.arange(h, dtype=np.int64))
+                if hotcold:
+                    np.add.at(freq, hseg, 1)
             counter += h
             clock = float(clocks[h - 1])
             i += h
@@ -853,6 +910,7 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
         pcie_bytes=pcie_bytes,
         zero_copy_bytes=0.0,
         timeline=np.asarray(timeline) if record else None,
+        eviction=cfg.eviction,
     )
 
 

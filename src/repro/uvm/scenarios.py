@@ -1,0 +1,202 @@
+"""Declarative oversubscription scenario matrix for the UVM sweep.
+
+The paper's headline numbers are measured under device-memory
+oversubscription, where the eviction policy interacts with prefetch
+aggressiveness (arXiv 2204.02974), and UVMBench (arXiv 2007.09822) argues
+UVM results only generalize when swept across a full benchmark suite.
+This module turns that into a first-class, validated registry of named
+**scenarios**: each one expands to a (benchmark × oversubscription ratio ×
+eviction policy × prefetcher) grid of :class:`~repro.uvm.sweep.SweepCell`
+cells, every cell stamped with the scenario name so result rows are
+self-describing and resumable per scenario.
+
+Built-ins:
+
+* ``oversub-full`` — all 11 paper benchmarks × capacity ratios
+  (1.5/1.0/0.75/0.5 × working set) × all eviction policies
+  (lru/random/hotcold) × all five prefetcher families.  The full matrix
+  behind ``python -m repro.uvm.sweep --scenario oversub-full``.
+* ``oversub-smoke`` — 2 small benchmarks × 2 oversubscribed ratios × all
+  policies × (none, tree), at scale 0.25 (< 100k total accesses): the CI
+  smoke that replays the whole matrix through the pallas lanes in
+  interpret mode (``scripts/ci_check.sh``).
+
+Usage::
+
+    from repro.uvm.scenarios import expand_scenario
+    from repro.uvm.sweep import run_sweep
+    cells = expand_scenario("oversub-full", backend="pallas")
+    rows = run_sweep(cells, out_dir="results/oversub", workers=8)
+
+Scenarios are plain frozen dataclasses: :meth:`Scenario.to_dict` /
+:func:`scenario_from_dict` round-trip them through JSON so grids can be
+shipped to other hosts, and :meth:`Scenario.validate` pins every axis
+value against the live registries (benchmark generators, eviction
+policies, prefetcher vocabulary) so a typo fails at registration, not
+mid-sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.uvm.eviction import EVICTION_POLICIES
+from repro.uvm.sweep import PREFETCHERS, SweepCell
+
+#: the paper's full benchmark suite (Table 10) — kept in sync with
+#: ``repro.traces.generators.BENCHMARKS`` by :meth:`Scenario.validate`
+PAPER_BENCHMARKS = (
+    "AddVectors", "ATAX", "Backprop", "BICG", "Hotspot", "MVT", "NW",
+    "Pathfinder", "Srad-v2", "StreamTriad", "2DCONV",
+)
+
+#: capacity ratios (device memory / working set) of the full matrix:
+#: 1.5 = comfortably undersubscribed control, 1.0 = exact fit, 0.75/0.5 =
+#: the oversubscription regimes of arXiv 2204.02974
+DEFAULT_RATIOS = (1.5, 1.0, 0.75, 0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named (benchmark × ratio × eviction × prefetcher) matrix."""
+
+    name: str
+    description: str
+    benches: Tuple[str, ...]
+    ratios: Tuple[float, ...]                 # device_frac per cell
+    evictions: Tuple[str, ...] = EVICTION_POLICIES
+    prefetchers: Tuple[str, ...] = PREFETCHERS
+    scale: float = 1.0
+    window: Optional[float] = 0.6
+    seeds: Tuple[int, ...] = (0,)
+    prediction_us: float = 1.0
+    service_steps: int = 150
+
+    # ------------------------------------------------------------------
+    def validate(self) -> "Scenario":
+        """Check every axis against the live registries; returns self."""
+        from repro.traces.generators import BENCHMARKS
+
+        if not self.name or "/" in self.name:
+            raise ValueError(f"bad scenario name {self.name!r}")
+        for field, values, vocab in (
+                ("benches", self.benches, set(BENCHMARKS)),
+                ("evictions", self.evictions, set(EVICTION_POLICIES)),
+                ("prefetchers", self.prefetchers, set(PREFETCHERS))):
+            if not values:
+                raise ValueError(f"scenario {self.name!r}: empty {field}")
+            bad = [v for v in values if v not in vocab]
+            if bad:
+                raise ValueError(
+                    f"scenario {self.name!r}: unknown {field} {bad}; "
+                    f"choose from {sorted(vocab)}")
+        if not self.ratios or any(r <= 0 for r in self.ratios):
+            raise ValueError(
+                f"scenario {self.name!r}: ratios must be positive, "
+                f"got {self.ratios}")
+        if self.scale <= 0:
+            raise ValueError(f"scenario {self.name!r}: scale must be > 0")
+        return self
+
+    # ------------------------------------------------------------------
+    def cells(self, *, engine: str = "auto",
+              backend: str = "auto") -> List[SweepCell]:
+        """Expand the matrix in deterministic order, each cell stamped
+        with the scenario name (the sweep's resume store keys on it)."""
+        out = []
+        for bench in self.benches:
+            for seed in self.seeds:
+                for ratio in self.ratios:
+                    for eviction in self.evictions:
+                        for pf in self.prefetchers:
+                            out.append(SweepCell(
+                                bench=bench, prefetcher=pf,
+                                scale=self.scale, seed=seed,
+                                window=self.window,
+                                prediction_us=self.prediction_us,
+                                device_frac=ratio, eviction=eviction,
+                                scenario=self.name, engine=engine,
+                                backend=backend,
+                                service_steps=self.service_steps))
+        return out
+
+    def n_cells(self) -> int:
+        return (len(self.benches) * len(self.seeds) * len(self.ratios)
+                * len(self.evictions) * len(self.prefetchers))
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def scenario_from_dict(doc: Dict) -> Scenario:
+    """JSON round-trip: lists come back as the dataclass's tuples."""
+    kwargs = dict(doc)
+    for field in ("benches", "ratios", "evictions", "prefetchers", "seeds"):
+        if field in kwargs and kwargs[field] is not None:
+            kwargs[field] = tuple(kwargs[field])
+    return Scenario(**kwargs).validate()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(scenario: Scenario, *,
+                      replace: bool = False) -> Scenario:
+    scenario.validate()
+    if scenario.name in _SCENARIOS and not replace:
+        raise ValueError(f"scenario {scenario.name!r} already registered "
+                         "(pass replace=True to override)")
+    _SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return _SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"available: {available_scenarios()}") from None
+
+
+def available_scenarios() -> List[str]:
+    return sorted(_SCENARIOS)
+
+
+def expand_scenario(name: str, *, engine: str = "auto",
+                    backend: str = "auto") -> List[SweepCell]:
+    """Expand a registered scenario into sweep cells (the CLI entry:
+    ``python -m repro.uvm.sweep --scenario <name>``)."""
+    return get_scenario(name).cells(engine=engine, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# built-ins
+# ---------------------------------------------------------------------------
+
+register_scenario(Scenario(
+    name="oversub-full",
+    description=(
+        "Full oversubscription matrix: all 11 paper benchmarks x "
+        "capacity ratios (1.5/1.0/0.75/0.5 x working set) x all "
+        "eviction policies x all five prefetcher families"),
+    benches=PAPER_BENCHMARKS,
+    ratios=DEFAULT_RATIOS,
+))
+
+register_scenario(Scenario(
+    name="oversub-smoke",
+    description=(
+        "CI smoke: 2 small benchmarks x 2 oversubscribed ratios x all "
+        "eviction policies x (none, tree) at scale 0.25 — the whole "
+        "matrix stays under 100k accesses so the pallas interpret-mode "
+        "lanes replay it in seconds"),
+    benches=("ATAX", "Pathfinder"),
+    ratios=(0.75, 0.5),
+    prefetchers=("none", "tree"),
+    scale=0.25,
+))

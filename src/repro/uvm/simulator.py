@@ -12,7 +12,10 @@ Queue-based timing model in GPU core cycles:
   BICG effect in the paper's Fig 11);
 * accesses to in-flight pages (late prefetches / duplicate faults) stall the
   warp until the page arrives;
-* under oversubscription, LRU pages are evicted (with writeback traffic).
+* under oversubscription, pages are evicted (with writeback traffic) by a
+  pluggable policy — LRU by default, counter-based random or
+  access-frequency hot/cold via ``UVMConfig.eviction``
+  (see ``repro.uvm.eviction``).
 
 IPC is instructions / modeled cycles.  Absolute IPC is a proxy, but all
 paper-facing results are *normalized* (ours vs UVMSmart), which cancels the
@@ -29,6 +32,7 @@ import numpy as np
 
 from repro.traces.trace import Trace
 from repro.uvm.config import UVMConfig
+from repro.uvm.eviction import make_eviction_policy
 from repro.uvm.prefetchers import Prefetcher
 
 
@@ -53,6 +57,9 @@ class UVMStats:
     #: "numpy" / "pallas"); set by the backend layer so sweep rows can
     #: surface silent fallbacks.  None when a simulator was run directly.
     backend: Optional[str] = None
+    #: eviction policy the replay ran under (``UVMConfig.eviction``);
+    #: surfaced in sweep result rows alongside ``backend``.
+    eviction: str = "lru"
 
     @property
     def ipc(self) -> float:
@@ -90,6 +97,9 @@ class UVMSimulator:
 
     def run(self, trace: Trace, prefetcher: Prefetcher) -> UVMStats:
         cfg = self.config
+        # policy name validated even when memory is never oversubscribed,
+        # so a typo fails fast instead of silently simulating uncapped
+        policy = make_eviction_policy(cfg.eviction)
         prefetcher.reset()
         pages = trace.pages
         n = len(pages)
@@ -119,6 +129,7 @@ class UVMSimulator:
 
         page_tx = cfg.page_transfer_cycles
         cap = cfg.device_pages
+        track = cap is not None      # policy callbacks only matter capped
 
         def schedule_prefetch(extras, batch: bool) -> None:
             nonlocal pcie_free, pages_migrated, pcie_bytes, prefetch_issued
@@ -139,6 +150,8 @@ class UVMSimulator:
                 t += page_tx
                 ex_arr = (end if batch else t) + cfg.pcie_latency_cycles
                 resident[q] = ex_arr
+                if track:
+                    policy.on_insert(q)
                 prefetched_unused[q] = True
                 pages_migrated += 1
                 pcie_bytes += cfg.page_size
@@ -164,6 +177,8 @@ class UVMSimulator:
                     if prefetched_unused.pop(p, None):
                         prefetch_used += 1
                 resident.move_to_end(p)
+                if track:
+                    policy.on_touch(p)
             else:
                 # ---- far fault ----
                 # The driver services the GPU fault buffer in batched rounds
@@ -179,6 +194,8 @@ class UVMSimulator:
                 pcie_free = start + page_tx
                 resident[p] = arrival
                 resident.move_to_end(p)
+                if track:
+                    policy.on_insert(p)
                 pages_migrated += 1
                 pcie_bytes += cfg.page_size
                 if self.record_timeline:
@@ -200,14 +217,20 @@ class UVMSimulator:
             while len(outstanding) > cfg.mshr_entries:
                 clock = max(clock, heapq.heappop(outstanding))
 
-            # eviction under oversubscription
-            if cap is not None:
+            # eviction under oversubscription: the policy picks victims
+            # (LRU = first key of the order-maintained dict, exactly the
+            # historical popitem(last=False))
+            if track:
                 while len(resident) > cap:
-                    victim, v_arr = resident.popitem(last=False)
+                    victim = policy.select_victim(resident)
+                    v_arr = resident[victim]
                     if v_arr > clock:
-                        # never evict in-flight pages; reinsert at MRU
-                        resident[victim] = v_arr
+                        # never evict in-flight pages; retouch at MRU
+                        resident.move_to_end(victim)
+                        policy.on_touch(victim)
                         break
+                    del resident[victim]
+                    policy.on_evict(victim)
                     prefetched_unused.pop(victim, None)
                     prefetcher.on_evict(victim)
                     pages_evicted += 1
@@ -236,4 +259,5 @@ class UVMSimulator:
             pcie_bytes=pcie_bytes,
             zero_copy_bytes=zero_copy_bytes,
             timeline=np.asarray(timeline) if self.record_timeline else None,
+            eviction=cfg.eviction,
         )

@@ -17,7 +17,13 @@ CLI::
     PYTHONPATH=src python -m repro.uvm.sweep \
         --benches ATAX,BICG,Pathfinder,Hotspot \
         --prefetchers none,tree,learned,oracle \
+        --evictions lru,random,hotcold \
         --backend pallas --out results/ --workers 8
+
+    # the full oversubscription scenario matrix (11 benchmarks x ratio x
+    # eviction policy x prefetcher, see repro.uvm.scenarios), resumable:
+    PYTHONPATH=src python -m repro.uvm.sweep --scenario oversub-full \
+        --out results/oversub/ --workers 8
 
 Backend scheduling
 ------------------
@@ -88,6 +94,7 @@ import numpy as np
 from repro.traces.trace import ACCESS_DTYPE, Trace
 from repro.uvm.config import UVMConfig
 from repro.uvm.engine import simulate
+from repro.uvm.eviction import EVICTION_POLICIES
 from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
                                    NoPrefetcher, OraclePrefetcher,
                                    Prefetcher, TreePrefetcher)
@@ -108,17 +115,19 @@ BACKENDS = ("auto", "numpy", "pallas")
 #: bump on any intentional change to the timing model, trace generators,
 #: prediction pipeline, or row schema — invalidates persisted sweep cells
 #: and cached traces so a resumed sweep never mixes pre- and post-change
-#: numbers (v3: backend-pluggable replay core — cells carry a ``backend``
-#: axis and rows record the backend that actually ran)
-SWEEP_VERSION = 3
+#: numbers (v4: scenario matrix + pluggable eviction policies — cells
+#: carry ``eviction``/``scenario`` axes and rows record both)
+SWEEP_VERSION = 4
 
 #: columns of the structured results, in CSV order (``engine`` is the
 #: requested replay style, ``backend`` the implementation that actually
-#: ran the cell: legacy / numpy / pallas)
+#: ran the cell: legacy / numpy / pallas; ``eviction`` the policy the
+#: cell replayed under, ``scenario`` the scenario-registry entry the
+#: cell expanded from — None for ad-hoc grids)
 ROW_FIELDS = [
     "bench", "prefetcher", "scale", "seed", "window", "prediction_us",
-    "device_pages", "device_frac", "engine", "backend", "n_accesses",
-    "n_instructions",
+    "device_pages", "device_frac", "eviction", "scenario", "engine",
+    "backend", "n_accesses", "n_instructions",
     "cycles", "ipc", "hits", "late", "faults", "hit_rate", "prefetch_issued",
     "prefetch_used", "accuracy", "coverage", "unity", "pages_migrated",
     "pages_evicted", "pcie_bytes", "seconds",
@@ -137,6 +146,8 @@ class SweepCell:
     prediction_us: float = 1.0          # learned-model inference overhead
     device_pages: Optional[int] = None  # absolute capacity, or ...
     device_frac: Optional[float] = None  # ... fraction of the working set
+    eviction: str = "lru"               # lru | random | hotcold
+    scenario: Optional[str] = None      # scenario-registry entry (if any)
     engine: str = "auto"
     backend: str = "auto"               # numpy | pallas | auto
     service_steps: int = 150            # learned-predictor training steps
@@ -156,6 +167,8 @@ def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
                 windows: Sequence[Optional[float]] = (0.6,),
                 prediction_us: Sequence[float] = (1.0,),
                 device_fracs: Sequence[Optional[float]] = (None,),
+                evictions: Sequence[str] = ("lru",),
+                scenario: Optional[str] = None,
                 engine: str = "auto",
                 backend: str = "auto",
                 service_steps: int = 150) -> List[SweepCell]:
@@ -168,12 +181,15 @@ def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
                     for window in windows:
                         for us in prediction_us:
                             for frac in device_fracs:
-                                cells.append(SweepCell(
-                                    bench=bench, prefetcher=pf, scale=scale,
-                                    seed=seed, window=window,
-                                    prediction_us=us, device_frac=frac,
-                                    engine=engine, backend=backend,
-                                    service_steps=service_steps))
+                                for ev in evictions:
+                                    cells.append(SweepCell(
+                                        bench=bench, prefetcher=pf,
+                                        scale=scale, seed=seed,
+                                        window=window, prediction_us=us,
+                                        device_frac=frac, eviction=ev,
+                                        scenario=scenario,
+                                        engine=engine, backend=backend,
+                                        service_steps=service_steps))
     return cells
 
 
@@ -274,7 +290,7 @@ def prepare_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
     if device_pages is None and cell.device_frac is not None:
         device_pages = int(trace.working_set_pages * cell.device_frac)
     config = UVMConfig(prediction_overhead_us=cell.prediction_us,
-                       device_pages=device_pages)
+                       device_pages=device_pages, eviction=cell.eviction)
     if prefetcher is None:
         prefetcher = make_prefetcher(cell, trace, config,
                                      cache_dir=cache_dir)
@@ -289,6 +305,7 @@ def _finish_row(cell: SweepCell, stats: UVMStats,
     row.update(
         device_pages=device_pages,
         backend=stats.backend,
+        eviction=stats.eviction,
         n_accesses=stats.n_accesses,
         n_instructions=stats.n_instructions,
         cycles=stats.cycles,
@@ -436,9 +453,11 @@ def _run_lane_batches(cells: Sequence[SweepCell],
         shapes.clear()
 
     families = _family_of_prefetcher_name()
+    # family- AND policy-major order: lane batches are homogeneous in
+    # both, so interleaved cells would flush half-filled batches
     order = sorted(range(len(cells)),
                    key=lambda i: (families.get(cells[i].prefetcher, "~"),
-                                  i))
+                                  cells[i].eviction, i))
     for i in order:
         cell = cells[i]
         trace, config, prefetcher, pages = prepare_cell(
@@ -598,6 +617,16 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--prediction-us", default="1.0")
     ap.add_argument("--device-fracs", default="",
                     help="e.g. '0.5,0.75' (empty = no oversubscription)")
+    ap.add_argument("--evictions", default="lru",
+                    help="eviction policies under oversubscription, comma "
+                         f"list from {','.join(EVICTION_POLICIES)}")
+    ap.add_argument("--scenario", default=None,
+                    help="expand a named scenario from "
+                         "repro.uvm.scenarios (e.g. 'oversub-full': the "
+                         "full 11-benchmark x ratio x eviction-policy x "
+                         "prefetcher matrix) instead of the grid flags; "
+                         "--engine/--backend/--out/--workers still apply "
+                         "and completed cells resume as usual")
     ap.add_argument("--engine", default="auto",
                     choices=["auto", "vectorized", "legacy"])
     ap.add_argument("--backend", default=None, choices=list(BACKENDS),
@@ -613,30 +642,46 @@ def main(argv: Optional[List[str]] = None) -> None:
     args = ap.parse_args(argv)
 
     from repro.traces.generators import BENCHMARKS
-    benches = args.benches.split(",")
-    pfs = args.prefetchers.split(",")
-    bad = [p for p in pfs if p not in PREFETCHERS]
-    if bad:
-        ap.error(f"unknown prefetcher(s) {','.join(bad)}; "
-                 f"choose from {','.join(PREFETCHERS)}")
-    bad = [b for b in benches if b not in BENCHMARKS]
-    if bad:
-        ap.error(f"unknown benchmark(s) {','.join(bad)}; "
-                 f"choose from {','.join(sorted(BENCHMARKS))}")
-    fracs: List[Optional[float]] = [None]
-    if args.device_fracs:
-        fracs += [float(x) for x in args.device_fracs.split(",")]
     backend = args.backend or os.environ.get("REPRO_SWEEP_BACKEND", "auto")
     if backend not in BACKENDS:
         ap.error(f"unknown backend {backend!r}; "
                  f"choose from {','.join(BACKENDS)}")
-    cells = expand_grid(
-        benches, pfs,
-        scales=[float(x) for x in args.scales.split(",")],
-        windows=[None if x == "full" else float(x)
-                 for x in args.windows.split(",")],
-        prediction_us=[float(x) for x in args.prediction_us.split(",")],
-        device_fracs=fracs, engine=args.engine, backend=backend)
+    if args.scenario:
+        from repro.uvm.scenarios import available_scenarios, expand_scenario
+        try:
+            cells = expand_scenario(args.scenario, engine=args.engine,
+                                    backend=backend)
+        except KeyError:
+            ap.error(f"unknown scenario {args.scenario!r}; choose from "
+                     f"{','.join(available_scenarios())}")
+        print(f"[sweep] scenario {args.scenario!r}: {len(cells)} cells")
+    else:
+        benches = args.benches.split(",")
+        pfs = args.prefetchers.split(",")
+        bad = [p for p in pfs if p not in PREFETCHERS]
+        if bad:
+            ap.error(f"unknown prefetcher(s) {','.join(bad)}; "
+                     f"choose from {','.join(PREFETCHERS)}")
+        bad = [b for b in benches if b not in BENCHMARKS]
+        if bad:
+            ap.error(f"unknown benchmark(s) {','.join(bad)}; "
+                     f"choose from {','.join(sorted(BENCHMARKS))}")
+        evictions = args.evictions.split(",")
+        bad = [e for e in evictions if e not in EVICTION_POLICIES]
+        if bad:
+            ap.error(f"unknown eviction policy(ies) {','.join(bad)}; "
+                     f"choose from {','.join(EVICTION_POLICIES)}")
+        fracs: List[Optional[float]] = [None]
+        if args.device_fracs:
+            fracs += [float(x) for x in args.device_fracs.split(",")]
+        cells = expand_grid(
+            benches, pfs,
+            scales=[float(x) for x in args.scales.split(",")],
+            windows=[None if x == "full" else float(x)
+                     for x in args.windows.split(",")],
+            prediction_us=[float(x) for x in args.prediction_us.split(",")],
+            device_fracs=fracs, evictions=evictions, engine=args.engine,
+            backend=backend)
     t0 = time.time()
     rows = run_sweep(cells, out_dir=args.out, workers=args.workers,
                      resume=not args.no_resume, verbose=True)
@@ -644,8 +689,8 @@ def main(argv: Optional[List[str]] = None) -> None:
     print(f"\n{len(rows)} cells in {dt:.1f}s "
           f"({sum(r['n_accesses'] for r in rows) / max(dt, 1e-9) / 1e6:.2f}"
           " M accesses/s aggregate)")
-    cols = ["bench", "prefetcher", "device_frac", "backend", "hit_rate",
-            "ipc", "unity"]
+    cols = ["bench", "prefetcher", "device_frac", "eviction", "backend",
+            "hit_rate", "ipc", "unity"]
     print(",".join(cols))
     for r in rows:
         print(",".join(f"{r[c]:.4f}" if isinstance(r[c], float) else str(r[c])

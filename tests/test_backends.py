@@ -181,30 +181,99 @@ def test_is_native_consistent_with_interpret_policy():
 
 def test_fits_batch_budgets():
     backend = get_backend("pallas")
-    assert backend.fits_batch([], ("demand", 100, 512))
-    assert backend.fits_batch([("demand", 100, 512)], ("demand", 100, 512))
+    assert backend.fits_batch([], ("demand", "lru", 100, 512))
+    assert backend.fits_batch([("demand", "lru", 100, 512)],
+                              ("demand", "lru", 100, 512))
     from repro.uvm.backends.pallas_backend import (MAX_BATCH_STATE_PAGES,
                                                    MAX_LANES_PER_BATCH)
     assert not backend.fits_batch(
-        [("demand", 100, 512)] * MAX_LANES_PER_BATCH, ("demand", 100, 512))
+        [("demand", "lru", 100, 512)] * MAX_LANES_PER_BATCH,
+        ("demand", "lru", 100, 512))
     huge_span = MAX_BATCH_STATE_PAGES // 2 + 1
-    assert not backend.fits_batch([("demand", 100, huge_span)],
-                                  ("demand", 100, huge_span))
+    assert not backend.fits_batch([("demand", "lru", 100, huge_span)],
+                                  ("demand", "lru", 100, huge_span))
 
 
 def test_fits_batch_never_mixes_families():
     """A lane batch is one kernel: incompatible prefetcher families must
     never share it, whatever the shape budgets say."""
     backend = get_backend("pallas")
-    assert not backend.fits_batch([("demand", 100, 512)],
-                                  ("tree", 100, 512))
-    assert not backend.fits_batch([("tree", 100, 512)],
-                                  ("learned", 100, 512))
+    assert not backend.fits_batch([("demand", "lru", 100, 512)],
+                                  ("tree", "lru", 100, 512))
+    assert not backend.fits_batch([("tree", "lru", 100, 512)],
+                                  ("learned", "lru", 100, 512))
     # different oracle lookaheads are different kernels too
-    assert not backend.fits_batch([("oracle/96", 100, 512)],
-                                  ("oracle/32", 100, 512))
-    assert backend.fits_batch([("oracle/96", 100, 512)],
-                              ("oracle/96", 100, 512))
+    assert not backend.fits_batch([("oracle/96", "lru", 100, 512)],
+                                  ("oracle/32", "lru", 100, 512))
+    assert backend.fits_batch([("oracle/96", "lru", 100, 512)],
+                              ("oracle/96", "lru", 100, 512))
+
+
+def test_fits_batch_never_mixes_eviction_policies():
+    """Victim selection and the extra policy carry are static kernel
+    structure: lanes of different eviction policies must never share a
+    batch, whatever the shape budgets say."""
+    backend = get_backend("pallas")
+    for fam in ("demand", "tree", "learned", "oracle/96"):
+        assert not backend.fits_batch([(fam, "lru", 100, 512)],
+                                      (fam, "random", 100, 512))
+        assert not backend.fits_batch([(fam, "random", 100, 512)],
+                                      (fam, "hotcold", 100, 512))
+        assert backend.fits_batch([(fam, "hotcold", 100, 512)],
+                                  (fam, "hotcold", 100, 512))
+
+
+def test_lane_shape_carries_policy():
+    from repro.uvm.backends.pallas_backend import _lane_shape
+
+    pages = np.arange(120) % 64
+    for pol in ("lru", "random", "hotcold"):
+        req = ReplayRequest(_mk_trace(pages), NoPrefetcher(),
+                            UVMConfig(device_pages=32, eviction=pol))
+        fam, shape_pol, t, sp = _lane_shape(req)
+        assert (fam, shape_pol, t) == ("demand", pol, 120)
+
+
+def test_pack_lanes_never_cobuckets_policies():
+    """Interleaved cells of every eviction policy pack into
+    policy-homogeneous batches covering every request exactly once."""
+    backend = PallasReplayBackend()
+    pages = np.arange(200) % 64
+    policies = ("lru", "random", "hotcold", "lru", "random", "hotcold")
+    reqs = [ReplayRequest(_mk_trace(pages), NoPrefetcher(),
+                          UVMConfig(device_pages=48, eviction=pol))
+            for pol in policies]
+    batches = backend.pack_lanes(reqs)
+    assert sorted(i for b in batches for i in b) == list(range(len(reqs)))
+    for b in batches:
+        pols = {reqs[i].config.eviction for i in b}
+        assert len(pols) == 1, f"mixed-policy batch: {pols}"
+    # 3 policies, identical shapes -> exactly 3 batches
+    assert len(batches) == 3
+
+
+def test_policy_lane_batches_match_numpy():
+    """One replay() call covering every (family, policy) bucket under
+    oversubscription equals independent NumPy replays."""
+    perm = (np.arange(2 * 512) * 7) % (2 * 512)
+    cases = [(pf, pol)
+             for pf in ("none", "block", "tree", "learned", "oracle")
+             for pol in ("random", "hotcold")]
+
+    def build(pf, pol):
+        tr = _mk_trace(np.concatenate([perm, perm + 1024]))
+        config = UVMConfig(device_pages=600, mshr_entries=16, eviction=pol)
+        return ReplayRequest(tr, golden_prefetcher(pf, tr, config), config)
+
+    backend = get_backend("pallas")
+    requests = [build(pf, pol) for pf, pol in cases]
+    assert all(backend.can_replay(r) for r in requests)
+    got = backend.replay(requests)
+    want = [dispatch(build(pf, pol), "numpy") for pf, pol in cases]
+    for (pf, pol), g, w in zip(cases, got, want):
+        assert g.backend == "pallas" and g.eviction == pol
+        assert w.pages_evicted > 0, "vacuous: no eviction churn"
+        _assert_equivalent(g, w, context=f"{pf}/{pol}")
 
 
 def test_lane_family_buckets():
@@ -362,20 +431,22 @@ if HAVE_HYPOTHESIS:
         st_.lists(st_.integers(0, 600), min_size=1, max_size=120),
         st_.sampled_from(["none", "block", "tree", "learned", "oracle"]),
         st_.sampled_from([None, 48, 200]),
+        st_.sampled_from(["lru", "random", "hotcold"]),
     )
 
     @settings(max_examples=15, deadline=None)
     @given(st_.lists(_cell, min_size=1, max_size=5))
     def test_lane_batch_property(cells):
         """A lane-batched pallas replay of N random cells — every
-        prefetcher family — equals N independent NumPy replays on every
-        integer counter; ragged lengths and oversubscribed (cap=48/200)
-        cells included.  Interleaved families exercise the
-        family-homogeneous packing."""
+        prefetcher family and eviction policy — equals N independent
+        NumPy replays on every integer counter; ragged lengths and
+        oversubscribed (cap=48/200) cells included.  Interleaved families
+        and policies exercise the homogeneous packing."""
         def build(spec):
-            pages, pf_name, cap = spec
+            pages, pf_name, cap, eviction = spec
             tr = _mk_trace(np.asarray(pages, dtype=np.int64))
-            config = UVMConfig(device_pages=cap, mshr_entries=64)
+            config = UVMConfig(device_pages=cap, mshr_entries=64,
+                               eviction=eviction)
             return ReplayRequest(tr, golden_prefetcher(pf_name, tr, config),
                                  config)
 
@@ -385,6 +456,7 @@ if HAVE_HYPOTHESIS:
         for b in backend.pack_lanes(requests):
             assert len({lane_family(requests[i].prefetcher)
                         for i in b}) == 1
+            assert len({requests[i].config.eviction for i in b}) == 1
         got = backend.replay(requests)
         want = [dispatch(build(c), "numpy") for c in cells]
         for i, (g, w) in enumerate(zip(got, want)):

@@ -15,7 +15,11 @@ Coverage is deliberately skewed toward the paper's hard regimes:
   through LRU churn — the regime the dense count arrays must track),
 * learned cells whose predictions ride through the ``repro.uvm.predcache``
   atomic store (the ``learned-cached`` variant),
-* tight-MSHR fault storms and ragged tiny traces.
+* tight-MSHR fault storms and ragged tiny traces,
+* every eviction policy (lru/random/hotcold): the policy is a first-class
+  fuzz axis, so every (backend pair × policy) combination is covered by
+  construction — a seeded deterministic sweep exercises all policies even
+  without hypothesis.
 
 The legacy backend accepts everything, and the numpy/pallas backends must
 accept every generated cell here (spans are small), so each example
@@ -30,6 +34,7 @@ import pytest
 
 from repro.traces.trace import ROOT_PAGES, Trace, make_records
 from repro.uvm import UVMConfig
+from repro.uvm.eviction import EVICTION_POLICIES
 from repro.uvm.golden import make_prefetcher
 from repro.uvm.replay_core import (ReplayRequest, available_backends,
                                    get_backend)
@@ -71,11 +76,12 @@ def _assert_pairwise_equal(stats_by_backend, context):
                 f"{getattr(got, f)} != {getattr(ref, f)}")
 
 
-def _replay_everywhere(pages, pf_name, cap, mshr):
+def _replay_everywhere(pages, pf_name, cap, mshr, eviction="lru"):
     """Replay one cell through every accepting backend; returns
     {backend_name: stats}."""
     trace = _mk_trace(pages)
-    config = UVMConfig(device_pages=cap, mshr_entries=mshr)
+    config = UVMConfig(device_pages=cap, mshr_entries=mshr,
+                       eviction=eviction)
     stats_by_backend = {}
     for name in available_backends():
         backend = get_backend(name)
@@ -86,12 +92,13 @@ def _replay_everywhere(pages, pf_name, cap, mshr):
             continue
         stats = backend.replay([request])[0]
         assert stats.backend == name
+        assert stats.eviction == eviction
         stats_by_backend[name] = stats
     missing = REQUIRED_BACKENDS - set(stats_by_backend)
     assert not missing, (
         f"backends {sorted(missing)} declined a fuzzed "
-        f"({pf_name}, cap={cap}) cell — the differential guarantee "
-        "would pass vacuously")
+        f"({pf_name}, cap={cap}, eviction={eviction}) cell — the "
+        "differential guarantee would pass vacuously")
     return stats_by_backend
 
 
@@ -125,24 +132,38 @@ def _churn_pages(rng):
 def _seeded_cells():
     rng = np.random.default_rng(20260728)
     cells = []
-    # every prefetcher family over random traces / caps / MSHR depths
+    # every prefetcher family over random traces / caps / MSHR depths;
+    # the cap index shifts by one per repetition (i // 6) so each
+    # prefetcher sees a different capacity — including a real one — in
+    # each of its three policy-rotated appearances
     for i, pf_name in enumerate(PREFETCHER_NAMES * 3):
         cells.append((f"seed{i}", _random_pages(rng), pf_name,
-                      [None, 48, 200][i % 3], [4, 16, 64][i % 3]))
-    # tree-churn oversubscription cells (the ISSUE-called-out regime)
-    for i, cap in enumerate([700, 1100, None]):
-        cells.append((f"churn{i}", _churn_pages(rng), "tree", cap, 16))
+                      [None, 48, 200][(i + i // 6) % 3], [4, 16, 64][i % 3],
+                      EVICTION_POLICIES[(i // 3) % 3]))
+    # every (prefetcher, policy) pair under a guaranteed-thrashing cap —
+    # (backend pair x policy) coverage by construction, hypothesis or not
+    for j, pf_name in enumerate(PREFETCHER_NAMES):
+        for policy in EVICTION_POLICIES:
+            cells.append((f"pol-{policy}-{pf_name}", _random_pages(rng),
+                          pf_name, [48, 200][j % 2], 16, policy))
+    # tree-churn oversubscription cells (the ISSUE-called-out regime),
+    # per policy: victim order diverges first in this regime
+    for i, (cap, policy) in enumerate([(700, "lru"), (1100, "lru"),
+                                       (None, "lru"), (700, "random"),
+                                       (700, "hotcold")]):
+        cells.append((f"churn{i}-{policy}", _churn_pages(rng), "tree",
+                      cap, 16, policy))
     return cells
 
 
 @pytest.mark.parametrize("cell", _seeded_cells(), ids=lambda c: c[0])
 def test_differential_seeded_cells(cell):
     """Seeded random cells agree across every registered backend pair."""
-    name, pages, pf_name, cap, mshr = cell
-    stats = _replay_everywhere(pages, pf_name, cap, mshr)
+    name, pages, pf_name, cap, mshr, eviction = cell
+    stats = _replay_everywhere(pages, pf_name, cap, mshr, eviction)
     _assert_pairwise_equal(stats,
                            f"[{name}: {pf_name} cap={cap} mshr={mshr} "
-                           f"n={len(pages)}]")
+                           f"eviction={eviction} n={len(pages)}]")
 
 
 def test_differential_learned_cached_matches_plain():
@@ -150,14 +171,19 @@ def test_differential_learned_cached_matches_plain():
     agree across all backends AND with the direct-array learned cell on
     every backend (the cache must be replay-invisible everywhere)."""
     rng = np.random.default_rng(7)
-    for cap in (None, 48):
+    for cap, eviction in ((None, "lru"), (48, "lru"), (48, "random"),
+                          (48, "hotcold")):
         pages = rng.integers(0, 500, size=120)
-        cached = _replay_everywhere(pages, "learned-cached", cap, 16)
-        plain = _replay_everywhere(pages, "learned", cap, 16)
-        _assert_pairwise_equal(cached, f"[learned-cached cap={cap}]")
+        cached = _replay_everywhere(pages, "learned-cached", cap, 16,
+                                    eviction)
+        plain = _replay_everywhere(pages, "learned", cap, 16, eviction)
+        _assert_pairwise_equal(cached,
+                               f"[learned-cached cap={cap} ev={eviction}]")
         merged = dict(plain)
         merged.update({f"cached-{k}": v for k, v in cached.items()})
-        _assert_pairwise_equal(merged, f"[learned vs cached cap={cap}]")
+        _assert_pairwise_equal(merged,
+                               f"[learned vs cached cap={cap} "
+                               f"ev={eviction}]")
 
 
 # ---------------------------------------------------------------------------
@@ -189,26 +215,30 @@ if HAVE_HYPOTHESIS:
         st_.sampled_from(PREFETCHER_NAMES),
         st_.sampled_from([None, 48, 200]),       # device capacity (pages)
         st_.sampled_from([4, 16, 64]),           # MSHR entries
+        st_.sampled_from(EVICTION_POLICIES),     # eviction policy
     )
 
     @settings(max_examples=25, deadline=None)
     @given(_cell)
     def test_differential_random_cells(cell):
-        """Random (trace, config, prefetcher) cells agree across every
-        registered backend pair."""
-        pages, pf_name, cap, mshr = cell
-        stats = _replay_everywhere(pages, pf_name, cap, mshr)
+        """Random (trace, config, prefetcher, eviction policy) cells
+        agree across every registered backend pair."""
+        pages, pf_name, cap, mshr, eviction = cell
+        stats = _replay_everywhere(pages, pf_name, cap, mshr, eviction)
         _assert_pairwise_equal(stats,
                                f"[{pf_name} cap={cap} mshr={mshr} "
-                               f"n={len(pages)}]")
+                               f"eviction={eviction} n={len(pages)}]")
 
     @settings(max_examples=8, deadline=None)
-    @given(st_.integers(0, 2 ** 32 - 1), st_.sampled_from([None, 700, 1100]))
-    def test_differential_tree_churn_oversubscription(seed, cap):
+    @given(st_.integers(0, 2 ** 32 - 1), st_.sampled_from([None, 700, 1100]),
+           st_.sampled_from(EVICTION_POLICIES))
+    def test_differential_tree_churn_oversubscription(seed, cap, eviction):
         """Tree cells on permuted two-region sweeps under
         oversubscription: node counts rise and fall continuously, the
-        regime where per-level count state diverges first if any backend
-        drifts."""
+        regime where per-level count state (and the policies' victim
+        order) diverges first if any backend drifts."""
         pages = _churn_pages(np.random.default_rng(seed))
-        stats = _replay_everywhere(pages, "tree", cap, 16)
-        _assert_pairwise_equal(stats, f"[tree-churn seed={seed} cap={cap}]")
+        stats = _replay_everywhere(pages, "tree", cap, 16, eviction)
+        _assert_pairwise_equal(stats,
+                               f"[tree-churn seed={seed} cap={cap} "
+                               f"eviction={eviction}]")

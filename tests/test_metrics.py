@@ -1,0 +1,131 @@
+"""Unit tests for ``repro.uvm.metrics`` — the paper's unified metric
+(Unity = cbrt(accuracy x coverage x page-hit-rate), §Table 11), the
+geometric mean used by every summary table, and the PCIe-bandwidth
+timeline binning behind Fig 12."""
+import numpy as np
+import pytest
+
+from repro.uvm.metrics import geomean, pcie_gbs_timeline, unity
+from repro.uvm.simulator import UVMStats
+
+
+# ---------------------------------------------------------------------------
+# unity
+# ---------------------------------------------------------------------------
+
+def test_unity_is_cbrt_of_product():
+    assert unity(1.0, 1.0, 1.0) == 1.0
+    assert unity(0.0, 1.0, 1.0) == 0.0
+    assert unity(0.5, 0.5, 0.5) == pytest.approx(0.5)
+    assert unity(0.9, 0.8, 0.7) == pytest.approx((0.9 * 0.8 * 0.7) ** (1 / 3))
+
+
+def test_unity_bounded_and_monotone():
+    rng = np.random.default_rng(3)
+    prev = unity(0.0, 0.5, 0.5)
+    for a in np.linspace(0.0, 1.0, 11):
+        u = unity(float(a), 0.5, 0.5)
+        assert 0.0 <= u <= 1.0
+        assert u >= prev            # monotone in each argument
+        prev = u
+    for _ in range(50):
+        a, c, h = rng.uniform(0, 1, 3)
+        assert 0.0 <= unity(a, c, h) <= 1.0
+    assert isinstance(unity(0.3, 0.3, 0.3), float)
+
+
+def test_unity_symmetric_in_arguments():
+    assert unity(0.2, 0.5, 0.9) == unity(0.9, 0.2, 0.5) == unity(0.5, 0.9,
+                                                                 0.2)
+
+
+def test_stats_unity_property_matches_module():
+    """UVMStats.unity (what sweep rows record) is the module's metric of
+    its own accuracy/coverage/hit_rate properties."""
+    st = UVMStats(name="t", prefetcher="tree", n_accesses=100,
+                  n_instructions=1000, cycles=5000.0, hits=60, late=10,
+                  faults=30, prefetch_issued=50, prefetch_used=40,
+                  pages_migrated=80, pages_evicted=0, pcie_bytes=1.0,
+                  zero_copy_bytes=0.0)
+    assert st.unity == pytest.approx(
+        unity(st.accuracy, st.coverage, st.hit_rate))
+    assert st.accuracy == pytest.approx(40 / 50)
+    assert st.coverage == pytest.approx(40 / (40 + 30 + 10))
+    assert st.hit_rate == pytest.approx(0.6)
+
+
+# ---------------------------------------------------------------------------
+# geomean
+# ---------------------------------------------------------------------------
+
+def test_geomean_basics():
+    assert geomean([2.0, 8.0]) == pytest.approx(4.0)
+    assert geomean([5.0]) == pytest.approx(5.0)
+    assert geomean([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+    # accepts any iterable, returns a python float
+    assert isinstance(geomean(x for x in (1.0, 4.0)), float)
+    assert geomean(iter([1.0, 4.0])) == pytest.approx(2.0)
+
+
+def test_geomean_clamps_nonpositive():
+    """Zero/negative entries clamp to 1e-12 instead of nan/-inf — a
+    crashed cell drags the mean down but never poisons the summary."""
+    g = geomean([0.0, 1.0])
+    assert g == pytest.approx(np.sqrt(1e-12))
+    assert np.isfinite(geomean([-3.0, 2.0, 0.0]))
+
+
+def test_geomean_scale_invariance():
+    xs = [0.5, 2.0, 8.0]
+    assert geomean([4 * x for x in xs]) == pytest.approx(4 * geomean(xs))
+
+
+# ---------------------------------------------------------------------------
+# pcie_gbs_timeline
+# ---------------------------------------------------------------------------
+
+def test_timeline_empty_inputs():
+    assert pcie_gbs_timeline(None, core_mhz=1481.0).shape == (0, 2)
+    assert pcie_gbs_timeline(np.zeros((0, 2)), core_mhz=1481.0).shape == \
+        (0, 2)
+
+
+def test_timeline_single_window_rate():
+    """One 4 KB transfer in one 10k-cycle window: GB/s = bytes / window
+    seconds, centered on the window."""
+    core_mhz = 1000.0                      # 1 cycle == 1 ns
+    tl = np.array([[1234.0, 4096.0]])
+    out = pcie_gbs_timeline(tl, core_mhz=core_mhz, window_cycles=10_000.0)
+    assert out.shape == (1, 2)
+    assert out[0, 0] == pytest.approx(5000.0)          # window center
+    secs = 10_000.0 / (core_mhz * 1e6)
+    assert out[0, 1] == pytest.approx(4096.0 / secs / 1e9)
+
+
+def test_timeline_bins_by_window_and_sums_bytes():
+    core_mhz = 1481.0
+    tl = np.array([
+        [100.0, 4096.0], [9999.0, 4096.0],     # window 0: 2 pages
+        [10_001.0, 4096.0],                    # window 1: 1 page
+        [35_000.0, 8192.0],                    # window 3: 2 pages worth
+    ])
+    out = pcie_gbs_timeline(tl, core_mhz=core_mhz, window_cycles=10_000.0)
+    assert out.shape == (4, 2)                 # through the last window
+    np.testing.assert_allclose(out[:, 0],
+                               [5000.0, 15000.0, 25000.0, 35000.0])
+    secs = 10_000.0 / (core_mhz * 1e6)
+    np.testing.assert_allclose(
+        out[:, 1],
+        np.array([8192.0, 4096.0, 0.0, 8192.0]) / secs / 1e9)
+
+
+def test_timeline_total_bytes_conserved():
+    """Binning conserves total traffic whatever the window size."""
+    rng = np.random.default_rng(11)
+    tl = np.stack([np.sort(rng.uniform(0, 1e6, 500)),
+                   np.full(500, 4096.0)], axis=1)
+    for window in (1_000.0, 10_000.0, 137_000.0):
+        out = pcie_gbs_timeline(tl, core_mhz=1481.0, window_cycles=window)
+        secs = window / (1481.0 * 1e6)
+        total = float(np.sum(out[:, 1] * secs * 1e9))
+        assert total == pytest.approx(500 * 4096.0)

@@ -207,6 +207,28 @@ def test_sweep_mixed_family_grid_runs_on_lanes(tmp_path):
         assert got["cycles"] == pytest.approx(want["cycles"], rel=1e-6)
 
 
+def test_sweep_policy_grid_runs_on_lanes(tmp_path):
+    """A grid crossing every eviction policy under --backend pallas
+    replays every cell on the lanes (policy-homogeneous batches), rows
+    record the policy, and the numpy backend agrees per cell."""
+    kw = dict(scales=[0.25], device_fracs=[0.5],
+              evictions=["lru", "random", "hotcold"])
+    cells_p = expand_grid(BENCHES, ["none", "tree"], backend="pallas", **kw)
+    rows_p = run_sweep(cells_p, out_dir=str(tmp_path / "pallas"), workers=1)
+    assert [r["backend"] for r in rows_p] == ["pallas"] * len(rows_p)
+    assert [r["eviction"] for r in rows_p] == \
+        [c.eviction for c in cells_p]
+    assert {r["eviction"] for r in rows_p} == {"lru", "random", "hotcold"}
+    rows_n = run_sweep(expand_grid(BENCHES, ["none", "tree"],
+                                   backend="numpy", **kw),
+                       out_dir=str(tmp_path / "numpy"), workers=1)
+    for got, want in zip(rows_p, rows_n):
+        for f in INT_ROW_FIELDS:
+            assert got[f] == want[f], (got["bench"], got["prefetcher"],
+                                       got["eviction"], f)
+        assert got["cycles"] == pytest.approx(want["cycles"], rel=1e-6)
+
+
 def test_sweep_pallas_fallback_is_recorded(tmp_path, monkeypatch):
     """Cells the lanes decline under --backend pallas fall back per cell
     to the NumPy path and the row says so instead of reading as

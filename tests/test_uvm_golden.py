@@ -29,8 +29,10 @@ import pytest
 from repro.traces.trace import ROOT_PAGES, Trace, make_records
 from repro.uvm import UVMConfig, UVMSimulator, VectorizedUVMSimulator
 from repro.uvm.engine import MAX_SPAN_PAGES
+from repro.uvm.eviction import EVICTION_POLICIES
 from repro.uvm.golden import (FLOAT_FIELDS, INT_FIELDS, golden_cell,
-                              golden_cell_ids, stats_to_dict)
+                              golden_cell_ids, golden_cell_policy,
+                              stats_to_dict)
 from repro.uvm.prefetchers import Prefetcher, TreePrefetcher
 from repro.uvm.replay_core import ReplayRequest, get_backend
 
@@ -92,53 +94,65 @@ def test_fixture_has_no_stale_cells():
 
 
 # ---------------------------------------------------------------------------
-# pallas multi-lane backend: every golden cell of each lane family in ONE
-# lane batch (demand = none/block, tree, learned (+cached), oracle)
+# pallas multi-lane backend: every golden cell of each (lane family,
+# eviction policy) bucket in ONE lane batch (demand = none/block, tree,
+# learned (+cached), oracle; batches are policy-homogeneous too)
 # ---------------------------------------------------------------------------
 
-PALLAS_FAMILY_CELLS = {
-    "demand": [c for c in golden_cell_ids()
-               if c.split("/")[1] in ("none", "block")],
-    "tree": [c for c in golden_cell_ids() if c.split("/")[1] == "tree"],
-    "learned": [c for c in golden_cell_ids()
-                if c.split("/")[1] in ("learned", "learned-cached")],
-    "oracle": [c for c in golden_cell_ids() if c.split("/")[1] == "oracle"],
-}
+def _family_of(cell_id):
+    pf = cell_id.split("/")[1]
+    return {"none": "demand", "block": "demand", "tree": "tree",
+            "learned": "learned", "learned-cached": "learned",
+            "oracle": "oracle"}[pf]
+
+
+PALLAS_LANE_GROUPS = {}
+for _cell_id in golden_cell_ids():
+    PALLAS_LANE_GROUPS.setdefault(
+        (_family_of(_cell_id), golden_cell_policy(_cell_id)),
+        []).append(_cell_id)
 
 
 def test_pallas_eligibility_is_not_vacuous():
-    """Empty-eligibility regression guard: every lane family must have
-    golden cells AND the pallas backend must accept all of them, so the
-    per-family equivalence batches below can never silently replay zero
-    cells (which would let the golden guarantee pass vacuously)."""
+    """Empty-eligibility regression guard: every lane family AND every
+    eviction policy must have golden cells the pallas backend accepts, so
+    the per-(family, policy) equivalence batches below can never silently
+    replay zero cells (which would let the golden guarantee pass
+    vacuously)."""
     from repro.uvm.backends.pallas_backend import lane_family
 
     backend = get_backend("pallas")
     seen_families = set()
-    for family, cells in PALLAS_FAMILY_CELLS.items():
-        assert cells, f"no golden cells for lane family {family!r}"
+    seen_policies = set()
+    for (family, policy), cells in PALLAS_LANE_GROUPS.items():
+        assert cells, f"no golden cells for lane bucket {(family, policy)}"
         for cell_id in cells:
             trace, config, factory = golden_cell(cell_id)
             req = ReplayRequest(trace, factory(), config)
             assert backend.can_replay(req), (
                 f"pallas backend declines golden cell {cell_id}: the "
-                f"{family} lane batch would silently shrink")
+                f"{(family, policy)} lane batch would silently shrink")
             seen_families.add(lane_family(req.prefetcher).split("/")[0])
+            seen_policies.add(policy)
     # all five paper-facing prefetchers map onto these four kernel
-    # families; every family must actually be exercised
+    # families and every eviction policy must have in-kernel coverage —
+    # no policy's lane eligibility may silently shrink to zero
     assert seen_families == {"demand", "tree", "learned", "oracle"}
-    assert sum(len(c) for c in PALLAS_FAMILY_CELLS.values()) == len(
+    assert seen_policies == set(EVICTION_POLICIES)
+    assert sum(len(c) for c in PALLAS_LANE_GROUPS.values()) == len(
         golden_cell_ids())
 
 
-@pytest.mark.parametrize("family", sorted(PALLAS_FAMILY_CELLS))
-def test_pallas_lane_batch_matches_legacy(family):
-    """All golden cells of one lane family — including the oversubscribed
-    LRU-churn traces, the MSHR-pressure storm, tree escalation churn, and
-    cached learned predictions — replayed as ONE multi-lane pallas batch:
-    integer counters exact, floats to 1e-6 (bit-equal in practice)."""
-    cells = PALLAS_FAMILY_CELLS[family]
-    assert cells, f"vacuous lane batch for family {family!r}"
+@pytest.mark.parametrize("group", sorted(PALLAS_LANE_GROUPS),
+                         ids=lambda g: f"{g[0]}-{g[1]}")
+def test_pallas_lane_batch_matches_legacy(group):
+    """All golden cells of one (lane family, eviction policy) bucket —
+    including the oversubscribed eviction-churn traces, the MSHR-pressure
+    storm, tree escalation churn, and cached learned predictions —
+    replayed as ONE multi-lane pallas batch: integer counters exact,
+    floats to 1e-6 (bit-equal in practice)."""
+    cells = PALLAS_LANE_GROUPS[group]
+    assert cells, f"vacuous lane batch for bucket {group!r}"
     backend = get_backend("pallas")
     requests = []
     for cell_id in cells:
@@ -146,11 +160,12 @@ def test_pallas_lane_batch_matches_legacy(family):
         requests.append(ReplayRequest(trace, factory(), config))
     assert all(backend.can_replay(r) for r in requests)
     assert len(backend.pack_lanes(requests)) == 1, \
-        f"{family} golden cells must pack into a single lane batch"
+        f"{group} golden cells must pack into a single lane batch"
     all_stats = backend.replay(requests)
     assert len(all_stats) == len(cells)
     for cell_id, stats in zip(cells, all_stats):
         assert stats.backend == "pallas"
+        assert stats.eviction == group[1]
         _assert_stats_match(stats_to_dict(stats),
                             stats_to_dict(_legacy_stats(cell_id)), rel=1e-6,
                             context=f"pallas vs legacy [{cell_id}]")
