@@ -27,7 +27,8 @@ import traceback
 from benchmarks import (common, fig5_features, fig6_convergence,
                         fig9_predictors, oversub_bench,
                         fig10_latency, fig12_pcie, kernels_bench,
-                        offload_bench, perf_ipc, table1_transformer,
+                        offload_bench, perf_ipc, serve_bench,
+                        table1_transformer,
                         table2_clustering, table3_distance, table4_fc,
                         table5_hlsh, table67_memory, table8_revised,
                         table10_hitrate, table11_unity)
@@ -53,6 +54,8 @@ SUITES = [
     # explicit empty argv: oversub_bench has its own CLI and must not
     # re-parse run.py's flags when invoked as a suite
     ("oversub", lambda: oversub_bench.main([])),
+    # serving-traffic SLO sweep (rate x capacity x eviction x prefetcher)
+    ("serve", lambda: serve_bench.main([])),
 ]
 
 
@@ -98,8 +101,12 @@ def main() -> None:
         if args.emit_json:
             scenario_argv += ["--emit-json",
                               args.emit_json + ".rows.json"]
+        # serve-* scenarios route through serve_bench so the printed
+        # table carries the SLO latency columns
+        module = (serve_bench if args.scenario.startswith("serve")
+                  else oversub_bench)
         suites = [(f"scenario:{args.scenario}",
-                   lambda: oversub_bench.main(scenario_argv))]
+                   lambda: module.main(scenario_argv))]
         only = None
 
     t_start = time.time()

@@ -69,4 +69,33 @@ print(f"[ci] scenario smoke ok: {len(rows)} rows, policies {sorted(policies)}")
 PYEOF
 rm -rf "$SCN_OUT"
 
+echo "[ci] serve-traffic smoke: serve-smoke (PagedKVStore-derived traces:"
+echo "[ci] 2 serve workloads x 2 ratios x all eviction policies x"
+echo "[ci] none/block) through the pallas lanes in interpret mode; every"
+echo "[ci] row must record its backend, policy, and ordered latency"
+echo "[ci] percentiles (decode p50/p95/p99 + TTFT p50/p95/p99)"
+SRV_OUT="$(mktemp -d "${TMPDIR:-/tmp}/ci_serve_smoke.XXXXXX")"
+JAX_PLATFORMS=cpu python -m repro.uvm.sweep --scenario serve-smoke \
+    --backend pallas --out "$SRV_OUT"
+python - "$SRV_OUT" <<'PYEOF'
+import json, sys
+rows = json.load(open(sys.argv[1] + "/results.json"))["rows"]
+assert len(rows) == 24, f"serve smoke expanded {len(rows)} cells, not 24"
+bad = [r for r in rows if r["backend"] != "pallas"]
+assert not bad, f"{len(bad)} serve cells fell off the pallas lanes"
+policies = {r["eviction"] for r in rows}
+assert policies == {"lru", "random", "hotcold"}, policies
+assert all(r["scenario"] == "serve-smoke" for r in rows)
+lat = ("decode_lat_p50_us", "decode_lat_p95_us", "decode_lat_p99_us",
+       "ttft_p50_us", "ttft_p95_us", "ttft_p99_us")
+for r in rows:
+    for f in lat:
+        assert isinstance(r[f], float) and r[f] > 0.0, (f, r[f], r["bench"])
+    assert (r["decode_lat_p50_us"] <= r["decode_lat_p95_us"]
+            <= r["decode_lat_p99_us"]), r["bench"]
+    assert r["ttft_p50_us"] <= r["ttft_p95_us"] <= r["ttft_p99_us"], r["bench"]
+print(f"[ci] serve smoke ok: {len(rows)} rows, policies {sorted(policies)}")
+PYEOF
+rm -rf "$SRV_OUT"
+
 echo "[ci] OK"

@@ -2,6 +2,14 @@
 the learned offload prefetcher (the paper's technique as a framework
 feature — see repro.offload).
 
+Positions handed to the store are *cache* positions — prefix-inflated for
+VLM archs, the same coordinate the KV cache is written at — so block and
+HBM-capacity accounting agree with the cache layout (the store asserts
+positions stay inside its ``max_len``).  The store's access log can be
+dumped as a replay-core trace (``--dump-trace``) and replayed through
+``repro.uvm.sweep`` like any serve scenario
+(see ``repro.offload.serve_trace``).
+
 Usage (single host, reduced config):
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --reduced --requests 8 --prompt-len 64 --gen 32
@@ -32,6 +40,9 @@ def main(argv=None) -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--hbm-blocks", type=int, default=48,
                     help="HBM capacity of the paged KV store, in blocks")
+    ap.add_argument("--dump-trace", default=None, metavar="PATH.npz",
+                    help="write the KV store's access log as a replay-core "
+                         "trace (repro.offload.serve_trace npz layout)")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -65,18 +76,27 @@ def main(argv=None) -> None:
     logits.block_until_ready()
     t_prefill = time.time() - t0
 
-    # paged KV store + learned prefetcher drive host<->HBM block residency
+    # paged KV store + learned prefetcher drive host<->HBM block residency;
+    # max_len is prefix-inflated, so the capacity accounting covers the
+    # patch-prefix blocks a VLM decode sweeps through
     store = PagedKVStore(n_requests=b, max_len=max_len,
                          hbm_capacity_blocks=args.hbm_blocks)
+    assert store.blocks_per_seq * 64 >= max_len, \
+        "store capacity accounting must cover the prefix-inflated cache"
     pf = OffloadPrefetcher(store)
 
     toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
     out_tokens: List[np.ndarray] = [np.asarray(toks)]
+    step_ends: List[int] = []      # access-log length after each step
     t0 = time.time()
     for step in range(args.gen - 1):
+        # cache position (prefix-inflated for VLMs): the store must sweep
+        # the same coordinate the KV cache is written at, or block and
+        # capacity accounting disagree about the prefix blocks
         pos = prefix + s + step
-        store.on_decode_step(s + step)
-        pf.step(s + step)
+        store.on_decode_step(pos)
+        pf.step(pos)
+        step_ends.append(len(store.access_log))
         logits, states = decode_j(params, states, toks,
                                   jnp.asarray(pos, jnp.int32))
         toks = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
@@ -86,13 +106,28 @@ def main(argv=None) -> None:
 
     gen = np.concatenate(out_tokens, axis=1)
     st = store.stats()
+    # the first token per request comes from prefill — only gen-1 decode
+    # steps ran inside the timed window
+    n_decoded = b * (args.gen - 1)
     print(f"served {b} requests: prefill {t_prefill*1e3:.0f} ms, "
-          f"{args.gen} tokens in {t_decode*1e3:.0f} ms "
-          f"({b*args.gen/max(t_decode,1e-9):.0f} tok/s)")
+          f"{args.gen} tokens/request; {n_decoded} tokens decoded in "
+          f"{t_decode*1e3:.0f} ms "
+          f"({n_decoded/max(t_decode,1e-9):.0f} tok/s)")
     print(f"kv-store: hit-rate={st['hit_rate']:.3f} "
           f"prefetch-acc={st['prefetch_accuracy']:.3f} "
           f"host-bytes={st['host_bytes']/1e6:.1f}MB")
     print("sample tokens:", gen[0, :16].tolist())
+
+    if args.dump_trace:
+        from repro.offload.serve_trace import (access_log_to_trace,
+                                               save_trace_npz)
+        trace = access_log_to_trace(
+            store.access_log, n_requests=b,
+            blocks_per_seq=store.blocks_per_seq,
+            name=f"serve-{args.arch}", step_ends=step_ends)
+        save_trace_npz(trace, args.dump_trace)
+        print(f"dump-trace: {len(trace)} accesses over "
+              f"{len(step_ends)} decode steps -> {args.dump_trace}")
 
 
 if __name__ == "__main__":

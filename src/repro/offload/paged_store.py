@@ -10,6 +10,13 @@ This layer does residency accounting and transfer scheduling against a
 bandwidth model (PCIe-class host link), and exposes the access stream the
 learned prefetcher trains on.  It is exercised by ``launch/serve.py`` and
 benchmarked in ``benchmarks/offload_bench.py``.
+
+The access stream is also a first-class UVM replay trace source:
+``repro.offload.serve_trace`` maps blocks to pages (one block = one page,
+per-request 2 MB-aligned regions), DMAs to far-faults, and decode steps to
+kernel ids, so serving workloads replay through the backend-pluggable
+``repro.uvm.replay_core`` on every registered backend (the ``serve-*``
+scenario family in ``repro.uvm.scenarios``).
 """
 from __future__ import annotations
 
@@ -49,24 +56,34 @@ class PagedKVStore:
         self.prefetched: Dict[Tuple[int, int], bool] = {}
         self.prefetch_used = 0
         self.prefetch_issued = 0
+        self.prefetch_bypassed = 0
         self.host_bytes = 0.0
         self.evictions = 0
         self.access_log: List[Tuple[int, int]] = []
 
     # ------------------------------------------------------------------
+    @property
+    def blocks_per_seq(self) -> int:
+        """Blocks of KV history one request at ``max_len`` spans — the
+        capacity-accounting bound every decode position must respect."""
+        return (self.max_len - 1) // BLOCK_TOKENS + 1
+
     def _touch(self, key: Tuple[int, int]) -> None:
         self.resident.move_to_end(key)
 
-    def _insert(self, key: Tuple[int, int], arrival: float) -> None:
+    def _insert(self, key: Tuple[int, int], arrival: float) -> bool:
+        """Insert a block; returns False when the pin policy's insertion
+        bypass rejects it (served from host, never transferred)."""
         if (self.evict == "pin" and key not in self.resident
                 and len(self.resident) >= self.hbm_capacity_blocks):
-            return  # insertion bypass: serve from host, don't thrash HBM
+            return False  # insertion bypass: serve from host, don't thrash
         self.resident[key] = arrival
         self.resident.move_to_end(key)
         while len(self.resident) > self.hbm_capacity_blocks:
             victim, _ = self.resident.popitem(last=False)
             self.prefetched.pop(victim, None)
             self.evictions += 1
+        return True
 
     def _dma(self, n_blocks: int) -> float:
         start = max(self.clock_us + DMA_LATENCY_US, self.link_free_us)
@@ -78,7 +95,14 @@ class PagedKVStore:
     # ------------------------------------------------------------------
     def on_decode_step(self, pos: int, step_us: float = 10.0) -> None:
         """Account one decode step at sequence position ``pos``: every block
-        of every request's history is accessed."""
+        of every request's history is accessed.  ``pos`` is the *cache*
+        position (prefix-inflated for VLM archs) — it must stay inside the
+        ``max_len`` the store's capacity accounting was sized with."""
+        if not 0 <= pos < self.max_len:
+            raise ValueError(
+                f"decode position {pos} outside max_len={self.max_len}: "
+                "the KV-cache index and the store's capacity accounting "
+                "disagree (VLM prefix dropped?)")
         self.clock_us += step_us
         n_blocks = pos // BLOCK_TOKENS + 1
         for r in range(self.n_requests):
@@ -101,12 +125,33 @@ class PagedKVStore:
                     self._insert(key, arrival)
 
     def prefetch(self, keys: List[Tuple[int, int]]) -> None:
-        todo = [k for k in keys if k not in self.resident]
+        """Batch-DMA non-resident blocks ahead of demand.
+
+        Only blocks *actually inserted* are charged to ``host_bytes`` /
+        ``prefetch_issued`` and flagged in ``prefetched``: duplicates in
+        one request are collapsed (one block, one transfer), and under the
+        ``pin`` policy the batch is trimmed to the remaining HBM room
+        up front — blocks the insertion bypass would reject are never
+        transferred, so they must not inflate interconnect traffic or the
+        prefetch-accuracy denominator (they are counted in
+        ``prefetch_bypassed`` instead).
+        """
+        todo: List[Tuple[int, int]] = []
+        seen = set()
+        for k in keys:
+            if k not in self.resident and k not in seen:
+                todo.append(k)
+                seen.add(k)
+        if self.evict == "pin":
+            room = max(self.hbm_capacity_blocks - len(self.resident), 0)
+            self.prefetch_bypassed += max(len(todo) - room, 0)
+            todo = todo[:room]
         if not todo:
             return
         arrival = self._dma(len(todo))
         for k in todo:
-            self._insert(k, arrival)
+            inserted = self._insert(k, arrival)
+            assert inserted, "prefetch batch was trimmed to the HBM room"
             self.prefetched[k] = True
         self.prefetch_issued += len(todo)
 
@@ -119,4 +164,5 @@ class PagedKVStore:
                                   / max(self.prefetch_issued, 1)),
             "host_bytes": self.host_bytes,
             "evictions": float(self.evictions),
+            "prefetch_bypassed": float(self.prefetch_bypassed),
         }

@@ -789,6 +789,8 @@ class PallasReplayBackend(ReplayBackend):
             return False          # unknown policy: legacy raises clearly
         if request.record_timeline:
             return False          # per-transfer timelines stay host-side
+        if request.step_bounds is not None:
+            return False          # per-step clock capture stays host-side
         n = len(request.trace.pages)
         if n == 0 or n > _FAMILY_MAX_ACCESSES[kind]:
             return False          # int32 stamp/counter headroom (above)

@@ -59,6 +59,12 @@ class UVMConfig:
     def cycles_per_us(self) -> float:
         return self.core_mhz  # 1481 MHz -> 1481 cycles / us
 
+    def us_from_cycles(self, cycles):
+        """GPU core cycles -> microseconds (scalar or ndarray) — the
+        conversion behind the serving SLO latency columns
+        (``repro.offload.serve_trace.serve_latency_columns``)."""
+        return cycles / self.cycles_per_us
+
     @property
     def far_fault_cycles(self) -> float:
         return self.far_fault_us * self.cycles_per_us

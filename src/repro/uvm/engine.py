@@ -56,7 +56,8 @@ class VectorizedUVMSimulator:
 def simulate(trace: Trace, prefetcher: Prefetcher,
              config: UVMConfig | None = None, *, engine: str = "auto",
              backend: str = "auto",
-             record_timeline: bool = False) -> UVMStats:
+             record_timeline: bool = False,
+             step_bounds=None) -> UVMStats:
     """Run one (trace, prefetcher) cell on the chosen engine/backend.
 
     ``engine`` picks the replay style: ``auto``/``vectorized`` use the
@@ -65,12 +66,17 @@ def simulate(trace: Trace, prefetcher: Prefetcher,
     (``numpy``, ``pallas``, or ``auto``) with automatic per-cell fallback
     down the chain — the returned ``UVMStats.backend`` names the one that
     actually ran, so silent fallbacks are visible to callers.
+    ``step_bounds`` requests per-window completion clocks
+    (``UVMStats.step_clocks``; see ``ReplayRequest.step_bounds``) — the
+    pallas lanes decline such requests, so the chain lands on a host-side
+    backend that records them.
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
     request = ReplayRequest(trace=trace, prefetcher=prefetcher,
                             config=config or UVMConfig(),
-                            record_timeline=record_timeline)
+                            record_timeline=record_timeline,
+                            step_bounds=step_bounds)
     if engine == "legacy":
         return dispatch(request, backend="legacy")
     return dispatch(request, backend=backend)

@@ -1,7 +1,7 @@
-"""Evaluation metrics (paper §7.6)."""
+"""Evaluation metrics (paper §7.6) + serving SLO percentiles."""
 from __future__ import annotations
 
-from typing import Iterable
+from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -14,6 +14,18 @@ def unity(accuracy: float, coverage: float, hit_rate: float) -> float:
 def geomean(xs: Iterable[float]) -> float:
     xs = np.asarray(list(xs), dtype=np.float64)
     return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-12)))))
+
+
+def slo_percentiles(samples: Sequence[float], prefix: str,
+                    qs: Tuple[int, ...] = (50, 95, 99)
+                    ) -> Dict[str, Optional[float]]:
+    """Latency samples -> SLO percentile columns
+    (``{"<prefix>_p50_us": ..., "<prefix>_p95_us": ..., ...}``); an empty
+    sample set yields None values so result rows stay schema-stable."""
+    arr = np.asarray(samples, dtype=np.float64)
+    return {f"{prefix}_p{q}_us":
+            (float(np.percentile(arr, q)) if arr.size else None)
+            for q in qs}
 
 
 def pcie_gbs_timeline(timeline: np.ndarray, core_mhz: float,

@@ -94,6 +94,13 @@ class ReplayRequest:
     record_timeline: bool = False
     strict_checks: bool = False
     max_span_pages: int = MAX_SPAN_PAGES
+    #: optional non-decreasing exclusive end indices into the access
+    #: stream: the replay records the clock after the last access of each
+    #: window in ``UVMStats.step_clocks`` (serving traces use decode-step
+    #: boundaries here — see ``repro.offload.serve_trace``).  Host-side
+    #: backends (legacy/numpy) honor it bit-identically; the pallas lanes
+    #: decline such requests in ``can_replay``.
+    step_bounds: Optional[np.ndarray] = None
 
 
 class ReplayBackend:
@@ -648,6 +655,23 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
     record = request.record_timeline
     strict = request.strict_checks
 
+    # step-window clock capture (ReplayRequest.step_bounds): windows are
+    # marked as the replay crosses their exclusive end index — in the
+    # scalar event step and in the vector-hit path, where the chunk's
+    # exact cumsum clocks are available per access
+    if request.step_bounds is not None:
+        sb = np.asarray(request.step_bounds, dtype=np.int64)
+        if sb.size and (np.any(np.diff(sb) < 0) or sb[-1] > n):
+            raise ValueError("step_bounds must be non-decreasing end "
+                             "indices <= n_accesses")
+        step_clocks = np.zeros(sb.size, dtype=np.float64)
+    else:
+        sb = None
+        step_clocks = None
+    sp = 0
+    while sb is not None and sp < sb.size and sb[sp] == 0:
+        sp += 1                      # leading empty windows end at clock 0.0
+
     view = _ResidencyView(arrival, lo)
     adapter = _make_adapter(prefetcher, arrival, lo, view, cpa)
 
@@ -783,7 +807,7 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
 
     def _step(i: int) -> None:
         nonlocal clock, hits, late, faults, prefetch_used
-        nonlocal pcie_free, pages_migrated, pcie_bytes
+        nonlocal pcie_free, pages_migrated, pcie_bytes, sp
         prev = clock
         clock += cpa
         p = int(pages[i])
@@ -824,6 +848,12 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
             _evict_loop()
         if strict:
             assert clock >= prev, "clock moved backwards"
+        if sb is not None:
+            # the step for access i completes windows ending at i+1
+            # (duplicate bounds = empty windows repeating this clock)
+            while sp < sb.size and sb[sp] <= i + 1:
+                step_clocks[sp] = clock
+                sp += 1
 
     # --- chunked main loop -------------------------------------------
     i = 0
@@ -879,6 +909,13 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
                     np.add.at(freq, hseg, 1)
             counter += h
             clock = float(clocks[h - 1])
+            if sb is not None:
+                # windows ending inside the pure-hit run close at the
+                # exact cumsum clock of their last access — the same
+                # fp value the legacy += chain produces there
+                while sp < sb.size and sb[sp] <= i + h:
+                    step_clocks[sp] = float(clocks[sb[sp] - 1 - i])
+                    sp += 1
             i += h
             dense = 0
         if event < k and i < n:
@@ -911,10 +948,12 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
         zero_copy_bytes=0.0,
         timeline=np.asarray(timeline) if record else None,
         eviction=cfg.eviction,
+        step_clocks=step_clocks,
     )
 
 
 def run_legacy(request: ReplayRequest) -> UVMStats:
     """Replay one request on the reference per-access loop."""
     return UVMSimulator(request.config, request.record_timeline).run(
-        request.trace, request.prefetcher)
+        request.trace, request.prefetcher,
+        step_bounds=request.step_bounds)

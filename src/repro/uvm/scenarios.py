@@ -20,6 +20,12 @@ Built-ins:
   policies × (none, tree), at scale 0.25 (< 100k total accesses): the CI
   smoke that replays the whole matrix through the pallas lanes in
   interpret mode (``scripts/ci_check.sh``).
+* ``serve-full`` / ``serve-smoke`` — the serving-traffic family:
+  PagedKVStore fault streams (continuous-batching decode, multi-tenant
+  mixes, bursty open-loop arrivals at several request rates; see
+  ``repro.offload.serve_trace``) replayed as first-class traces, with
+  p50/p95/p99 decode-latency and TTFT columns on every row.  Serve
+  scenarios pin ``window=None`` — validation enforces it.
 
 Usage::
 
@@ -75,12 +81,28 @@ class Scenario:
     # ------------------------------------------------------------------
     def validate(self) -> "Scenario":
         """Check every axis against the live registries; returns self."""
+        from repro.offload.serve_trace import is_serve_bench
         from repro.traces.generators import BENCHMARKS
 
         if not self.name or "/" in self.name:
             raise ValueError(f"bad scenario name {self.name!r}")
+        if not self.benches:
+            raise ValueError(f"scenario {self.name!r}: empty benches")
+        bad = [b for b in self.benches
+               if b not in BENCHMARKS and not is_serve_bench(b)]
+        if bad:
+            raise ValueError(
+                f"scenario {self.name!r}: unknown benches {bad}; choose "
+                f"from {sorted(BENCHMARKS)} or serve workloads (see "
+                "repro.offload.serve_trace.SERVE_WORKLOADS, rate variants "
+                "like 'ServeBursty@r128' accepted)")
+        serve = [b for b in self.benches if is_serve_bench(b)]
+        if serve and self.window is not None:
+            raise ValueError(
+                f"scenario {self.name!r}: serve benches {serve} must use "
+                "window=None (a window split would desynchronize the "
+                "decode-step bounds the latency columns derive from)")
         for field, values, vocab in (
-                ("benches", self.benches, set(BENCHMARKS)),
                 ("evictions", self.evictions, set(EVICTION_POLICIES)),
                 ("prefetchers", self.prefetchers, set(PREFETCHERS))):
             if not values:
@@ -186,6 +208,39 @@ register_scenario(Scenario(
         "eviction policies x all five prefetcher families"),
     benches=PAPER_BENCHMARKS,
     ratios=DEFAULT_RATIOS,
+))
+
+#: the serving scenario family: PagedKVStore-derived fault streams
+#: (repro.offload.serve_trace) replayed as first-class traces — serve
+#: scenarios always use window=None so decode-step bounds stay aligned
+SERVE_BENCHES = ("ServeDecode", "ServeTenantMix", "ServeBursty")
+
+register_scenario(Scenario(
+    name="serve-full",
+    description=(
+        "Serving-traffic matrix: continuous-batching decode, multi-tenant "
+        "mix, and bursty open-loop arrivals (three request rates) x "
+        "capacity ratios x all eviction policies x all five prefetcher "
+        "families; rows carry p50/p95/p99 decode latency and TTFT"),
+    benches=SERVE_BENCHES + ("ServeBursty@r32", "ServeBursty@r256"),
+    ratios=DEFAULT_RATIOS,
+    window=None,
+))
+
+register_scenario(Scenario(
+    name="serve-smoke",
+    description=(
+        "CI smoke for the serving family: 2 serve workloads x 2 "
+        "oversubscribed ratios x all eviction policies x the demand-family "
+        "prefetchers (none, block) at scale 0.25 — small enough that the "
+        "pallas interpret-mode lanes replay every cell, and every row must "
+        "record its backend, policy, and latency percentiles "
+        "(scripts/ci_check.sh)"),
+    benches=("ServeDecode", "ServeBursty"),
+    ratios=(0.75, 0.5),
+    prefetchers=("none", "block"),
+    scale=0.25,
+    window=None,
 ))
 
 register_scenario(Scenario(

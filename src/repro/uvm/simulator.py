@@ -60,6 +60,12 @@ class UVMStats:
     #: eviction policy the replay ran under (``UVMConfig.eviction``);
     #: surfaced in sweep result rows alongside ``backend``.
     eviction: str = "lru"
+    #: replay clock after the last access of each requested step window
+    #: (``ReplayRequest.step_bounds`` / ``UVMSimulator.run(step_bounds=)``);
+    #: None unless bounds were requested.  Serving traces use this for
+    #: per-decode-step latency and TTFT percentiles
+    #: (``repro.offload.serve_trace``).
+    step_clocks: Optional[np.ndarray] = None
 
     @property
     def ipc(self) -> float:
@@ -95,7 +101,14 @@ class UVMSimulator:
         self.config = config or UVMConfig()
         self.record_timeline = record_timeline
 
-    def run(self, trace: Trace, prefetcher: Prefetcher) -> UVMStats:
+    def run(self, trace: Trace, prefetcher: Prefetcher,
+            step_bounds: Optional[np.ndarray] = None) -> UVMStats:
+        """Replay one trace.  ``step_bounds`` (optional, non-decreasing
+        exclusive end indices into the access stream) requests the replay
+        clock after the last access of each window — recorded in
+        ``UVMStats.step_clocks``.  A bound of 0 (an empty leading window)
+        completes at clock 0.0; an empty middle window repeats the
+        previous window's clock."""
         cfg = self.config
         # policy name validated even when memory is never oversubscribed,
         # so a typo fails fast instead of silently simulating uncapped
@@ -130,6 +143,19 @@ class UVMSimulator:
         page_tx = cfg.page_transfer_cycles
         cap = cfg.device_pages
         track = cap is not None      # policy callbacks only matter capped
+
+        if step_bounds is not None:
+            sb = np.asarray(step_bounds, dtype=np.int64)
+            if sb.size and (np.any(np.diff(sb) < 0) or sb[-1] > n):
+                raise ValueError("step_bounds must be non-decreasing "
+                                 "end indices <= n_accesses")
+            step_clocks = np.zeros(sb.size, dtype=np.float64)
+        else:
+            sb = None
+            step_clocks = None
+        sp = 0
+        while sb is not None and sp < sb.size and sb[sp] == 0:
+            sp += 1                  # leading empty windows end at clock 0.0
 
         def schedule_prefetch(extras, batch: bool) -> None:
             nonlocal pcie_free, pages_migrated, pcie_bytes, prefetch_issued
@@ -239,6 +265,13 @@ class UVMSimulator:
                         pcie_bytes += cfg.page_size
                         pcie_free += page_tx
 
+            # step-window clocks: the iteration for access i completes
+            # windows whose exclusive end is i+1 (duplicates = empty windows)
+            if sb is not None:
+                while sp < sb.size and sb[sp] <= i + 1:
+                    step_clocks[sp] = clock
+                    sp += 1
+
         # drain: all outstanding stalls resolve
         while outstanding:
             clock = max(clock, heapq.heappop(outstanding))
@@ -260,4 +293,5 @@ class UVMSimulator:
             zero_copy_bytes=zero_copy_bytes,
             timeline=np.asarray(timeline) if self.record_timeline else None,
             eviction=cfg.eviction,
+            step_clocks=step_clocks,
         )

@@ -115,9 +115,17 @@ BACKENDS = ("auto", "numpy", "pallas")
 #: bump on any intentional change to the timing model, trace generators,
 #: prediction pipeline, or row schema — invalidates persisted sweep cells
 #: and cached traces so a resumed sweep never mixes pre- and post-change
-#: numbers (v4: scenario matrix + pluggable eviction policies — cells
-#: carry ``eviction``/``scenario`` axes and rows record both)
-SWEEP_VERSION = 4
+#: numbers (v5: serving-traffic trace source — serve benches route
+#: through ``repro.offload.serve_trace`` and rows carry decode-latency /
+#: TTFT percentile columns)
+SWEEP_VERSION = 5
+
+#: serving SLO columns (``repro.offload.serve_trace``): per-decode-step
+#: latency and time-to-first-token percentiles, None on non-serve rows
+SERVE_LATENCY_FIELDS = (
+    "decode_lat_p50_us", "decode_lat_p95_us", "decode_lat_p99_us",
+    "ttft_p50_us", "ttft_p95_us", "ttft_p99_us",
+)
 
 #: columns of the structured results, in CSV order (``engine`` is the
 #: requested replay style, ``backend`` the implementation that actually
@@ -130,7 +138,7 @@ ROW_FIELDS = [
     "backend", "n_accesses", "n_instructions",
     "cycles", "ipc", "hits", "late", "faults", "hit_rate", "prefetch_issued",
     "prefetch_used", "accuracy", "coverage", "unity", "pages_migrated",
-    "pages_evicted", "pcie_bytes", "seconds",
+    "pages_evicted", "pcie_bytes", *SERVE_LATENCY_FIELDS, "seconds",
 ]
 
 
@@ -209,7 +217,14 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
                window: Optional[float] = 0.6,
                cache_dir: Optional[str] = None) -> Trace:
     """Generate (or load from the npz disk cache) one benchmark trace and
-    cut the leading evaluation window."""
+    cut the leading evaluation window.
+
+    Serve bench names (``repro.offload.serve_trace.SERVE_WORKLOADS``,
+    including ``@r<rate>`` variants) route through the serving load
+    generator instead of the GPU model; serve traces are never
+    window-split (the split would desynchronize the decode-step bounds
+    their latency columns derive from).
+    """
     trace = None
     path = None
     if cache_dir:
@@ -226,10 +241,15 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
                     meta=meta.get("meta", {}),
                 )
     if trace is None:
-        from repro.traces import GPUModel, generate_benchmark
-        from repro.traces.gpu_model import GPUModelConfig
-        spec = generate_benchmark(bench, scale=scale, seed=seed)
-        trace = GPUModel(GPUModelConfig(seed=seed)).run(spec)
+        from repro.offload.serve_trace import build_serve_trace, \
+            is_serve_bench
+        if is_serve_bench(bench):
+            trace = build_serve_trace(bench, scale=scale, seed=seed)
+        else:
+            from repro.traces import GPUModel, generate_benchmark
+            from repro.traces.gpu_model import GPUModelConfig
+            spec = generate_benchmark(bench, scale=scale, seed=seed)
+            trace = GPUModel(GPUModelConfig(seed=seed)).run(spec)
         if path:
             os.makedirs(cache_dir, exist_ok=True)
             meta = json.dumps({
@@ -242,7 +262,7 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
             tmp = path + f".{os.getpid()}.tmp.npz"
             np.savez(tmp, accesses=trace.accesses, meta=np.array(meta))
             os.replace(tmp, path)
-    if window is not None:
+    if window is not None and not (trace.meta and "serve" in trace.meta):
         trace, _ = trace.split(window)
     return trace
 
@@ -324,9 +344,52 @@ def _finish_row(cell: SweepCell, stats: UVMStats,
         pcie_bytes=stats.pcie_bytes,
         seconds=seconds,
     )
+    for f in SERVE_LATENCY_FIELDS:
+        row.setdefault(f, None)      # filled on serve rows, None otherwise
     if record_timeline and stats.timeline is not None:
         row["timeline"] = stats.timeline.tolist()
     return row
+
+
+def _serve_step_bounds(trace: Trace) -> Optional[np.ndarray]:
+    """Decode-step bounds of a serve trace, None for benchmark traces."""
+    if trace.meta and "serve" in trace.meta:
+        from repro.offload.serve_trace import trace_step_bounds
+        return trace_step_bounds(trace)
+    return None
+
+
+def _serve_latency_row(cell: SweepCell, trace: Trace, config: UVMConfig,
+                       stats: UVMStats,
+                       cache_dir: Optional[str]) -> Dict:
+    """The serving SLO columns for one serve-trace row.
+
+    When the replay already recorded ``step_clocks`` (host-side backends
+    honoring ``step_bounds``), they are used directly.  Lane-batched rows
+    (pallas) have none — the step clocks are derived by a NumPy side pass
+    with a fresh prefetcher, whose integer counters must match the lane
+    row exactly: the side pass doubles as a built-in per-row differential
+    check on the experimental backend.
+    """
+    from repro.offload.serve_trace import (serve_latency_columns,
+                                           trace_step_bounds)
+
+    bounds = trace_step_bounds(trace)
+    clocks = stats.step_clocks
+    if clocks is None or len(clocks) != len(bounds):
+        pf = make_prefetcher(cell, trace, config, cache_dir=cache_dir)
+        req = ReplayRequest(trace, pf, config, step_bounds=bounds)
+        check = get_backend("numpy").replay([req])[0]
+        for f in ("hits", "late", "faults", "prefetch_issued",
+                  "prefetch_used", "pages_migrated", "pages_evicted"):
+            if getattr(check, f) != getattr(stats, f):
+                raise AssertionError(
+                    f"serve step-clock side pass disagrees with the "
+                    f"{stats.backend} row on {f}: {getattr(check, f)} != "
+                    f"{getattr(stats, f)} "
+                    f"({cell.bench}/{cell.prefetcher}/{cell.eviction})")
+        clocks = check.step_clocks
+    return serve_latency_columns(trace, clocks, config)
 
 
 def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
@@ -339,10 +402,19 @@ def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
     t0 = time.time()
     trace, config, prefetcher, device_pages = prepare_cell(
         cell, cache_dir=cache_dir, trace=trace, prefetcher=prefetcher)
+    # serve traces carry decode-step bounds into the replay so the row
+    # gets per-step clocks in one pass (the pallas lanes decline bounds
+    # requests, so the chain lands on a host-side backend here)
+    step_bounds = _serve_step_bounds(trace)
     stats = simulate(trace, prefetcher, config, engine=cell.engine,
-                     backend=cell.backend, record_timeline=record_timeline)
-    return _finish_row(cell, stats, device_pages, time.time() - t0,
-                       record_timeline)
+                     backend=cell.backend, record_timeline=record_timeline,
+                     step_bounds=step_bounds)
+    row = _finish_row(cell, stats, device_pages, time.time() - t0,
+                      record_timeline)
+    if step_bounds is not None:
+        row.update(_serve_latency_row(cell, trace, config, stats,
+                                      cache_dir))
+    return row
 
 
 def _worker(args) -> Dict:
@@ -445,8 +517,14 @@ def _run_lane_batches(cells: Sequence[SweepCell],
                           RuntimeWarning)
             stats = [replay_dispatch(r, "numpy") for r in requests]
         per_cell = (time.time() - t0) / len(batch)
-        for i, st, cap in zip(batch, stats, caps):
-            rows[i] = _finish_row(cells[i], st, cap, per_cell)
+        for i, st, cap, req in zip(batch, stats, caps, requests):
+            row = _finish_row(cells[i], st, cap, per_cell)
+            if req.trace.meta and "serve" in req.trace.meta:
+                # lane rows have no step clocks — the NumPy side pass in
+                # _serve_latency_row fills them and cross-checks counters
+                row.update(_serve_latency_row(cells[i], req.trace,
+                                              req.config, st, cache_dir))
+            rows[i] = row
         batch.clear()
         requests.clear()
         caps.clear()
@@ -662,10 +740,14 @@ def main(argv: Optional[List[str]] = None) -> None:
         if bad:
             ap.error(f"unknown prefetcher(s) {','.join(bad)}; "
                      f"choose from {','.join(PREFETCHERS)}")
-        bad = [b for b in benches if b not in BENCHMARKS]
+        from repro.offload.serve_trace import SERVE_WORKLOADS, is_serve_bench
+        bad = [b for b in benches
+               if b not in BENCHMARKS and not is_serve_bench(b)]
         if bad:
             ap.error(f"unknown benchmark(s) {','.join(bad)}; "
-                     f"choose from {','.join(sorted(BENCHMARKS))}")
+                     f"choose from {','.join(sorted(BENCHMARKS))} or serve "
+                     f"workloads {','.join(sorted(SERVE_WORKLOADS))} "
+                     "(rate variants like ServeBursty@r128 accepted)")
         evictions = args.evictions.split(",")
         bad = [e for e in evictions if e not in EVICTION_POLICIES]
         if bad:

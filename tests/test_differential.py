@@ -16,6 +16,8 @@ Coverage is deliberately skewed toward the paper's hard regimes:
 * learned cells whose predictions ride through the ``repro.uvm.predcache``
   atomic store (the ``learned-cached`` variant),
 * tight-MSHR fault storms and ragged tiny traces,
+* serving-traffic traces (``repro.offload.serve_trace``): the
+  PagedKVStore-derived trace source replays through the same guarantee,
 * every eviction policy (lru/random/hotcold): the policy is a first-class
   fuzz axis, so every (backend pair × policy) combination is covered by
   construction — a seeded deterministic sweep exercises all policies even
@@ -76,10 +78,9 @@ def _assert_pairwise_equal(stats_by_backend, context):
                 f"{getattr(got, f)} != {getattr(ref, f)}")
 
 
-def _replay_everywhere(pages, pf_name, cap, mshr, eviction="lru"):
-    """Replay one cell through every accepting backend; returns
-    {backend_name: stats}."""
-    trace = _mk_trace(pages)
+def _replay_trace_everywhere(trace, pf_name, cap, mshr, eviction="lru"):
+    """Replay one (trace, config, prefetcher) cell through every accepting
+    backend; returns {backend_name: stats}."""
     config = UVMConfig(device_pages=cap, mshr_entries=mshr,
                        eviction=eviction)
     stats_by_backend = {}
@@ -100,6 +101,11 @@ def _replay_everywhere(pages, pf_name, cap, mshr, eviction="lru"):
         f"({pf_name}, cap={cap}, eviction={eviction}) cell — the "
         "differential guarantee would pass vacuously")
     return stats_by_backend
+
+
+def _replay_everywhere(pages, pf_name, cap, mshr, eviction="lru"):
+    return _replay_trace_everywhere(_mk_trace(pages), pf_name, cap, mshr,
+                                    eviction)
 
 
 def _random_pages(rng):
@@ -164,6 +170,37 @@ def test_differential_seeded_cells(cell):
     _assert_pairwise_equal(stats,
                            f"[{name}: {pf_name} cap={cap} mshr={mshr} "
                            f"eviction={eviction} n={len(pages)}]")
+
+
+def _serve_cells():
+    """Serve-trace cells: the PagedKVStore-derived trace source replays
+    bit-equal across all backends too (the ISSUE 6 acceptance bar).  Caps
+    are chosen against the serve working set (~n_requests x
+    blocks_per_seq unique pages) so both free-running and thrashing
+    regimes are covered."""
+    cells = []
+    for bench, pf_name, cap, eviction in (
+            ("ServeDecode", "none", None, "lru"),
+            ("ServeDecode", "block", 120, "lru"),
+            ("ServeDecode", "tree", 120, "hotcold"),
+            ("ServeBursty", "none", 100, "random"),
+            ("ServeBursty", "learned", 120, "lru"),
+            ("ServeTenantMix", "block", 150, "lru")):
+        cells.append((f"{bench}-{pf_name}-{cap}-{eviction}",
+                      bench, pf_name, cap, eviction))
+    return cells
+
+
+@pytest.mark.parametrize("cell", _serve_cells(), ids=lambda c: c[0])
+def test_differential_serve_traces(cell):
+    """Serving-traffic traces (repro.offload.serve_trace) agree across
+    every registered backend pair, like the GPU-model benchmarks."""
+    from repro.offload.serve_trace import build_serve_trace
+
+    name, bench, pf_name, cap, eviction = cell
+    trace = build_serve_trace(bench, scale=0.2, seed=0)
+    stats = _replay_trace_everywhere(trace, pf_name, cap, 16, eviction)
+    _assert_pairwise_equal(stats, f"[serve {name} n={len(trace)}]")
 
 
 def test_differential_learned_cached_matches_plain():

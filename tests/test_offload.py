@@ -1,6 +1,9 @@
 """Paged KV offload store + learned prefetcher."""
+import numpy as np
+import pytest
+
 from repro.offload import OffloadPrefetcher, PagedKVStore
-from repro.offload.paged_store import BLOCK_TOKENS
+from repro.offload.paged_store import BLOCK_BYTES, BLOCK_TOKENS
 
 
 def _run(capacity, prefetch, gen=128, n_req=4, start=256, evict="lru"):
@@ -40,3 +43,98 @@ def test_stats_sane():
     assert 0 <= st["hit_rate"] <= 1
     assert 0 <= st["prefetch_accuracy"] <= 1
     assert st["host_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# prefetch accounting (regressions for the pin-policy bypass leak)
+# ---------------------------------------------------------------------------
+
+def test_pin_prefetch_bypass_accounting():
+    """Under pin at capacity, bypassed prefetch blocks must not be DMA'd,
+    charged to host_bytes / prefetch_issued, or flagged as prefetched
+    (the old code transferred and flagged blocks _insert then rejected,
+    deflating prefetch accuracy and inflating interconnect traffic)."""
+    store = PagedKVStore(n_requests=1, max_len=2048,
+                         hbm_capacity_blocks=4, evict="pin")
+    store.prefetch([(0, b) for b in range(4)])        # fill to capacity
+    assert len(store.resident) == 4
+    bytes_full = store.host_bytes
+    issued_full = store.prefetch_issued
+
+    store.prefetch([(0, b) for b in range(4, 10)])    # no room: all bypass
+    assert store.host_bytes == bytes_full
+    assert store.prefetch_issued == issued_full
+    assert store.prefetch_bypassed == 6
+    # no phantom prefetched flags for blocks that never became resident
+    assert set(store.prefetched) <= set(store.resident)
+    assert store.stats()["prefetch_bypassed"] == 6.0
+
+
+def test_pin_prefetch_partial_room():
+    """A batch larger than the remaining HBM room is trimmed, not
+    rejected wholesale: the first `room` blocks insert and are charged."""
+    store = PagedKVStore(n_requests=1, max_len=2048,
+                         hbm_capacity_blocks=4, evict="pin")
+    store.prefetch([(0, 0), (0, 1)])
+    store.prefetch([(0, b) for b in range(2, 7)])     # room for 2 of 5
+    assert len(store.resident) == 4
+    assert store.prefetch_issued == 4
+    assert store.prefetch_bypassed == 3
+    assert store.host_bytes == 4 * BLOCK_BYTES
+    assert set(store.prefetched) == {(0, 0), (0, 1), (0, 2), (0, 3)}
+
+
+def test_prefetch_duplicates_collapse_to_one_dma():
+    """Duplicate keys in one prefetch batch transfer (and count) once."""
+    store = PagedKVStore(n_requests=1, max_len=2048,
+                         hbm_capacity_blocks=8)
+    store.prefetch([(0, 0), (0, 0), (0, 1), (0, 0), (0, 1)])
+    assert store.prefetch_issued == 2
+    assert store.host_bytes == 2 * BLOCK_BYTES
+    assert len(store.resident) == 2
+
+
+def test_inflight_miss_does_not_re_dma():
+    """A block whose DMA is still in flight stalls (counts a miss) but is
+    never transferred again."""
+    store = PagedKVStore(n_requests=2, max_len=2048,
+                         hbm_capacity_blocks=8)
+    store.on_decode_step(0, step_us=1.0)     # 2 blocks DMA'd, arrive ~+5us
+    assert store.host_bytes == 2 * BLOCK_BYTES
+    store.on_decode_step(0, step_us=1.0)     # still in flight at +2us
+    assert store.misses == 4
+    assert store.host_bytes == 2 * BLOCK_BYTES   # no re-DMA
+    store.on_decode_step(0, step_us=10.0)    # arrived by +12us: hits now
+    assert store.hits == 2
+    assert store.host_bytes == 2 * BLOCK_BYTES
+
+
+def test_decode_position_guard():
+    """Positions outside max_len mean the KV-cache index and the capacity
+    accounting disagree (the VLM prefix bug) — the store must refuse."""
+    store = PagedKVStore(n_requests=1, max_len=128, hbm_capacity_blocks=8)
+    with pytest.raises(ValueError, match="outside max_len"):
+        store.on_decode_step(128)
+    with pytest.raises(ValueError, match="outside max_len"):
+        store.on_decode_step(-1)
+
+
+def test_access_log_round_trips_through_trace():
+    """The store's access log encodes to a replay-core trace and decodes
+    back byte-identically (the serve-trace block <-> page mapping is
+    lossless), with decode steps riding in the kernel column."""
+    from repro.offload.serve_trace import (access_log_to_trace,
+                                           trace_to_access_log)
+
+    store = PagedKVStore(n_requests=3, max_len=512, hbm_capacity_blocks=8)
+    step_ends = []
+    for step in range(6):
+        store.on_decode_step(200 + step)
+        step_ends.append(len(store.access_log))
+    trace = access_log_to_trace(
+        store.access_log, n_requests=3,
+        blocks_per_seq=store.blocks_per_seq, step_ends=step_ends)
+    assert trace_to_access_log(trace) == store.access_log
+    kern = trace.accesses["kernel"]
+    assert np.all(np.diff(kern.astype(np.int64)) >= 0)
+    assert int(kern.max()) == len(step_ends) - 1

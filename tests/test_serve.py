@@ -1,0 +1,235 @@
+"""Serving-traffic trace source + replay-core step-clock support.
+
+Covers the serve-* scenario family end to end: load-generator
+determinism, the block <-> page / step <-> kernel encoding invariants,
+``step_bounds`` replay support (legacy and numpy must agree bitwise on
+``step_clocks``; pallas declines), the SLO latency columns, scenario
+registration, and sweep-row integration.
+"""
+import numpy as np
+import pytest
+
+from repro.offload.serve_trace import (SERVE_WORKLOADS, build_serve_trace,
+                                       drive_workload, episode_to_trace,
+                                       get_serve_workload, is_serve_bench,
+                                       is_serve_trace, load_trace_npz,
+                                       save_trace_npz,
+                                       serve_latency_columns,
+                                       trace_step_bounds,
+                                       trace_to_access_log)
+from repro.uvm import UVMConfig
+from repro.uvm.golden import make_prefetcher
+from repro.uvm.replay_core import ReplayRequest, get_backend
+
+LAT_FIELDS = ("decode_lat_p50_us", "decode_lat_p95_us", "decode_lat_p99_us",
+              "ttft_p50_us", "ttft_p95_us", "ttft_p99_us")
+
+ALL_BENCHES = tuple(SERVE_WORKLOADS) + ("ServeBursty@r128",)
+
+
+def _replay(trace, backend_name, pf_name="none", cap=None, eviction="lru",
+            with_bounds=True):
+    config = UVMConfig(device_pages=cap, eviction=eviction)
+    request = ReplayRequest(
+        trace, make_prefetcher(pf_name, trace, config), config,
+        step_bounds=trace_step_bounds(trace) if with_bounds else None)
+    backend = get_backend(backend_name)
+    assert backend.can_replay(request)
+    return backend.replay([request])[0]
+
+
+# ---------------------------------------------------------------------------
+# load generator + encoding
+# ---------------------------------------------------------------------------
+
+def test_bench_name_resolution():
+    assert is_serve_bench("ServeDecode")
+    assert is_serve_bench("ServeBursty@r128")
+    assert not is_serve_bench("ATAX")
+    assert not is_serve_bench("ServeBursty@x9")
+    wl = get_serve_workload("ServeBursty@r128")
+    assert wl.arrival == "open" and wl.rate_rps == 128.0
+    with pytest.raises(KeyError):
+        get_serve_workload("ServeNope")
+
+
+@pytest.mark.parametrize("bench", ALL_BENCHES)
+def test_serve_trace_encoding_invariants(bench):
+    trace = build_serve_trace(bench, scale=0.25, seed=0)
+    assert is_serve_trace(trace)
+    sv = trace.meta["serve"]
+    kern = trace.accesses["kernel"].astype(np.int64)
+    assert np.all(np.diff(kern) >= 0), "access stream must be step-major"
+    bounds = trace_step_bounds(trace)
+    assert bounds.size == sv["n_steps"]
+    assert np.all(np.diff(bounds) >= 0)
+    assert int(bounds[-1]) == len(trace)
+    # every page decodes back into a (request, block) inside the regions
+    log = trace_to_access_log(trace)
+    req = np.asarray([r for r, _ in log])
+    blk = np.asarray([b for _, b in log])
+    assert req.min() >= 0 and req.max() < sv["n_requests"]
+    assert blk.min() >= 0 and blk.max() < sv["blocks_per_seq"]
+    # the 'array' feature is the request id (learned-prefetcher input)
+    assert np.array_equal(trace.accesses["array"].astype(np.int64), req)
+
+
+def test_serve_trace_deterministic():
+    a = build_serve_trace("ServeTenantMix", scale=0.25, seed=3)
+    b = build_serve_trace("ServeTenantMix", scale=0.25, seed=3)
+    assert a.accesses.tobytes() == b.accesses.tobytes()
+    assert a.meta == b.meta
+    c = build_serve_trace("ServeTenantMix", scale=0.25, seed=4)
+    assert a.accesses.tobytes() != c.accesses.tobytes()
+
+
+def test_episode_round_trips_to_access_log():
+    ep = drive_workload(SERVE_WORKLOADS["ServeDecode"], scale=0.1, seed=1)
+    trace = episode_to_trace(ep, seed=1)
+    log = trace_to_access_log(trace)
+    assert log == list(zip(ep.req.tolist(), ep.blk.tolist()))
+
+
+def test_bursty_arrivals_gate_first_decode():
+    ep = drive_workload(SERVE_WORKLOADS["ServeBursty"], scale=0.25, seed=0)
+    assert np.all(ep.first_steps >= ep.arrival_steps)
+    assert ep.arrival_steps.max() > 0          # open loop really spreads
+    # slots bound concurrency: no step sweeps more than `slots` requests
+    wl = SERVE_WORKLOADS["ServeBursty"]
+    for s in np.unique(ep.step):
+        assert np.unique(ep.req[ep.step == s]).size <= wl.slots
+
+
+def test_npz_round_trip(tmp_path):
+    trace = build_serve_trace("ServeDecode", scale=0.1, seed=0)
+    path = str(tmp_path / "serve.npz")
+    save_trace_npz(trace, path)
+    back = load_trace_npz(path)
+    assert back.accesses.tobytes() == trace.accesses.tobytes()
+    assert back.meta == trace.meta
+    assert back.array_bases == trace.array_bases
+    assert back.n_instructions == trace.n_instructions
+
+
+# ---------------------------------------------------------------------------
+# step_bounds replay support
+# ---------------------------------------------------------------------------
+
+def test_step_clocks_legacy_numpy_bitwise():
+    """The per-step completion clocks (the latency columns' input) must be
+    bit-identical between the legacy loop and the vectorized numpy
+    backend, with and without oversubscription."""
+    trace = build_serve_trace("ServeDecode", scale=0.25, seed=0)
+    for cap, pf in ((None, "none"), (120, "block")):
+        legacy = _replay(trace, "legacy", pf_name=pf, cap=cap)
+        vector = _replay(trace, "numpy", pf_name=pf, cap=cap)
+        assert legacy.step_clocks is not None
+        assert vector.step_clocks is not None
+        assert np.array_equal(legacy.step_clocks, vector.step_clocks)
+        assert legacy.hits == vector.hits
+        assert legacy.cycles == vector.cycles
+
+
+def test_step_clocks_shape_and_monotone():
+    trace = build_serve_trace("ServeBursty", scale=0.25, seed=0)
+    stats = _replay(trace, "numpy")
+    clocks = stats.step_clocks
+    assert clocks.size == trace.meta["serve"]["n_steps"]
+    assert np.all(np.diff(clocks) >= 0)
+    assert clocks[-1] == pytest.approx(stats.cycles)
+
+
+def test_pallas_declines_step_bounds():
+    """The pallas lanes have no step-clock output — they must decline
+    bounds requests (the sweep derives lane-row latency host-side)."""
+    trace = build_serve_trace("ServeDecode", scale=0.1, seed=0)
+    config = UVMConfig()
+    backend = get_backend("pallas")
+    with_bounds = ReplayRequest(trace, make_prefetcher("none", trace, config),
+                                config, step_bounds=trace_step_bounds(trace))
+    without = ReplayRequest(trace, make_prefetcher("none", trace, config),
+                            config)
+    assert not backend.can_replay(with_bounds)
+    assert backend.can_replay(without)
+
+
+def test_bad_step_bounds_rejected():
+    trace = build_serve_trace("ServeDecode", scale=0.1, seed=0)
+    config = UVMConfig()
+    for bad in (np.array([5, 3], dtype=np.int64),          # decreasing
+                np.array([len(trace) + 1], dtype=np.int64)):  # overrun
+        request = ReplayRequest(trace,
+                                make_prefetcher("none", trace, config),
+                                config, step_bounds=bad)
+        for name in ("legacy", "numpy"):
+            with pytest.raises(ValueError):
+                get_backend(name).replay([request])
+
+
+# ---------------------------------------------------------------------------
+# latency columns
+# ---------------------------------------------------------------------------
+
+def test_latency_columns_sane():
+    trace = build_serve_trace("ServeDecode", scale=0.25, seed=0)
+    config = UVMConfig(device_pages=120)
+    stats = _replay(trace, "numpy", pf_name="block", cap=120)
+    row = serve_latency_columns(trace, stats.step_clocks, config)
+    assert set(row) == set(LAT_FIELDS)
+    for f in LAT_FIELDS:
+        assert isinstance(row[f], float) and row[f] > 0.0
+    assert (row["decode_lat_p50_us"] <= row["decode_lat_p95_us"]
+            <= row["decode_lat_p99_us"])
+    assert row["ttft_p50_us"] <= row["ttft_p95_us"] <= row["ttft_p99_us"]
+    # TTFT spans at least one decode step of replay time
+    assert row["ttft_p50_us"] >= row["decode_lat_p50_us"]
+
+
+def test_latency_columns_reject_mismatched_clocks():
+    trace = build_serve_trace("ServeDecode", scale=0.1, seed=0)
+    with pytest.raises(ValueError, match="step_clocks"):
+        serve_latency_columns(trace, np.zeros(3), UVMConfig())
+
+
+# ---------------------------------------------------------------------------
+# scenarios + sweep integration
+# ---------------------------------------------------------------------------
+
+def test_serve_scenarios_registered():
+    from repro.uvm.scenarios import Scenario, get_scenario
+
+    smoke = get_scenario("serve-smoke")
+    cells = smoke.cells(backend="pallas")
+    assert len(cells) == 24
+    assert all(c.window is None for c in cells)
+    assert all(is_serve_bench(c.bench) for c in cells)
+    get_scenario("serve-full").validate()
+    # serve benches with a window split must fail validation
+    with pytest.raises(ValueError, match="window=None"):
+        Scenario(name="bad", description="", benches=("ServeDecode",),
+                 ratios=(0.5,), window=0.6).validate()
+
+
+def test_sweep_row_carries_latency_columns(tmp_path):
+    from repro.uvm.sweep import SweepCell, simulate_cell
+
+    cell = SweepCell(bench="ServeDecode", prefetcher="none", scale=0.25,
+                     window=None, device_frac=0.75, eviction="lru",
+                     backend="numpy")
+    row = simulate_cell(cell, cache_dir=str(tmp_path))
+    assert row["backend"] == "numpy"
+    for f in LAT_FIELDS:
+        assert isinstance(row[f], float) and row[f] > 0.0
+    # the npz trace cache round-trips the serve sidecar: second run hits it
+    row2 = simulate_cell(cell, cache_dir=str(tmp_path))
+    for f in LAT_FIELDS:
+        assert row2[f] == row[f]
+
+
+def test_non_serve_rows_keep_schema():
+    from repro.uvm.sweep import SweepCell, simulate_cell
+
+    row = simulate_cell(SweepCell(bench="ATAX", prefetcher="none",
+                                  scale=0.25, backend="numpy"))
+    for f in LAT_FIELDS:
+        assert f in row and row[f] is None
