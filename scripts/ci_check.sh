@@ -18,19 +18,21 @@ fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "[ci] tier-1: full test suite (golden/sweep/backends/predcache gated separately)"
+echo "[ci] tier-1: full test suite (golden/sweep/backends/predcache/faults gated separately)"
 python -m pytest -x -q --ignore=tests/test_uvm_golden.py \
     --ignore=tests/test_sweep.py --ignore=tests/test_predcache.py \
-    --ignore=tests/test_backends.py
+    --ignore=tests/test_backends.py --ignore=tests/test_faults.py
 
 echo "[ci] replay backends: golden suite against numpy AND pallas lanes"
 echo "[ci] (all five prefetcher families x all eviction policies),"
 echo "[ci] backend contract + lane-packing property suite, cross-backend"
 echo "[ci] differential fuzzer (policy axis included), sweep, scenarios,"
-echo "[ci] predcache (pallas runs in interpret mode, CPU platform pinned)"
+echo "[ci] predcache + fault plane (pallas runs in interpret mode,"
+echo "[ci] CPU platform pinned)"
 JAX_PLATFORMS=cpu python -m pytest -q tests/test_uvm_golden.py \
     tests/test_backends.py tests/test_differential.py \
-    tests/test_scenarios.py tests/test_sweep.py tests/test_predcache.py
+    tests/test_scenarios.py tests/test_sweep.py tests/test_predcache.py \
+    tests/test_faults.py
 
 echo "[ci] sim_throughput smoke: engines must stay counter-identical"
 # the 60k smoke is warmup-dominated, so the default wall-clock floors
@@ -97,5 +99,28 @@ for r in rows:
 print(f"[ci] serve smoke ok: {len(rows)} rows, policies {sorted(policies)}")
 PYEOF
 rm -rf "$SRV_OUT"
+
+echo "[ci] chaos-smoke: the chaos-smoke scenario fault-free and under the"
+echo "[ci] bounded kill+corrupt+raise plan (SIGKILLed drivers restarted,"
+echo "[ci] torn/corrupted artifacts quarantined + regenerated); the final"
+echo "[ci] grid must be byte-identical to the baseline with an empty"
+echo "[ci] quarantine manifest"
+CHAOS_OUT="$(mktemp -d "${TMPDIR:-/tmp}/ci_chaos_smoke.XXXXXX")"
+JAX_PLATFORMS=cpu python -m repro.uvm.faults --scenario chaos-smoke \
+    --backend pallas --out "$CHAOS_OUT" > "$CHAOS_OUT/report.json"
+python - "$CHAOS_OUT" <<'PYEOF'
+import json, sys
+report = json.loads(open(sys.argv[1] + "/report.json").read()
+                    .strip().splitlines()[-1])
+assert report["cells"] == 8, report
+assert report["faults_fired"] > 0, \
+    f"chaos smoke injected no faults - the check is vacuous: {report}"
+manifest = json.load(open(sys.argv[1] + "/chaos/quarantine.json"))
+assert manifest["cells"] == [], manifest
+print(f"[ci] chaos smoke ok: {report['cells']} cells byte-identical after "
+      f"{report['faults_fired']} faults, {report['restarts']} restarts, "
+      f"{report['retries']} retries")
+PYEOF
+rm -rf "$CHAOS_OUT"
 
 echo "[ci] OK"

@@ -4,11 +4,22 @@ What runs *in-band* in this repo:
 * atomic/async checkpointing + exact data-pipeline resume
   (repro.checkpoint) — restart-from-preemption works end to end;
 * elastic re-mesh on restore (checkpoints are mesh-agnostic);
-* gradient compression for the slow DCN pod axis (repro.optimizer).
+* gradient compression for the slow DCN pod axis (repro.optimizer);
+* **file leases** (below): expiring, atomically-acquired claim files the
+  UVM sweep's lease-based cell execution (``repro.uvm.sweep``) and the
+  prediction-cache training lock (``repro.uvm.predcache``) both build on.
+  A lease is advisory: correctness never depends on mutual exclusion
+  (cell results and prediction arrays are deterministic and written with
+  atomic rename, so a benign double-execution produces identical bytes) —
+  the lease exists so crashed or stalled owners are *reclaimed* instead
+  of wedging the grid.
 
 What is *planned* here (policy objects a cluster controller would drive —
 they are pure logic, unit-tested, and wired into launch.train's loop):
-* heartbeat-based failure detection with grace windows,
+* heartbeat-based failure detection with grace windows (the
+  :class:`HeartbeatMonitor` below also drives the sweep's lease-pool
+  parent loop: silent-but-alive workers are terminated so their leases
+  free up via the dead-pid check),
 * straggler mitigation by deadline: micro-batches of the slowest k hosts are
   re-dispatched to spares; persistent stragglers are excluded at the next
   elastic re-mesh point,
@@ -18,6 +29,9 @@ they are pure logic, unit-tested, and wired into launch.train's loop):
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import socket
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -53,6 +67,131 @@ class HeartbeatMonitor:
         median = times[len(times) // 2]
         return [h for h, t in self.step_times.items()
                 if t > self.straggler_factor * median]
+
+
+# ---------------------------------------------------------------------------
+# file leases: crash-reclaimable claim files
+# ---------------------------------------------------------------------------
+
+def pid_alive(pid: int) -> bool:
+    """True when ``pid`` names a live process on *this* host (signal-0
+    probe; EPERM counts as alive — the process exists, we just cannot
+    signal it)."""
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:  # pragma: no cover - unprivileged probe
+        return True
+    except OSError:  # pragma: no cover - exotic platforms
+        return True
+    return True
+
+
+def lease_doc(extra: Optional[Dict] = None) -> Dict:
+    """The owner record a lease file carries: pid + host for the liveness
+    check, a wall-clock timestamp for the TTL."""
+    doc = {"pid": os.getpid(), "host": socket.gethostname(),
+           "ts": time.time()}
+    if extra:
+        doc.update(extra)
+    return doc
+
+
+def read_lease(path: str) -> Optional[Dict]:
+    """Parse a lease/lock file's owner record.  Returns None when the file
+    is missing; a malformed or legacy (bare-pid) payload degrades to a
+    partial record so staleness checks still work."""
+    try:
+        with open(path) as f:
+            raw = f.read()
+    except OSError:
+        return None
+    try:
+        doc = json.loads(raw)
+        if isinstance(doc, dict):
+            return doc
+    except ValueError:
+        pass
+    try:                                     # legacy: bare pid, no ts
+        return {"pid": int(raw.strip()), "host": socket.gethostname(),
+                "ts": None}
+    except ValueError:
+        return {"pid": -1, "host": None, "ts": None}   # garbage: stale
+
+
+def lease_is_stale(doc: Optional[Dict], ttl_s: float,
+                   now: Optional[float] = None) -> bool:
+    """A lease is stale when its TTL expired, or when the owner is a dead
+    process on this host (SIGKILLed workers reclaim immediately instead
+    of waiting out the TTL).  Unreadable records are stale."""
+    if doc is None:
+        return True
+    ts = doc.get("ts")
+    if ts is None or not isinstance(ts, (int, float)):
+        return True
+    now = time.time() if now is None else now
+    if now - float(ts) > ttl_s:
+        return True
+    if doc.get("host") == socket.gethostname():
+        pid = doc.get("pid")
+        if not isinstance(pid, int) or not pid_alive(pid):
+            return True
+    return False
+
+
+def try_acquire_lease(path: str, ttl_s: float,
+                      extra: Optional[Dict] = None) -> bool:
+    """Atomically claim a lease file (``O_CREAT|O_EXCL``); a stale
+    holder's file is removed and the claim retried once.
+
+    The steal has a benign race: two claimants can both observe the stale
+    lease, both unlink, and one re-creates — in the worst interleaving a
+    *fresh* lease is unlinked and two owners run concurrently.  Lease
+    consumers must therefore be idempotent (deterministic work + atomic
+    result rename), which every user in this repo is; the lease bounds
+    duplicated work, it does not guarantee exclusion.
+    """
+    for _ in range(2):
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            if not lease_is_stale(read_lease(path), ttl_s):
+                return False
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            continue
+        except OSError:                       # dir vanished mid-claim
+            return False
+        with os.fdopen(fd, "w") as f:
+            json.dump(lease_doc(extra), f)
+        return True
+    return False
+
+
+def renew_lease(path: str, extra: Optional[Dict] = None) -> None:
+    """Refresh the TTL of a lease this process holds (atomic rewrite)."""
+    tmp = path + f".renew.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(lease_doc(extra), f)
+        os.replace(tmp, path)
+    except OSError:  # pragma: no cover - dir vanished
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+def release_lease(path: str) -> None:
+    try:
+        os.unlink(path)
+    except OSError:
+        pass
 
 
 def plan_backup_dispatch(stragglers: List[int], spares: List[int]

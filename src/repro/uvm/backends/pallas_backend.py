@@ -859,6 +859,12 @@ class PallasReplayBackend(ReplayBackend):
                     f"request not packable into pallas lanes "
                     f"({type(req.prefetcher).__name__}); route it through "
                     "the numpy backend")
+        # chaos injection site: a "raise" spec here surfaces as a
+        # TransientBackendFault, which the dispatch chain and the sweep
+        # scheduler re-raise (retry on this backend) instead of degrading
+        from repro.uvm import faults
+        faults.fire("backend.replay",
+                    f"{len(requests)}:{requests[0].trace.name}")
         out: List[UVMStats] = [None] * len(requests)  # type: ignore
         for batch in self.pack_lanes(requests):
             for i, stats in zip(batch,

@@ -15,14 +15,20 @@ This module gives those cells train-once semantics:
   bypass threshold, seed) and a cache-format version.  Two callers holding
   bit-identical traces and configs always agree on the key, no matter how
   the trace was produced (generator, npz cache, in-process fixture).
-* Values are plain ``.npy`` arrays written via **atomic write-rename**
-  (``os.replace`` of a same-directory tempfile), so concurrent ``--workers``
-  processes can never observe a torn file: they either see the complete
-  array or nothing.
-* A best-effort **training lock** (`O_CREAT|O_EXCL` lockfile) makes
-  concurrent misses on the same key wait for the first trainer's result
-  instead of training N times; if the lock holder dies, waiters time out
-  and train themselves (correctness never depends on the lock).
+* Values are single-file ``.npz`` archives carrying the predictions array
+  **plus its sha256** (over dtype+shape+bytes), written via **atomic
+  write-rename** (``os.replace`` of a same-directory tempfile), so
+  concurrent ``--workers`` processes can never observe a torn file, and
+  out-of-band corruption (truncation, bit flips) is *detected* on read:
+  a failing entry is quarantined to ``<entry>.corrupt`` with a warning
+  and the key retrains — corrupt bytes are never served as predictions.
+* A best-effort **training lock** — a crash-reclaimable lease file from
+  :mod:`repro.distributed.fault_tolerance` — makes concurrent misses on
+  the same key wait for the first trainer's result instead of training N
+  times.  A lock whose owner pid is dead (SIGKILLed trainer on this
+  host) or whose TTL expired is stolen immediately; a live-but-wedged
+  holder is waited out for ``lock_patience_s`` and then overridden
+  (correctness never depends on the lock).
 * A per-process memo keeps the same array shared in-process even with no
   ``cache_dir`` (serial sweeps train once per (trace, model) pair too).
 
@@ -36,13 +42,19 @@ import json
 import os
 import tempfile
 import time
+import warnings
+import zipfile
 from typing import Dict, Optional
 
 import numpy as np
 
+from repro.distributed import fault_tolerance as ft
+from repro.uvm import faults
+
 #: bump on any change to the key schema, the stored array semantics, or the
 #: prediction pipeline itself — stale arrays must never be served
-PREDCACHE_VERSION = 1
+#: (2: checksummed .npz entries with an embedded sha256)
+PREDCACHE_VERSION = 2
 
 #: conventional subdirectory name under a sweep's trace cache
 DEFAULT_SUBDIR = "pred_cache"
@@ -104,33 +116,65 @@ def predictions_key(trace, **service_fields) -> str:
 # ---------------------------------------------------------------------------
 
 def _path(cache_dir: str, key: str) -> str:
-    return os.path.join(cache_dir, f"preds_{key}.npy")
+    return os.path.join(cache_dir, f"preds_{key}.npz")
+
+
+def _preds_digest(preds: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(preds.dtype).encode())
+    h.update(str(preds.shape).encode())
+    h.update(np.ascontiguousarray(preds).tobytes())
+    return h.hexdigest()
+
+
+def _quarantine(path: str, reason: str) -> None:
+    warnings.warn(f"{reason}: quarantining {path} -> {path}.corrupt and "
+                  "retraining", RuntimeWarning)
+    try:
+        os.replace(path, path + ".corrupt")
+    except OSError:
+        pass
 
 
 def load(cache_dir: str, key: str) -> Optional[np.ndarray]:
-    """Load a cached predictions array, or None.  A torn/invalid file reads
-    as a miss (the atomic rename makes that unreachable for writers using
-    :func:`store`, but a miss is always safe)."""
+    """Load a cached predictions array, or None.  The embedded sha256 is
+    verified against the array bytes: an unreadable or checksum-failing
+    entry (truncation, bit flips — anything the atomic rename cannot
+    rule out) is quarantined to ``<entry>.corrupt`` and reads as a miss,
+    so corruption triggers a retrain instead of silently skewing every
+    downstream hit-rate."""
+    path = _path(cache_dir, key)
     try:
-        arr = np.load(_path(cache_dir, key), allow_pickle=False)
-    except (FileNotFoundError, NotADirectoryError, ValueError, EOFError,
-            OSError):
+        with np.load(path, allow_pickle=False) as z:
+            preds = np.ascontiguousarray(z["preds"])
+            sha = str(z["sha"])
+    except (FileNotFoundError, NotADirectoryError):
         return None
-    arr.flags.writeable = False
-    return arr
+    except (ValueError, EOFError, OSError, KeyError, zipfile.BadZipFile):
+        _quarantine(path, "unreadable prediction cache entry")
+        return None
+    if sha != _preds_digest(preds):
+        _quarantine(path, "prediction cache checksum mismatch")
+        return None
+    preds.flags.writeable = False
+    return preds
 
 
 def store(cache_dir: str, key: str, preds: np.ndarray) -> str:
-    """Atomically persist a predictions array: write to a same-directory
-    tempfile, then ``os.replace`` onto the final name.  Concurrent writers
-    race benignly — last rename wins, readers never see a partial file."""
+    """Atomically persist a predictions array with its checksum: write a
+    single ``.npz`` (array + sha256) to a same-directory tempfile, then
+    ``os.replace`` onto the final name.  Concurrent writers race benignly
+    — last rename wins, readers never see a partial file — and keeping
+    array and checksum in one file means no writer interleaving can pair
+    an array with another writer's checksum."""
     os.makedirs(cache_dir, exist_ok=True)
     path = _path(cache_dir, key)
+    arr = np.ascontiguousarray(preds)
     fd, tmp = tempfile.mkstemp(dir=cache_dir, prefix=f".{key}.",
-                               suffix=".tmp.npy")
+                               suffix=".tmp.npz")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.save(f, np.ascontiguousarray(preds))
+            np.savez(f, preds=arr, sha=np.array(_preds_digest(arr)))
         os.replace(tmp, path)
     except BaseException:
         try:
@@ -138,28 +182,28 @@ def store(cache_dir: str, key: str, preds: np.ndarray) -> str:
         except OSError:
             pass
         raise
+    faults.corrupt("pred.artifact", path, key)
     return path
 
 
 # ---------------------------------------------------------------------------
-# training lock (best effort)
+# training lock (best effort, crash-reclaimable)
 # ---------------------------------------------------------------------------
 
-def _try_lock(lock_path: str) -> bool:
-    try:
-        fd = os.open(lock_path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
-    except FileExistsError:
-        return False
-    with os.fdopen(fd, "w") as f:
-        f.write(str(os.getpid()))
-    return True
+def _try_lock(lock_path: str, ttl_s: float) -> bool:
+    """Claim the training lock for a key.  The lock is a lease file
+    ({pid, host, ts}): a holder that was SIGKILLed on this host is stolen
+    immediately via the dead-pid check, a holder elsewhere is presumed
+    dead once its TTL expires — so one crashed trainer can never make
+    every future cold-cache process serve its full ``lock_patience_s``.
+    Legacy bare-pid lockfiles parse as TTL-less records and read as
+    stale."""
+    return ft.try_acquire_lease(lock_path, ttl_s,
+                                extra={"role": "predcache-train"})
 
 
 def _unlock(lock_path: str) -> None:
-    try:
-        os.unlink(lock_path)
-    except OSError:
-        pass
+    ft.release_lease(lock_path)
 
 
 # ---------------------------------------------------------------------------
@@ -207,25 +251,28 @@ def get_or_train(trace, *, steps: int = 150, seed: int = 0,
     if preds is None:
         os.makedirs(cache_dir, exist_ok=True)
         lock = _path(cache_dir, key) + ".lock"
-        got = _try_lock(lock)
+        got = _try_lock(lock, lock_patience_s)
         if not got:
-            # another process is training this key: wait for its array
+            # another *live* process is training this key: wait for its
+            # array.  Each poll re-probes the lease, so a holder that
+            # dies mid-training is reclaimed at the next poll instead of
+            # costing the full patience window.
             deadline = time.monotonic() + lock_patience_s
             while time.monotonic() < deadline:
                 preds = load(cache_dir, key)
                 if preds is not None:
                     break
-                if _try_lock(lock):      # holder released without a result
-                    got = True
+                if _try_lock(lock, lock_patience_s):
+                    got = True           # holder released, died, or TTL'd
                     break
                 time.sleep(lock_poll_s)
             if preds is None and not got:
-                # patience exhausted: the lock holder is dead or wedged.
+                # patience exhausted: the lock holder is alive but wedged.
                 # Steal the lock so it cannot poison this key for every
                 # future cold-cache process; a benign duplicate training
                 # run (deterministic, atomic rename) is the worst case.
                 _unlock(lock)
-                got = _try_lock(lock)
+                got = _try_lock(lock, lock_patience_s)
         if preds is None:
             try:
                 preds = load(cache_dir, key)   # double-check under the lock

@@ -76,6 +76,19 @@ MAX_SPAN_PAGES = 1 << 24
 _INF = float("inf")
 
 
+class TransientBackendFault(RuntimeError):
+    """A backend failure that is expected to succeed on retry (device
+    preemption, transient OOM, an injected chaos fault — see
+    ``repro.uvm.faults``).
+
+    :func:`dispatch` and the sweep's lane scheduler re-raise these instead
+    of degrading down the fallback chain: degrading would permanently
+    record a different ``backend`` for the cell, so a retried sweep could
+    never converge byte-identically to a fault-free run.  The sweep's
+    lease/retry layer (or a driver restart) retries the whole cell on the
+    originally-resolved backend instead."""
+
+
 # ---------------------------------------------------------------------------
 # request / backend interface
 # ---------------------------------------------------------------------------
@@ -221,6 +234,11 @@ def dispatch(request: ReplayRequest, backend: str = "auto") -> UVMStats:
             return b.replay([request])[0]
         try:
             return b.replay([request])[0]
+        except TransientBackendFault:
+            # retryable by contract: degrading would record a different
+            # backend for the cell, breaking chaos convergence — let the
+            # caller's retry layer re-run the cell on the same chain
+            raise
         except Exception as e:
             import warnings
             warnings.warn(f"replay backend {b.name!r} failed at runtime "

@@ -26,6 +26,10 @@ Built-ins:
   ``repro.offload.serve_trace``) replayed as first-class traces, with
   p50/p95/p99 decode-latency and TTFT columns on every row.  Serve
   scenarios pin ``window=None`` — validation enforces it.
+* ``chaos-smoke`` — an 8-cell grid sized for the chaos convergence
+  harness (``python -m repro.uvm.faults``): the CI check replays it
+  fault-free and under a bounded kill+corrupt+raise fault plan and
+  requires byte-identical rows.
 
 Usage::
 
@@ -241,6 +245,22 @@ register_scenario(Scenario(
     prefetchers=("none", "block"),
     scale=0.25,
     window=None,
+))
+
+register_scenario(Scenario(
+    name="chaos-smoke",
+    description=(
+        "CI smoke for the crash-safety plane: 2 small benchmarks x 1 "
+        "oversubscribed ratio x 2 eviction policies x (none, tree) at "
+        "scale 0.25 — 8 cells, sized so the chaos convergence harness "
+        "(python -m repro.uvm.faults) can run it fault-free and under "
+        "the bounded kill+corrupt+raise plan, with driver restarts, in "
+        "well under a minute (scripts/ci_check.sh)"),
+    benches=("ATAX", "Pathfinder"),
+    ratios=(0.75,),
+    evictions=("lru", "hotcold"),
+    prefetchers=("none", "tree"),
+    scale=0.25,
 ))
 
 register_scenario(Scenario(

@@ -74,6 +74,42 @@ A prebuilt predictions array can still be supplied per bench via
 Workers are deterministic: a cell's row is a pure function of the cell, so
 serial and parallel sweeps produce identical results (modulo the ``seconds``
 timing column).
+
+Crash safety (leases, retries, quarantine)
+------------------------------------------
+
+With an ``out_dir``, the sweep is fault-tolerant end to end (the full
+protocol is documented in ``repro/uvm/backends/README.md``, "Fault
+model"):
+
+* Every persisted artifact — ``cells/<key>.json`` rows, cached trace
+  ``.npz`` files, prediction-cache entries — is **checksummed** and
+  written with atomic rename.  A torn or corrupted file detected on read
+  is quarantined (renamed ``*.corrupt``) with a warning and the work is
+  redone, so resume never mixes damaged state into results.  Cell files
+  also embed ``SWEEP_VERSION``; a version mismatch requeues the cell
+  instead of mixing rows across timing-model versions.
+* Per-cell execution takes an expiring **lease**
+  (``cells/<key>.lease``, via ``repro.distributed.fault_tolerance``):
+  a SIGKILLed worker's lease is reclaimed immediately through the
+  owner-pid liveness check (TTL expiry covers remote/multi-host owners),
+  so crashed workers never wedge the grid.  Leases are advisory — cells
+  are deterministic and their writes atomic, so the benign steal race
+  can only duplicate work, not corrupt results.
+* A failing cell **retries with capped exponential backoff**
+  (``REPRO_SWEEP_BACKOFF``); after ``max_attempts`` lease claims
+  (``REPRO_SWEEP_MAX_ATTEMPTS``) it lands in the **quarantine manifest**
+  (``out_dir/quarantine.json`` + a stub row with ``quarantined=True``)
+  instead of aborting the grid — visible, never silent.
+* With ``--workers N`` the fan-out is a pool of lease workers supervised
+  by a :class:`~repro.distributed.fault_tolerance.HeartbeatMonitor`:
+  dead workers are restarted, silent-but-alive workers are terminated so
+  their leases free up, and any worker can pick up any unleased cell.
+* The ``repro.uvm.faults`` plane (``REPRO_FAULT_PLAN``) injects
+  deterministic chaos — kills, artifact corruption, transient backend
+  raises — at the sites marked throughout this module; the chaos harness
+  (``python -m repro.uvm.faults``) proves a sweep under such a plan
+  converges byte-identically to a fault-free run.
 """
 from __future__ import annotations
 
@@ -87,11 +123,15 @@ import multiprocessing
 import os
 import sys
 import time
+import warnings
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.distributed import fault_tolerance as ft
 from repro.traces.trace import ACCESS_DTYPE, Trace
+from repro.uvm import faults
+from repro.uvm.replay_core import TransientBackendFault
 from repro.uvm.config import UVMConfig
 from repro.uvm.engine import simulate
 from repro.uvm.eviction import EVICTION_POLICIES
@@ -115,10 +155,10 @@ BACKENDS = ("auto", "numpy", "pallas")
 #: bump on any intentional change to the timing model, trace generators,
 #: prediction pipeline, or row schema — invalidates persisted sweep cells
 #: and cached traces so a resumed sweep never mixes pre- and post-change
-#: numbers (v5: serving-traffic trace source — serve benches route
-#: through ``repro.offload.serve_trace`` and rows carry decode-latency /
-#: TTFT percentile columns)
-SWEEP_VERSION = 5
+#: numbers (v6: crash-safe persistence — cell files are checksummed
+#: ``{_v, sha256, row}`` envelopes, cached traces embed a content sha,
+#: and rows carry ``retries``/``quarantined`` columns)
+SWEEP_VERSION = 6
 
 #: serving SLO columns (``repro.offload.serve_trace``): per-decode-step
 #: latency and time-to-first-token percentiles, None on non-serve rows
@@ -138,7 +178,8 @@ ROW_FIELDS = [
     "backend", "n_accesses", "n_instructions",
     "cycles", "ipc", "hits", "late", "faults", "hit_rate", "prefetch_issued",
     "prefetch_used", "accuracy", "coverage", "unity", "pages_migrated",
-    "pages_evicted", "pcie_bytes", *SERVE_LATENCY_FIELDS, "seconds",
+    "pages_evicted", "pcie_bytes", *SERVE_LATENCY_FIELDS,
+    "retries", "quarantined", "seconds",
 ]
 
 
@@ -213,11 +254,36 @@ def _trace_cache_path(cache_dir: str, bench: str, scale: float,
     return os.path.join(cache_dir, f"trace_{bench}_{tag}.npz")
 
 
+def _trace_digest(accesses: np.ndarray, meta_json: str) -> str:
+    h = hashlib.sha256()
+    h.update(np.ascontiguousarray(accesses).tobytes())
+    h.update(meta_json.encode())
+    return h.hexdigest()
+
+
+def quarantine_artifact(path: str, reason: str) -> None:
+    """Move a damaged persisted artifact aside (``<path>.corrupt``) with a
+    warning, so the caller regenerates instead of crashing — and the
+    evidence survives for inspection instead of being overwritten."""
+    warnings.warn(f"{reason}: quarantining {path} -> {path}.corrupt and "
+                  "regenerating", RuntimeWarning)
+    try:
+        os.replace(path, path + ".corrupt")
+    except OSError:                   # already gone: a racer quarantined it
+        pass
+
+
 def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
                window: Optional[float] = 0.6,
                cache_dir: Optional[str] = None) -> Trace:
     """Generate (or load from the npz disk cache) one benchmark trace and
     cut the leading evaluation window.
+
+    Cached traces embed a content checksum; a truncated or corrupted
+    cache file (killed writer on a non-atomic filesystem, disk rot, an
+    injected ``trace.artifact`` fault) is quarantined with a warning and
+    the trace is regenerated deterministically — never replayed from
+    damaged bytes.
 
     Serve bench names (``repro.offload.serve_trace.SERVE_WORKLOADS``,
     including ``@r<rate>`` variants) route through the serving load
@@ -230,16 +296,27 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
     if cache_dir:
         path = _trace_cache_path(cache_dir, bench, scale, seed)
         if os.path.exists(path):
-            with np.load(path, allow_pickle=False) as z:
-                meta = json.loads(str(z["meta"]))
+            try:
+                with np.load(path, allow_pickle=False) as z:
+                    meta_json = str(z["meta"])
+                    accesses = z["accesses"].astype(ACCESS_DTYPE,
+                                                    copy=False)
+                    stored_sha = str(z["sha"])
+                if stored_sha != _trace_digest(accesses, meta_json):
+                    raise ValueError("trace cache checksum mismatch")
+                meta = json.loads(meta_json)
                 trace = Trace(
                     name=meta["name"],
-                    accesses=z["accesses"].astype(ACCESS_DTYPE, copy=False),
+                    accesses=accesses,
                     array_bases=meta["array_bases"],
                     array_pages=meta["array_pages"],
                     n_instructions=meta["n_instructions"],
                     meta=meta.get("meta", {}),
                 )
+            except Exception as e:
+                quarantine_artifact(
+                    path, f"invalid cached trace for {bench} ({e!r})")
+                trace = None
     if trace is None:
         from repro.offload.serve_trace import build_serve_trace, \
             is_serve_bench
@@ -260,8 +337,10 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
                 "meta": trace.meta,
             })
             tmp = path + f".{os.getpid()}.tmp.npz"
-            np.savez(tmp, accesses=trace.accesses, meta=np.array(meta))
+            np.savez(tmp, accesses=trace.accesses, meta=np.array(meta),
+                     sha=np.array(_trace_digest(trace.accesses, meta)))
             os.replace(tmp, path)
+            faults.corrupt("trace.artifact", path, os.path.basename(path))
     if window is not None and not (trace.meta and "serve" in trace.meta):
         trace, _ = trace.split(window)
     return trace
@@ -342,6 +421,8 @@ def _finish_row(cell: SweepCell, stats: UVMStats,
         pages_migrated=stats.pages_migrated,
         pages_evicted=stats.pages_evicted,
         pcie_bytes=stats.pcie_bytes,
+        retries=0,                 # lease attempts beyond the first; the
+        quarantined=False,         # retry layer overwrites on retried cells
         seconds=seconds,
     )
     for f in SERVE_LATENCY_FIELDS:
@@ -431,11 +512,367 @@ def _init_worker(path: List[str]) -> None:
 
 
 # ---------------------------------------------------------------------------
-# orchestration: lane-batch scheduling, fan-out, persistence, resume
+# crash-safe cell store: checksummed envelopes, leases, attempts, quarantine
 # ---------------------------------------------------------------------------
 
 def _cell_path(out_dir: str, cell: SweepCell) -> str:
     return os.path.join(out_dir, "cells", f"{cell.key()}.json")
+
+
+def write_cell_row(path: str, row: Dict) -> None:
+    """Persist one result row as a checksummed, versioned envelope
+    (``{_v, sha256, row}``) with atomic write-rename.  Readers verify the
+    checksum and version, so a resumed sweep can never load a torn,
+    corrupted, or cross-version row as if it were a completed cell."""
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    payload = json.dumps(row, sort_keys=True)
+    doc = {"_v": SWEEP_VERSION,
+           "sha256": hashlib.sha256(payload.encode()).hexdigest(),
+           "row": row}
+    key = os.path.basename(path)
+    tmp = path + f".tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, sort_keys=True)
+    faults.fire("cell.result.write", key)    # kill here = torn write
+    os.replace(tmp, path)
+    faults.corrupt("cell.result.artifact", path, key)
+
+
+def load_cell_row(path: str) -> Tuple[Optional[Dict], str]:
+    """Load a persisted cell row.  Returns ``(row, "ok")`` or ``(None,
+    reason)`` with reason one of ``missing`` / ``corrupt`` (torn JSON,
+    checksum mismatch, truncated file) / ``version`` (written by a
+    different ``SWEEP_VERSION``, including pre-envelope flat rows)."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return None, "missing"
+    except (ValueError, OSError, UnicodeDecodeError):
+        return None, "corrupt"
+    if not isinstance(doc, dict):
+        return None, "corrupt"
+    if doc.get("_v") != SWEEP_VERSION:
+        return None, "version"
+    row = doc.get("row")
+    if not isinstance(row, dict):
+        return None, "corrupt"
+    payload = json.dumps(row, sort_keys=True)
+    if hashlib.sha256(payload.encode()).hexdigest() != doc.get("sha256"):
+        return None, "corrupt"
+    return row, "ok"
+
+
+def _read_json(path: str) -> Optional[Dict]:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return doc if isinstance(doc, dict) else None
+
+
+def _write_json_atomic(path: str, doc: Dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + f".tmp{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, sort_keys=True)
+    os.replace(tmp, path)
+
+
+# -- retry / lease policy ----------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _ExecPolicy:
+    """Knobs of the leased execution layer (env-overridable)."""
+
+    max_attempts: int        # lease claims per cell before quarantine
+    lease_ttl_s: float       # lease expiry for remote/unkillable owners
+    backoff_base_s: float    # exponential backoff base between retries
+    backoff_cap_s: float
+    hb_timeout_s: float      # silent-worker termination threshold
+    max_worker_restarts: int
+
+
+def _env_num(name: str, default: float) -> float:
+    try:
+        return float(os.environ.get(name, default))
+    except ValueError:
+        return default
+
+
+def _exec_policy(max_attempts: Optional[int] = None,
+                 lease_ttl_s: Optional[float] = None) -> _ExecPolicy:
+    return _ExecPolicy(
+        max_attempts=int(max_attempts if max_attempts is not None
+                         else _env_num("REPRO_SWEEP_MAX_ATTEMPTS", 4)),
+        lease_ttl_s=float(lease_ttl_s if lease_ttl_s is not None
+                          else _env_num("REPRO_SWEEP_LEASE_TTL", 300.0)),
+        backoff_base_s=_env_num("REPRO_SWEEP_BACKOFF", 0.25),
+        backoff_cap_s=30.0,
+        # must exceed the slowest single cell (learned training included):
+        # a heartbeat is written per cell attempt, not mid-cell
+        hb_timeout_s=_env_num("REPRO_SWEEP_HB_TIMEOUT", 900.0),
+        max_worker_restarts=int(_env_num("REPRO_SWEEP_MAX_RESTARTS", 16)),
+    )
+
+
+def _backoff_s(pol: _ExecPolicy, attempt: int) -> float:
+    return min(pol.backoff_cap_s,
+               pol.backoff_base_s * (2 ** max(attempt - 1, 0)))
+
+
+# -- attempts ledger + quarantine -------------------------------------------
+
+def _bump_attempts(path: str, error: Optional[str] = None) -> int:
+    """Record one more lease claim (or a failure message) for a cell.
+    Only ever called while holding the cell's lease, so the
+    read-modify-write is single-writer; the write itself is atomic."""
+    apath = path + ".attempts"
+    doc = _read_json(apath) or {}
+    doc["attempts"] = int(doc.get("attempts", 0)) + (0 if error else 1)
+    errors = doc.get("errors")
+    doc["errors"] = list(errors) if isinstance(errors, list) else []
+    if error:
+        doc["errors"].append(error)
+    _write_json_atomic(apath, doc)
+    return doc["attempts"]
+
+
+def _quarantine_stub(cell: SweepCell, qdoc: Dict) -> Dict:
+    """The placeholder row a quarantined cell contributes: the cell's
+    identity columns, every stat None, and ``quarantined=True`` — the
+    grid completes, but a quarantined cell can never read as covered."""
+    row = cell.to_dict()
+    row.pop("service_steps", None)
+    for f in ROW_FIELDS:
+        row.setdefault(f, None)
+    row["retries"] = max(int(qdoc.get("attempts", 0)) - 1, 0)
+    row["quarantined"] = True
+    return row
+
+
+def _attempt_cell(cell: SweepCell, out_dir: str,
+                  cache_dir: Optional[str],
+                  pol: _ExecPolicy) -> Tuple[str, Optional[Dict]]:
+    """One non-blocking leased attempt at a cell.
+
+    Returns ``(status, payload)``: ``("done", row)`` (computed now or
+    found persisted), ``("quarantined", stub_row)``, ``("busy", None)``
+    (a live owner holds the lease), or ``("retry", attempt_no)`` after a
+    failure this process should back off from.  Crash-safe at every
+    point: a SIGKILL leaves at most a stale lease (reclaimed via the
+    dead-pid check) and a counted attempt."""
+    path = _cell_path(out_dir, cell)
+    row, reason = load_cell_row(path)
+    if row is not None:
+        return "done", row
+    if reason in ("corrupt", "version"):
+        quarantine_artifact(path, f"invalid persisted cell "
+                            f"{cell.bench}/{cell.prefetcher} ({reason})")
+    qdoc = _read_json(path + ".quarantine")
+    if qdoc is not None:
+        return "quarantined", _quarantine_stub(cell, qdoc)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    lease = path + ".lease"
+    if not ft.try_acquire_lease(lease, pol.lease_ttl_s,
+                                extra={"cell": cell.key()}):
+        return "busy", None
+    att = 0
+    try:
+        spent = int((_read_json(path + ".attempts") or {})
+                    .get("attempts", 0))
+        if spent >= pol.max_attempts:
+            qdoc = _read_json(path + ".attempts") or {}
+            qdoc.update(key=cell.key(), cell=cell.to_dict())
+            _write_json_atomic(path + ".quarantine", qdoc)
+            warnings.warn(
+                f"cell {cell.bench}/{cell.prefetcher} "
+                f"(eviction={cell.eviction}, frac={cell.device_frac}) "
+                f"quarantined after {spent} attempts: "
+                f"{qdoc.get('errors') or 'worker crashes'}",
+                RuntimeWarning)
+            return "quarantined", _quarantine_stub(cell, qdoc)
+        att = _bump_attempts(path)
+        faults.fire("cell.start", cell.key())
+        row = simulate_cell(cell, cache_dir=cache_dir)
+        row["retries"] = att - 1
+        write_cell_row(path, row)
+        return "done", row
+    except Exception as e:
+        _bump_attempts(path, error=repr(e))
+        return "retry", att
+    finally:
+        ft.release_lease(lease)
+
+
+def _run_cell_leased(i: int, cell: SweepCell, out_dir: str,
+                     cache_dir: Optional[str],
+                     pol: _ExecPolicy) -> Tuple[str, Dict]:
+    """Drive one cell to resolution (result or quarantine), blocking
+    through retries/backoff and foreign leases."""
+    while True:
+        status, payload = _attempt_cell(cell, out_dir, cache_dir, pol)
+        if status in ("done", "quarantined"):
+            return status, payload
+        if status == "retry":
+            time.sleep(_backoff_s(pol, payload))
+        else:                                  # busy: foreign live owner
+            time.sleep(min(0.2, max(pol.lease_ttl_s / 10, 0.01)))
+
+
+# -- the lease worker pool ---------------------------------------------------
+
+def _heartbeat(hb_dir: str, wid: int, done_n: int) -> None:
+    try:
+        _write_json_atomic(os.path.join(hb_dir, f"w{wid}.json"),
+                           {"ts": time.time(), "pid": os.getpid(),
+                            "done": done_n})
+    except OSError:  # pragma: no cover - hb dir vanished
+        pass
+
+
+def _lease_worker_main(sys_path: List[str], cells: List[SweepCell],
+                       out_dir: str, cache_dir: Optional[str],
+                       pol: _ExecPolicy, wid: int, hb_dir: str) -> None:
+    """A lease worker: loops over the whole grid claiming unleased,
+    unfinished cells until every cell is resolved.  Any worker can run
+    any cell, so crashed or slow peers never strand work; the rotated
+    start offset keeps workers from contending on the same cells."""
+    _init_worker(sys_path)
+    n = len(cells)
+    done = [False] * n
+    rot = wid % max(n, 1)
+    order = list(range(rot, n)) + list(range(rot))
+    while not all(done):
+        progressed = False
+        for j in order:
+            if done[j]:
+                continue
+            faults.fire("worker.loop", f"w{wid}")
+            status, payload = _attempt_cell(cells[j], out_dir, cache_dir,
+                                            pol)
+            if status in ("done", "quarantined"):
+                done[j] = True
+                progressed = True
+            elif status == "retry":
+                progressed = True
+                time.sleep(_backoff_s(pol, payload))
+            _heartbeat(hb_dir, wid, sum(done))
+        if not progressed:
+            time.sleep(0.05)
+
+
+def _mp_context():
+    """fork is the cheap default, but forking a jax/XLA-initialized
+    parent (e.g. benchmarks.run after training suites) inherits its
+    thread/mutex state and can deadlock — use spawn in that case, unless
+    __main__ is not re-importable (stdin/-c scripts), which spawn cannot
+    handle.  Cells are pure functions of their spec, so results match
+    the serial path either way."""
+    main_file = getattr(sys.modules.get("__main__"), "__file__", None)
+    spawn_ok = main_file is None or os.path.exists(main_file)
+    method = "spawn" if ("jax" in sys.modules and spawn_ok) else "fork"
+    try:
+        return multiprocessing.get_context(method)
+    except ValueError:  # pragma: no cover - non-POSIX
+        return multiprocessing.get_context("spawn")
+
+
+def _lease_pool(cells: Sequence[SweepCell], pending: List[int],
+                out_dir: str, cache_dir: Optional[str], workers: int,
+                pol: _ExecPolicy, record, verbose: bool) -> None:
+    """Supervise a pool of lease workers over the pending cells.
+
+    The parent never computes; it collects finished cell files into
+    ``record`` and runs the failure-detection loop: a
+    :class:`~repro.distributed.fault_tolerance.HeartbeatMonitor` tracks
+    per-worker heartbeats — dead workers (SIGKILL, crash) are restarted
+    up to a budget, silent-but-alive workers are terminated so their
+    leases free up via the dead-pid reclaim.  If every worker exhausts
+    its restart budget, the parent finishes the remainder serially
+    (attempts are bounded, so that terminates — in quarantine at worst).
+    """
+    sub = [cells[i] for i in pending]
+    ctx = _mp_context()
+    hb_dir = os.path.join(out_dir, "hb")
+    os.makedirs(hb_dir, exist_ok=True)
+    monitor = ft.HeartbeatMonitor(timeout_s=pol.hb_timeout_s)
+    n_workers = min(workers, len(sub))
+
+    def _spawn(wid: int):
+        p = ctx.Process(target=_lease_worker_main,
+                        args=(list(sys.path), sub, out_dir, cache_dir,
+                              pol, wid, hb_dir),
+                        daemon=True)
+        p.start()
+        # grace window until the first beat; heartbeat files carry
+        # time.time() stamps, so the monitor must live in wall-clock time
+        monitor.beat(wid, 0.0, now=time.time())
+        return p
+
+    procs = {wid: _spawn(wid) for wid in range(n_workers)}
+    restarts = {wid: 0 for wid in procs}
+    last_hb: Dict[int, float] = {}
+    unresolved = set(pending)
+    try:
+        while unresolved:
+            for i in sorted(unresolved):
+                path = _cell_path(out_dir, cells[i])
+                row, _reason = load_cell_row(path)
+                if row is not None:
+                    record(i, row, persist=False)
+                    unresolved.discard(i)
+                    continue
+                qdoc = _read_json(path + ".quarantine")
+                if qdoc is not None:
+                    record(i, _quarantine_stub(cells[i], qdoc),
+                           persist=False)
+                    unresolved.discard(i)
+            if not unresolved:
+                break
+            now = time.time()
+            for wid, p in procs.items():
+                hb = _read_json(os.path.join(hb_dir, f"w{wid}.json"))
+                if hb and isinstance(hb.get("ts"), (int, float)):
+                    ts = float(hb["ts"])
+                    if last_hb.get(wid) != ts:
+                        monitor.beat(wid, ts - last_hb.get(wid, ts),
+                                     now=ts)
+                        last_hb[wid] = ts
+                if p.is_alive() and wid in monitor.dead_hosts(now=now):
+                    if verbose:
+                        print(f"[sweep] worker {wid} silent for "
+                              f">{pol.hb_timeout_s}s; terminating so its "
+                              "lease frees up", flush=True)
+                    p.terminate()
+                    p.join(timeout=5)
+                if not p.is_alive() and restarts[wid] \
+                        < pol.max_worker_restarts:
+                    restarts[wid] += 1
+                    if verbose:
+                        print(f"[sweep] worker {wid} died; restart "
+                              f"{restarts[wid]}/{pol.max_worker_restarts}",
+                              flush=True)
+                    procs[wid] = _spawn(wid)
+            if all(not p.is_alive() for p in procs.values()):
+                for i in sorted(unresolved):
+                    status, row = _run_cell_leased(
+                        i, cells[i], out_dir, cache_dir, pol)
+                    record(i, row, persist=False)
+                unresolved.clear()
+                break
+            time.sleep(0.05)
+    finally:
+        for p in procs.values():
+            if p.is_alive():
+                p.terminate()
+            p.join(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# orchestration: lane-batch scheduling, fan-out, persistence, resume
+# ---------------------------------------------------------------------------
 
 
 @functools.lru_cache(maxsize=1)
@@ -507,11 +944,16 @@ def _run_lane_batches(cells: Sequence[SweepCell],
         if verbose:
             print(f"[sweep] pallas lanes: replaying {len(batch)} cells "
                   "in one batch", flush=True)
+        faults.fire("lane.flush", f"{len(batch)}:{cells[batch[0]].key()}")
         t0 = time.time()
         try:
             stats = backend.replay(list(requests))
+        except TransientBackendFault:
+            # retryable by contract: degrading would permanently change
+            # the rows' backend column, so let the driver crash and the
+            # resumed run replay these cells on the same backend
+            raise
         except Exception as e:  # pragma: no cover - backend runtime faults
-            import warnings
             warnings.warn(f"pallas lane batch failed at runtime ({e!r}); "
                           "replaying the affected cells on the NumPy path",
                           RuntimeWarning)
@@ -558,44 +1000,71 @@ def run_sweep(cells: Sequence[SweepCell], *, out_dir: Optional[str] = None,
               workers: int = 1, resume: bool = True,
               cache_dir: Optional[str] = None,
               verbose: bool = False,
-              write_aggregate: bool = True) -> List[Dict]:
+              write_aggregate: bool = True,
+              max_attempts: Optional[int] = None,
+              lease_ttl_s: Optional[float] = None) -> List[Dict]:
     """Run a grid of cells; returns rows in the order of ``cells``.
 
     With ``out_dir``, each completed cell is persisted under
-    ``out_dir/cells/<key>.json`` (and skipped on resume), and aggregate
-    ``results.json`` / ``results.csv`` are (re)written at the end.  Callers
-    sharing one ``out_dir`` across several grids should pass
-    ``write_aggregate=False`` so the aggregate files never reflect a
-    partial grid.
+    ``out_dir/cells/<key>.json`` as a checksummed envelope (and skipped on
+    resume; a truncated/corrupt/cross-version cell file is quarantined to
+    ``<key>.json.corrupt`` with a warning and the cell requeued), cells
+    execute under crash-reclaimable leases with bounded retries (cells
+    still failing after ``max_attempts`` lease claims land in
+    ``out_dir/quarantine.json`` and contribute a ``quarantined=True`` stub
+    row instead of aborting the grid), and aggregate ``results.json`` /
+    ``results.csv`` are (re)written at the end.  Callers sharing one
+    ``out_dir`` across several grids should pass ``write_aggregate=False``
+    so the aggregate files never reflect a partial grid.
     """
     if cache_dir is None and out_dir is not None:
         cache_dir = os.path.join(out_dir, "trace_cache")
+    pol = _exec_policy(max_attempts, lease_ttl_s)
     rows: Dict[int, Dict] = {}
     pending: List[int] = []
     for i, cell in enumerate(cells):
-        if out_dir and resume:
+        if out_dir:
             path = _cell_path(out_dir, cell)
-            if os.path.exists(path):
-                with open(path) as f:
-                    rows[i] = json.load(f)
-                continue
+            if resume:
+                row, reason = load_cell_row(path)
+                if row is not None:
+                    rows[i] = row
+                    continue
+                if reason in ("corrupt", "version"):
+                    quarantine_artifact(
+                        path, f"resume: invalid cell file for "
+                        f"{cell.bench}/{cell.prefetcher} ({reason}); "
+                        "requeueing")
+                qdoc = _read_json(path + ".quarantine")
+                if qdoc is not None:
+                    rows[i] = _quarantine_stub(cell, qdoc)
+                    continue
+            else:
+                # a fresh (non-resumed) run must not inherit results,
+                # attempt counts, or quarantine verdicts from earlier
+                # runs — the leased executor would short-circuit on them
+                for suffix in ("", ".quarantine", ".attempts"):
+                    try:
+                        os.unlink(path + suffix)
+                    except OSError:
+                        pass
         pending.append(i)
 
-    def _record(i: int, row: Dict) -> None:
+    def _record(i: int, row: Dict, persist: bool = True) -> None:
         rows[i] = row
-        if out_dir:
-            path = _cell_path(out_dir, cells[i])
-            os.makedirs(os.path.dirname(path), exist_ok=True)
-            tmp = path + f".tmp{os.getpid()}"
-            with open(tmp, "w") as f:
-                json.dump(row, f, sort_keys=True)
-            os.replace(tmp, path)
+        if out_dir and persist:
+            write_cell_row(_cell_path(out_dir, cells[i]), row)
         if verbose:
-            print(f"[sweep] {row['bench']}/{row['prefetcher']}"
-                  f" frac={row.get('device_frac')}"
-                  f" backend={row.get('backend')}"
-                  f" hit={row['hit_rate']:.3f} ipc={row['ipc']:.2f}"
-                  f" ({row['seconds']:.2f}s)", flush=True)
+            if row.get("quarantined"):
+                print(f"[sweep] {row['bench']}/{row['prefetcher']}"
+                      f" frac={row.get('device_frac')} QUARANTINED"
+                      f" after {row.get('retries')} retries", flush=True)
+            else:
+                print(f"[sweep] {row['bench']}/{row['prefetcher']}"
+                      f" frac={row.get('device_frac')}"
+                      f" backend={row.get('backend')}"
+                      f" hit={row['hit_rate']:.3f} ipc={row['ipc']:.2f}"
+                      f" ({row['seconds']:.2f}s)", flush=True)
 
     # lane-batch scheduler: pack pallas-bound cells into multi-lane kernel
     # launches in the parent process (they are already batched — worker
@@ -610,20 +1079,19 @@ def run_sweep(cells: Sequence[SweepCell], *, out_dir: Optional[str] = None,
         handled = {lane_pending[j] for j in lane_rows}
         pending = [i for i in pending if i not in handled]
 
-    if pending and workers > 1:
-        # fork is the cheap default, but forking a jax/XLA-initialized
-        # parent (e.g. benchmarks.run after training suites) inherits its
-        # thread/mutex state and can deadlock — use spawn in that case,
-        # unless __main__ is not re-importable (stdin/-c scripts), which
-        # spawn cannot handle.  Cells are pure functions of their spec, so
-        # results match the serial path either way.
-        main_file = getattr(sys.modules.get("__main__"), "__file__", None)
-        spawn_ok = main_file is None or os.path.exists(main_file)
-        method = "spawn" if ("jax" in sys.modules and spawn_ok) else "fork"
-        try:
-            ctx = multiprocessing.get_context(method)
-        except ValueError:  # pragma: no cover - non-POSIX
-            ctx = multiprocessing.get_context("spawn")
+    if pending and out_dir:
+        # leased execution: every cell resolves to a persisted result or
+        # a quarantine verdict, whatever crashes along the way
+        if workers > 1:
+            _lease_pool(cells, pending, out_dir, cache_dir, workers, pol,
+                        _record, verbose)
+        else:
+            for i in pending:
+                status, row = _run_cell_leased(i, cells[i], out_dir,
+                                               cache_dir, pol)
+                _record(i, row, persist=False)
+    elif pending and workers > 1:
+        ctx = _mp_context()
         with ctx.Pool(min(workers, len(pending)), initializer=_init_worker,
                       initargs=(list(sys.path),)) as pool:
             args = [(cells[i], cache_dir) for i in pending]
@@ -636,6 +1104,11 @@ def run_sweep(cells: Sequence[SweepCell], *, out_dir: Optional[str] = None,
     out = [rows[i] for i in range(len(cells))]
     if out_dir and write_aggregate:
         write_results(out, out_dir)
+        _write_json_atomic(
+            os.path.join(out_dir, "quarantine.json"),
+            {"cells": [q for q in
+                       (_read_json(_cell_path(out_dir, c) + ".quarantine")
+                        for c in cells) if q is not None]})
     return out
 
 
@@ -656,8 +1129,31 @@ def write_results(rows: List[Dict], out_dir: str) -> None:
 
 
 def read_results(out_dir: str) -> List[Dict]:
-    with open(os.path.join(out_dir, "results.json")) as f:
-        return json.load(f)["rows"]
+    """Read the aggregate rows.  A missing or corrupt aggregate falls
+    back to scanning the per-cell store (checksum-valid, current-version
+    cells only) with a warning, so one torn ``results.json`` never loses
+    a finished grid."""
+    try:
+        with open(os.path.join(out_dir, "results.json")) as f:
+            doc = json.load(f)
+        rows = doc["rows"]
+        if not isinstance(rows, list):
+            raise ValueError("aggregate rows is not a list")
+        return rows
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        cell_dir = os.path.join(out_dir, "cells")
+        if not os.path.isdir(cell_dir):
+            raise
+        warnings.warn(f"aggregate results.json unreadable ({e!r}); "
+                      "rebuilding from the per-cell store", RuntimeWarning)
+        rows = []
+        for fname in sorted(os.listdir(cell_dir)):
+            if not fname.endswith(".json"):
+                continue
+            row, reason = load_cell_row(os.path.join(cell_dir, fname))
+            if row is not None:
+                rows.append(row)
+        return rows
 
 
 def read_results_csv(path: str) -> List[Dict]:
@@ -669,6 +1165,9 @@ def read_results_csv(path: str) -> List[Dict]:
             for k, v in row.items():
                 if v == "" or v == "None":
                     parsed[k] = None
+                    continue
+                if v in ("True", "False"):
+                    parsed[k] = v == "True"
                     continue
                 try:
                     fv = float(v)
@@ -768,9 +1267,12 @@ def main(argv: Optional[List[str]] = None) -> None:
     rows = run_sweep(cells, out_dir=args.out, workers=args.workers,
                      resume=not args.no_resume, verbose=True)
     dt = time.time() - t0
+    n_quar = sum(1 for r in rows if r.get("quarantined"))
     print(f"\n{len(rows)} cells in {dt:.1f}s "
-          f"({sum(r['n_accesses'] for r in rows) / max(dt, 1e-9) / 1e6:.2f}"
-          " M accesses/s aggregate)")
+          f"({sum(r['n_accesses'] or 0 for r in rows) / max(dt, 1e-9) / 1e6:.2f}"
+          " M accesses/s aggregate)"
+          + (f" [{n_quar} QUARANTINED - see quarantine.json]"
+             if n_quar else ""))
     cols = ["bench", "prefetcher", "device_frac", "eviction", "backend",
             "hit_rate", "ipc", "unity"]
     print(",".join(cols))

@@ -100,7 +100,7 @@ def test_concurrent_writers_never_corrupt(tmp_path):
     assert arr is not None and np.unique(arr).size == 1
     assert seen > 0                      # we really raced the writers
     # no tempfiles leaked behind the renames
-    assert not [f for f in os.listdir(cache) if f.endswith(".tmp.npy")]
+    assert not [f for f in os.listdir(cache) if f.endswith(".tmp.npz")]
 
 
 def test_get_or_train_hits_skip_training(tmp_path, monkeypatch):
@@ -154,7 +154,8 @@ def test_get_or_train_respects_disable_env(tmp_path, monkeypatch):
 
 def test_stale_lock_does_not_deadlock(tmp_path, monkeypatch):
     """A dead trainer's leftover lockfile must not wedge waiters forever:
-    after the patience window they train themselves."""
+    legacy bare-pid locks read as TTL-less lease records and are stolen
+    immediately."""
     from repro.core.service import PredictorService
 
     predcache.clear_memo()
@@ -165,7 +166,7 @@ def test_stale_lock_does_not_deadlock(tmp_path, monkeypatch):
     key = predcache.predictions_key(tr, **fields)
     os.makedirs(cache, exist_ok=True)
     # fake an abandoned lock with no result behind it
-    with open(os.path.join(cache, f"preds_{key}.npy.lock"), "w") as f:
+    with open(os.path.join(cache, f"preds_{key}.npz.lock"), "w") as f:
         f.write("99999")
     monkeypatch.setattr(PredictorService, "fit",
                         lambda self, *a, **k: None)
@@ -175,3 +176,76 @@ def test_stale_lock_does_not_deadlock(tmp_path, monkeypatch):
                                  lock_poll_s=0.01, lock_patience_s=0.05)
     assert int(got[0]) == 7
     predcache.clear_memo()
+
+
+def test_dead_pid_lock_reclaimed_before_patience(tmp_path, monkeypatch):
+    """Satellite: a SIGKILLed trainer's lock (fresh timestamp, dead pid)
+    is reclaimed via the owner-pid liveness check — waiters do not serve
+    the TTL/patience window."""
+    import json
+    import time
+
+    from repro.core.service import PredictorService
+    from repro.distributed import fault_tolerance as ft
+
+    predcache.clear_memo()
+    cache = str(tmp_path)
+    tr = _mk_trace(np.arange(150) % 19)
+    svc = PredictorService(steps=5)
+    fields = {f: getattr(svc, f) for f in predcache.SERVICE_KEY_FIELDS}
+    key = predcache.predictions_key(tr, **fields)
+    os.makedirs(cache, exist_ok=True)
+    doc = ft.lease_doc()
+    doc["pid"] = 2 ** 22 + 11            # beyond any default pid_max
+    assert not ft.pid_alive(doc["pid"])
+    with open(os.path.join(cache, f"preds_{key}.npz.lock"), "w") as f:
+        json.dump(doc, f)                # fresh ts: TTL alone won't expire
+
+    monkeypatch.setattr(PredictorService, "fit",
+                        lambda self, *a, **k: None)
+    monkeypatch.setattr(PredictorService, "predict_trace",
+                        lambda self: np.full(len(tr), 9, dtype=np.int64))
+    t0 = time.monotonic()
+    got = predcache.get_or_train(tr, steps=5, cache_dir=cache,
+                                 lock_poll_s=0.25, lock_patience_s=120.0)
+    waited = time.monotonic() - t0
+    assert int(got[0]) == 9
+    assert waited < 30.0                 # did not sit out the patience
+    predcache.clear_memo()
+
+
+def test_corrupt_entry_quarantined_and_retrained(tmp_path):
+    """Checksummed entries: truncation and bit flips are detected on
+    read, the entry is quarantined to .corrupt, and the key reads as a
+    miss (retrain) instead of serving corrupt predictions."""
+    cache = str(tmp_path)
+    preds = np.arange(5000, dtype=np.int64)
+
+    # truncation
+    key_t = "feed" * 6
+    path_t = predcache._path(cache, key_t)
+    predcache.store(cache, key_t, preds)
+    with open(path_t, "r+b") as f:
+        f.truncate(os.path.getsize(path_t) // 2)
+    with pytest.warns(RuntimeWarning, match="quarantining"):
+        assert predcache.load(cache, key_t) is None
+    assert os.path.exists(path_t + ".corrupt")
+    assert not os.path.exists(path_t)
+
+    # single bit flip in the embedded array bytes
+    key_b = "beef" * 6
+    path_b = predcache._path(cache, key_b)
+    predcache.store(cache, key_b, preds)
+    size = os.path.getsize(path_b)
+    with open(path_b, "r+b") as f:
+        f.seek(size // 2)
+        b = f.read(1)
+        f.seek(size // 2)
+        f.write(bytes([b[0] ^ 0x10]))
+    with pytest.warns(RuntimeWarning, match="quarantining"):
+        assert predcache.load(cache, key_b) is None
+    assert os.path.exists(path_b + ".corrupt")
+
+    # a rewritten entry round-trips again
+    predcache.store(cache, key_t, preds)
+    np.testing.assert_array_equal(predcache.load(cache, key_t), preds)

@@ -8,9 +8,10 @@ import numpy as np
 import pytest
 
 from repro.uvm import predcache
-from repro.uvm.sweep import (ROW_FIELDS, SweepCell, expand_grid, load_trace,
-                             read_results, read_results_csv, run_sweep,
-                             simulate_cell, write_results)
+from repro.uvm.sweep import (ROW_FIELDS, SweepCell, expand_grid,
+                             load_cell_row, load_trace, read_results,
+                             read_results_csv, run_sweep, simulate_cell,
+                             write_cell_row, write_results)
 
 BENCHES = ["ATAX", "Pathfinder"]
 PREFETCHERS = ["none", "tree"]
@@ -21,7 +22,10 @@ def _small_cells(**kw):
 
 
 def _strip_timing(rows):
-    return [{k: v for k, v in r.items() if k != "seconds"} for r in rows]
+    # seconds and the lease-attempt counter are execution metadata — a
+    # recomputed or resumed cell may legitimately differ in both
+    return [{k: v for k, v in r.items() if k not in ("seconds", "retries")}
+            for r in rows]
 
 
 def test_grid_expansion_axes():
@@ -83,11 +87,10 @@ def test_resume_from_partial_results(tmp_path):
         if i % 2 == 0:
             os.remove(path)
         else:
-            with open(path) as f:
-                row = json.load(f)
+            row, reason = load_cell_row(path)
+            assert reason == "ok"
             row["seconds"] = 12345.0
-            with open(path, "w") as f:
-                json.dump(row, f)
+            write_cell_row(path, row)     # checksum must cover the poke
             kept += 1
     assert kept > 0
 
@@ -369,3 +372,174 @@ def test_learned_resume_needs_no_training(tmp_path, monkeypatch):
     resumed = run_sweep(cells, out_dir=out, workers=1)
     assert _strip_timing(resumed) == _strip_timing(first)
     predcache.clear_memo()
+
+
+# ---------------------------------------------------------------------------
+# crash safety: checksummed cell store, leases, retries, quarantine
+# ---------------------------------------------------------------------------
+
+def _strip_volatile(rows):
+    from repro.uvm.faults import VOLATILE_ROW_FIELDS
+    return [{k: v for k, v in r.items() if k not in VOLATILE_ROW_FIELDS}
+            for r in rows]
+
+
+def test_cell_row_envelope_rejects_corruption_and_versions(tmp_path):
+    path = str(tmp_path / "cell.json")
+    row = {"bench": "ATAX", "hit_rate": 0.5}
+    write_cell_row(path, row)
+    assert load_cell_row(path) == (row, "ok")
+
+    # payload edited without the checksum: corrupt, never served
+    with open(path) as f:
+        text = f.read()
+    with open(path, "w") as f:
+        f.write(text.replace("0.5", "0.9"))
+    assert load_cell_row(path) == (None, "corrupt")
+
+    # truncation (torn write surviving a crashed rename-less writer)
+    write_cell_row(path, row)
+    with open(path, "r+") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    assert load_cell_row(path) == (None, "corrupt")
+
+    # foreign SWEEP_VERSION envelopes and pre-envelope flat rows are
+    # "version", not "ok" — a version bump invalidates old grids
+    write_cell_row(path, row)
+    with open(path) as f:
+        doc = json.load(f)
+    doc["_v"] = 99
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    assert load_cell_row(path) == (None, "version")
+    with open(path, "w") as f:
+        json.dump(row, f)                  # legacy flat row, no envelope
+    assert load_cell_row(path) == (None, "version")
+
+    assert load_cell_row(str(tmp_path / "nope.json")) == (None, "missing")
+
+
+def test_resume_requeues_invalid_cell_files(tmp_path):
+    """Satellite: a truncated/corrupt/cross-version cell file warns, is
+    quarantined aside, and its cell recomputes — resume never raises and
+    never trusts bad bytes."""
+    out = str(tmp_path / "out")
+    cells = _small_cells()
+    full = run_sweep(cells, out_dir=out, workers=1)
+    paths = [os.path.join(out, "cells", f"{c.key()}.json") for c in cells]
+
+    with open(paths[0], "r+") as f:        # torn write
+        f.truncate(os.path.getsize(paths[0]) // 2)
+    with open(paths[1], "w") as f:         # garbage bytes
+        f.write("not json{{{")
+    with open(paths[2], "w") as f:         # pre-envelope flat row
+        json.dump(full[2], f)
+
+    with pytest.warns(RuntimeWarning, match="quarantining"):
+        resumed = run_sweep(cells, out_dir=out, workers=1)
+    assert _strip_volatile(resumed) == _strip_volatile(full)
+    for p in paths[:3]:
+        assert os.path.exists(p + ".corrupt")     # evidence kept aside
+        assert load_cell_row(p) == (load_cell_row(p)[0], "ok")
+
+
+def test_worker_sigkill_mid_cell_and_mid_write_converges(tmp_path,
+                                                         monkeypatch):
+    """Satellite: SIGKILL a lease worker mid-cell and another mid
+    cell-file write; the pool restarts workers, reclaims the dead pids'
+    leases, and the grid is byte-identical to a fault-free run."""
+    from repro.uvm import faults
+
+    cells = _small_cells(backend="numpy")
+    base = run_sweep(cells, out_dir=str(tmp_path / "base"), workers=1)
+
+    plan = faults.FaultPlan(
+        seed=3, ledger_dir=str(tmp_path / "ledger"), specs=(
+            faults.FaultSpec("cell.start", "kill", prob=1.0, max_count=1,
+                             match=cells[1].key()),
+            faults.FaultSpec("cell.result.write", "kill", prob=1.0,
+                             max_count=1, match=cells[2].key()),
+        ))
+    monkeypatch.setenv(faults.FAULT_PLAN_ENV, plan.to_json())
+    faults.reset()
+    try:
+        rows = run_sweep(cells, out_dir=str(tmp_path / "chaos"), workers=2)
+    finally:
+        monkeypatch.delenv(faults.FAULT_PLAN_ENV)
+        faults.reset()
+
+    assert _strip_volatile(rows) == _strip_volatile(base)
+    assert all(r["quarantined"] is False for r in rows)
+    assert all(isinstance(r["retries"], int) for r in rows)
+    # both sabotaged cells needed a second lease claim
+    assert rows[1]["retries"] >= 1
+    assert rows[2]["retries"] >= 1
+    assert faults.rows_digest(rows) == faults.rows_digest(base)
+
+
+def test_unrecoverable_cell_quarantines_instead_of_aborting(tmp_path,
+                                                            monkeypatch):
+    """A cell that fails every attempt lands in the quarantine manifest
+    as a stub row after capped retries — the rest of the grid completes,
+    and a resumed sweep reloads the verdict without recomputing."""
+    from repro.uvm import faults
+
+    cells = _small_cells(backend="numpy")
+    victim = cells[0].key()
+    plan = faults.FaultPlan(seed=0, specs=(
+        faults.FaultSpec("cell.start", "raise", prob=1.0, max_count=None,
+                         match=victim),))
+    monkeypatch.setenv(faults.FAULT_PLAN_ENV, plan.to_json())
+    faults.reset()
+    out = str(tmp_path / "out")
+    try:
+        with pytest.warns(RuntimeWarning, match="quarantined"):
+            rows = run_sweep(cells, out_dir=out, workers=1, max_attempts=2)
+
+        assert rows[0]["quarantined"] is True
+        assert rows[0]["hit_rate"] is None and rows[0]["ipc"] is None
+        assert rows[0]["retries"] == 1            # 2 attempts = 1 retry
+        assert rows[0]["bench"] == cells[0].bench
+        assert all(r["quarantined"] is False for r in rows[1:])
+        assert all(r["hit_rate"] is not None for r in rows[1:])
+
+        with open(os.path.join(out, "quarantine.json")) as f:
+            manifest = json.load(f)
+        assert len(manifest["cells"]) == 1
+        assert manifest["cells"][0]["key"] == victim
+        assert manifest["cells"][0]["errors"]     # the injected raises
+
+        # resume: the verdict is loaded, not recomputed
+        resumed = run_sweep(cells, out_dir=out, workers=1, max_attempts=2)
+        assert _strip_volatile(resumed) == _strip_volatile(rows)
+
+        # CSV round-trip keeps the new bool/int columns typed
+        csv_rows = read_results_csv(os.path.join(out, "results.csv"))
+        assert csv_rows[0]["quarantined"] is True
+        assert csv_rows[1]["quarantined"] is False
+        assert csv_rows[0]["hit_rate"] is None
+    finally:
+        monkeypatch.delenv(faults.FAULT_PLAN_ENV)
+        faults.reset()
+
+    # resume=False clears the verdict and the cell recovers (the plan is
+    # gone): the quarantine is a judgment about past attempts, not fate
+    fresh = run_sweep(cells, out_dir=out, workers=1, resume=False)
+    assert all(r["quarantined"] is False for r in fresh)
+    assert fresh[0]["hit_rate"] is not None
+
+
+def test_aggregate_results_rebuild_from_cell_store(tmp_path):
+    """A torn results.json falls back to the checksummed per-cell store."""
+    out = str(tmp_path / "out")
+    cells = _small_cells()
+    rows = run_sweep(cells, out_dir=out, workers=1)
+    agg = os.path.join(out, "results.json")
+    with open(agg, "r+") as f:
+        f.truncate(os.path.getsize(agg) // 3)
+    with pytest.warns(RuntimeWarning, match="rebuilding"):
+        back = read_results(out)
+    key = lambda r: (r["bench"], r["prefetcher"], str(r["device_frac"]))
+    assert sorted(map(key, back)) == sorted(map(key, rows))
+    assert {json.dumps(r, sort_keys=True) for r in back} \
+        == {json.dumps(r, sort_keys=True) for r in rows}
