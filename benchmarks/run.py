@@ -93,20 +93,25 @@ def main() -> None:
         ap.error("--scenario replaces the suite list; it cannot be "
                  "combined with --only")
     if args.scenario:
-        # scenario routing replaces the suite list: one registry-defined
-        # (bench x ratio x eviction x prefetcher) matrix, resumable;
-        # oversub_bench's own --emit-json writes the row-level JSON (the
-        # per-suite wall-clock doc below is still written when asked)
-        scenario_argv = ["--scenario", args.scenario]
-        if args.emit_json:
-            scenario_argv += ["--emit-json",
-                              args.emit_json + ".rows.json"]
-        # serve-* scenarios route through serve_bench so the printed
-        # table carries the SLO latency columns
-        module = (serve_bench if args.scenario.startswith("serve")
-                  else oversub_bench)
-        suites = [(f"scenario:{args.scenario}",
-                   lambda: module.main(scenario_argv))]
+        # scenario routing replaces the suite list: each name is a
+        # registry-defined (bench x ratio x eviction x prefetcher) matrix,
+        # resumable; oversub_bench's own --emit-json writes the row-level
+        # JSON (the per-suite wall-clock doc below is still written when
+        # asked).  Comma lists run several matrices as separate suites —
+        # module/argv are bound per iteration via default args so the
+        # closures don't all collapse onto the last scenario.
+        suites = []
+        for scen in args.scenario.split(","):
+            scenario_argv = ["--scenario", scen]
+            if args.emit_json:
+                scenario_argv += ["--emit-json",
+                                  f"{args.emit_json}.{scen}.rows.json"]
+            # serve-* scenarios route through serve_bench so the printed
+            # table carries the SLO latency columns
+            module = (serve_bench if scen.startswith("serve")
+                      else oversub_bench)
+            suites.append((f"scenario:{scen}",
+                           lambda m=module, a=scenario_argv: m.main(a)))
         only = None
 
     t_start = time.time()

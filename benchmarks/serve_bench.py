@@ -29,7 +29,8 @@ import argparse
 import json
 from typing import Dict, List, Optional
 
-from benchmarks.common import (QUICK, SWEEP_BACKEND, print_table, uvm_sweep)
+from benchmarks import common
+from benchmarks.common import QUICK, print_table, uvm_sweep
 from repro.uvm.eviction import EVICTION_POLICIES
 from repro.uvm.sweep import SWEEP_VERSION, SweepCell
 
@@ -63,10 +64,13 @@ def run() -> List[Dict]:
                 for pf in PREFETCHERS:
                     # serve traces are never window-split: the decode-step
                     # bounds behind the latency columns must stay aligned
+                    # common.SWEEP_BACKEND read at call time, not import
+                    # time, so run.py --backend reaches scenario suites
                     cells.append(SweepCell(
                         bench=bench, prefetcher=pf, scale=SCALE,
                         window=None, device_frac=ratio, eviction=ev,
-                        engine="vectorized", backend=SWEEP_BACKEND))
+                        engine="vectorized",
+                        backend=common.SWEEP_BACKEND))
                     tags.append((bench, ratio, ev, pf))
     rows = []
     for (bench, ratio, ev, pf), r in zip(tags, uvm_sweep(cells)):
@@ -91,7 +95,7 @@ def run_scenario(name: str) -> List[Dict]:
     from repro.uvm.scenarios import expand_scenario
 
     cells = expand_scenario(name, engine="vectorized",
-                            backend=SWEEP_BACKEND)
+                            backend=common.SWEEP_BACKEND)
     return uvm_sweep(cells)
 
 

@@ -96,7 +96,13 @@ for r in rows:
     assert (r["decode_lat_p50_us"] <= r["decode_lat_p95_us"]
             <= r["decode_lat_p99_us"]), r["bench"]
     assert r["ttft_p50_us"] <= r["ttft_p95_us"] <= r["ttft_p99_us"], r["bench"]
-print(f"[ci] serve smoke ok: {len(rows)} rows, policies {sorted(policies)}")
+# lane rows must take the in-kernel step-clock path: a "side-pass" here
+# means the pre-PR-8 double replay (lane kernel + full NumPy shadow pass
+# per serve row) silently came back
+side = [r["bench"] for r in rows if r.get("slo_source") != "kernel"]
+assert not side, f"lane rows fell back to the side-pass SLO path: {side}"
+print(f"[ci] serve smoke ok: {len(rows)} rows, policies {sorted(policies)}, "
+      f"all SLO columns from in-kernel step clocks")
 PYEOF
 rm -rf "$SRV_OUT"
 
@@ -122,5 +128,23 @@ print(f"[ci] chaos smoke ok: {report['cells']} cells byte-identical after "
       f"{report['retries']} retries")
 PYEOF
 rm -rf "$CHAOS_OUT"
+
+echo "[ci] perf trajectory: lane_bench + benchmarks.run smoke scenarios vs"
+echo "[ci] the committed BENCH_lanes.json / BENCH_sweep.json baselines"
+echo "[ci] (REPRO_BENCH_TOL fractional timing slack, 0 disables the"
+echo "[ci] timing gate; row-key schema drift and counter drift always fail)"
+# CI boxes are noisier than the dev host the baselines were recorded on:
+# default to 2x slack here unless the operator pins a tighter gate
+export REPRO_BENCH_TOL="${REPRO_BENCH_TOL:-1.0}"
+BENCH_TMP="$(mktemp -d "${TMPDIR:-/tmp}/ci_bench.XXXXXX")"
+JAX_PLATFORMS=cpu python -m benchmarks.lane_bench \
+    --emit-json "$BENCH_TMP/lanes.json"
+python scripts/check_bench.py BENCH_lanes.json "$BENCH_TMP/lanes.json"
+# fresh sweep-cell cache so the timings measure real replays, not resume
+REPRO_SWEEP_CACHE_DIR="$BENCH_TMP/sweep_cache" JAX_PLATFORMS=cpu \
+    python -m benchmarks.run --scenario serve-smoke,oversub-smoke \
+    --emit-json "$BENCH_TMP/sweep.json"
+python scripts/check_bench.py BENCH_sweep.json "$BENCH_TMP/sweep.json"
+rm -rf "$BENCH_TMP"
 
 echo "[ci] OK"

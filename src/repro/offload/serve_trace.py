@@ -394,7 +394,8 @@ def trace_step_bounds(trace: Trace) -> np.ndarray:
     """Per-decode-step access boundaries: ``bounds[k]`` = number of
     accesses in steps 0..k (an exclusive end index; empty steps repeat
     the previous bound).  Feed to ``ReplayRequest.step_bounds`` to get
-    per-step completion clocks from the legacy/numpy backends."""
+    per-step completion clocks from any backend (host-side on
+    legacy/numpy, in-kernel on the pallas lanes)."""
     sv = _serve_sidecar(trace)
     kern = np.asarray(trace.accesses["kernel"], dtype=np.int64)
     bounds = np.searchsorted(kern, np.arange(int(sv["n_steps"])),

@@ -77,7 +77,10 @@ layout here are already shaped for that (see ``README.md``).
 from __future__ import annotations
 
 import functools
+import hashlib
 import os
+import pickle
+import threading
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -132,6 +135,13 @@ MAX_ORACLE_LOOKAHEAD = 512
 #: the legacy OraclePrefetcher emits at most 16 extras per callback
 ORACLE_MAX_EXTRAS = 16
 
+#: per-lane step-clock window ceiling (``ReplayRequest.step_bounds``):
+#: the per-step segment-max carry is ``steps_len + 1`` float64 per lane,
+#: so absurd window counts fall back to the NumPy path instead of
+#: bloating the batch (serve traces are bounded well below this by
+#: ``repro.offload.serve_trace.MAX_SERVE_STEPS``)
+MAX_LANE_STEPS = 1 << 16
+
 _N_FPARAMS = 8       # cpa, page_tx, far_fault, ptw, pcie_lat, pfo, extra, page_size
 _N_IPARAMS = 6       # n_accesses, device_pages(-1=uncapped), mshr, has_block,
 #                      n_ft, lane-lo mod 2^32 (random-policy priority draws)
@@ -180,7 +190,7 @@ def _bucket(n: int, floor: int) -> int:
 @functools.lru_cache(maxsize=None)
 def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                     span: int, buf_len: int, ft_len: int, lookahead: int,
-                    interpret: bool):
+                    steps_len: int, interpret: bool):
     """Build (and cache) the jitted multi-lane replay for one batch shape.
 
     ``family`` is the kernel kind (demand/tree/learned/oracle); ``ft_len``
@@ -189,6 +199,17 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
     (a batch is policy-homogeneous: the victim-selection code and the
     extra per-lane carry — ``random`` priority draws, ``hotcold``
     frequency counts — are static kernel structure).
+
+    ``steps_len > 0`` enables in-kernel step-clock capture
+    (``ReplayRequest.step_bounds``): each access carries its window id in
+    an extra int32 input stream, and a ``steps_len + 1`` float64 carry
+    records the post-access clock per window (the last write of a window
+    is the clock after its last access — exactly the legacy recording
+    point).  Slot ``steps_len`` is a trash slot for accesses past the
+    last bound and for no-bounds lanes of a mixed batch.  The clock
+    chain itself is untouched, so stats stay bit-identical with capture
+    on; ``steps_len == 0`` builds the exact pre-capture kernel (no extra
+    input, single output).
     """
     import jax
     import jax.numpy as jnp
@@ -227,13 +248,20 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
     # indices never land on a real page.  The slot reads as resident
     # (arrival 0.0) and is never the LRU victim (stamp pinned at IMAX).
     state_len = span + 1 if family == "oracle" else span
-    n_inputs = {"demand": 3, "tree": 3, "learned": 4, "oracle": 5}[family]
+    n_inputs = ({"demand": 3, "tree": 3, "learned": 4, "oracle": 5}[family]
+                + (1 if steps_len else 0))
 
     def kernel(*refs):
         pages_ref = refs[0]
         fparams_ref = refs[n_inputs - 2]
         iparams_ref = refs[n_inputs - 1]
-        out_ref = refs[-1]
+        out_ref = refs[n_inputs]
+        if steps_len:
+            # the per-access window-id stream rides just before the
+            # parameter blocks; the per-window clock carry drains into a
+            # second output block
+            sids = refs[n_inputs - 3][0]
+            steps_out_ref = refs[n_inputs + 1]
         INF = jnp.float64(jnp.inf)
         IMAX = jnp.int32(IMAX_NP)
         pages = pages_ref[0]
@@ -592,6 +620,12 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
             buf = buf.at[mi].set(jnp.where(pop, INF, buf[mi]))
             nbuf = nbuf - pop.astype(i32)
 
+            if steps_len:
+                # the clock is final for this access here (eviction below
+                # never moves it), so the window slot ends up holding the
+                # clock after its last access — the legacy recording point
+                steps = s["steps"].at[sids[t]].set(clock)
+
             # eviction under oversubscription: the policy picks the victim
             # (lru = min touch stamp, exact OrderedDict order; random =
             # min insert-time priority draw; hotcold = min (freq, stamp));
@@ -675,6 +709,8 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                 out["freq"] = ecarry["freq"]
             if randomp:
                 out["prio"] = prio
+            if steps_len:
+                out["steps"] = steps
             return out
 
         zero = jnp.int32(0)
@@ -703,6 +739,10 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
             init["freq"] = jnp.zeros((state_len,), dtype=i32)
         if randomp:
             init["prio"] = jnp.zeros((state_len,), dtype=u32)
+        if steps_len:
+            # +1 trash slot: accesses past the last bound (and no-bounds
+            # lanes of a mixed batch) scatter there instead of a window
+            init["steps"] = jnp.zeros((steps_len + 1,), dtype=jnp.float64)
         final = jax.lax.fori_loop(0, n, step, init)
 
         # drain: every outstanding stall resolves (max over the buffer is
@@ -712,6 +752,8 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
         clock = jnp.where(final["nbuf"] > 0,
                           jnp.maximum(final["clock"], tail), final["clock"])
 
+        if steps_len:
+            steps_out_ref[0, :] = final["steps"][:steps_len]
         out_ref[0, 0] = clock
         out_ref[0, 1] = final["hits"].astype(jnp.float64)
         out_ref[0, 2] = final["late"].astype(jnp.float64)
@@ -729,18 +771,130 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
     if family == "oracle":
         in_specs.append(pl.BlockSpec((1, ft_len), lambda l: (l, 0)))
         in_specs.append(pl.BlockSpec((1, t_max), lambda l: (l, 0)))
+    if steps_len:
+        in_specs.append(pl.BlockSpec((1, t_max), lambda l: (l, 0)))
     in_specs += [pl.BlockSpec((1, _N_FPARAMS), lambda l: (l, 0)),
                  pl.BlockSpec((1, _N_IPARAMS), lambda l: (l, 0))]
+    out_specs = pl.BlockSpec((1, len(STAT_FIELDS)), lambda l: (l, 0))
+    out_shape = jax.ShapeDtypeStruct((n_lanes, len(STAT_FIELDS)),
+                                     jnp.float64)
+    if steps_len:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, steps_len), lambda l: (l, 0))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((n_lanes, steps_len),
+                                          jnp.float64)]
     call = pl.pallas_call(
         kernel,
         grid=(n_lanes,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, len(STAT_FIELDS)), lambda l: (l, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_lanes, len(STAT_FIELDS)),
-                                       jnp.float64),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )
     return jax.jit(call)
+
+
+#: executable-cache format version: bump when the serialized layout or
+#: the kernel calling convention changes incompatibly
+_KERNEL_CACHE_SCHEMA = 1
+
+
+def _kernel_cache_dir() -> Optional[str]:
+    """Directory of the on-disk lane-executable cache, or None when
+    disabled (``REPRO_KERNEL_CACHE=0``/``off``).  Defaults to a per-user
+    cache dir so every sweep process on a host shares warm kernels."""
+    env = os.environ.get("REPRO_KERNEL_CACHE")
+    if env is not None:
+        if env.strip().lower() in ("", "0", "off"):
+            return None
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache",
+                        "repro-lane-kernels")
+
+
+@functools.lru_cache(maxsize=1)
+def _kernel_src_tag() -> str:
+    """Hash of this module's source: kernel code changes must never be
+    served a stale executable, even without a schema bump."""
+    try:
+        with open(__file__, "rb") as fh:
+            return hashlib.sha256(fh.read()).hexdigest()[:16]
+    except OSError:  # pragma: no cover - frozen/zipped installs
+        return "unknown"
+
+
+def _kernel_cache_path(cache_dir: str, key: Tuple) -> str:
+    import jax
+    tag = hashlib.sha256(
+        repr((_KERNEL_CACHE_SCHEMA, jax.__version__, _kernel_src_tag(),
+              key)).encode()
+    ).hexdigest()[:32]
+    return os.path.join(cache_dir, f"lane_{key[0]}_{key[1]}_{tag}.jaxexec")
+
+
+@functools.lru_cache(maxsize=None)
+def _lane_replay_exec(family: str, policy: str, n_lanes: int, t_max: int,
+                      span: int, buf_len: int, ft_len: int, lookahead: int,
+                      steps_len: int, interpret: bool):
+    """Compiled lane executable for one batch shape, loaded from the
+    on-disk kernel cache when possible.
+
+    On CPU hosts the dominant cold-start cost of a sweep process is not
+    running the lane kernels but *building* them — pallas tracing, XLA
+    lowering, and compilation are a sizable fraction of an entire
+    serve-smoke sweep.  The first process to need a batch shape builds
+    it and serializes the compiled executable
+    (``jax.experimental.serialize_executable``) next to the trace cache;
+    every later process deserializes in milliseconds and skips straight
+    to execution.  Entries are keyed by the full kernel shape, the cache
+    schema, and the jax version; any load failure (stale jax, corrupt
+    file, foreign platform) silently falls back to a fresh build, and
+    writes go through the crash-safe tmp + ``os.replace`` idiom so a
+    killed sweep never publishes a torn executable.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    key = (family, policy, n_lanes, t_max, span, buf_len, ft_len,
+           lookahead, steps_len, interpret)
+    cache_dir = _kernel_cache_dir()
+    path = _kernel_cache_path(cache_dir, key) if cache_dir else None
+    if path is not None and os.path.exists(path):
+        try:
+            from jax.experimental.serialize_executable import (
+                deserialize_and_load)
+            with open(path, "rb") as fh:
+                payload, in_tree, out_tree = pickle.load(fh)
+            return deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:
+            pass                   # stale or torn entry: rebuild below
+    fn = _lane_replay_fn(*key)
+    i32 = jnp.dtype("int32")
+    arg_shapes = [jax.ShapeDtypeStruct((n_lanes, t_max), i32)]  # pages
+    if family == "learned":
+        arg_shapes.append(jax.ShapeDtypeStruct((n_lanes, t_max), i32))
+    if family == "oracle":
+        arg_shapes.append(jax.ShapeDtypeStruct((n_lanes, ft_len), i32))
+        arg_shapes.append(jax.ShapeDtypeStruct((n_lanes, t_max), i32))
+    if steps_len:
+        arg_shapes.append(jax.ShapeDtypeStruct((n_lanes, t_max), i32))
+    arg_shapes.append(jax.ShapeDtypeStruct((n_lanes, _N_FPARAMS),
+                                           jnp.dtype("float64")))
+    arg_shapes.append(jax.ShapeDtypeStruct((n_lanes, _N_IPARAMS), i32))
+    compiled = fn.lower(*arg_shapes).compile()
+    if path is not None:
+        try:
+            from jax.experimental.serialize_executable import serialize
+            payload, in_tree, out_tree = serialize(compiled)
+            os.makedirs(cache_dir, exist_ok=True)
+            tmp = f"{path}.{os.getpid()}.{threading.get_ident()}.tmp"
+            with open(tmp, "wb") as fh:
+                pickle.dump((payload, in_tree, out_tree), fh)
+            os.replace(tmp, path)
+        except Exception:
+            pass                   # caching is best-effort, never fatal
+    return compiled
 
 
 def _lane_shape(request: ReplayRequest) -> Tuple[str, str, int, int]:
@@ -790,7 +944,15 @@ class PallasReplayBackend(ReplayBackend):
         if request.record_timeline:
             return False          # per-transfer timelines stay host-side
         if request.step_bounds is not None:
-            return False          # per-step clock capture stays host-side
+            # per-step clocks are captured in-kernel (a per-window f64
+            # carry keyed by an access->window id stream); malformed or
+            # oversized bounds fall back to the host-side backends, whose
+            # validation raises the canonical ValueError
+            sb = np.asarray(request.step_bounds, dtype=np.int64)
+            if (sb.ndim != 1 or sb.size == 0 or sb.size > MAX_LANE_STEPS
+                    or np.any(np.diff(sb) < 0) or sb[0] < 0
+                    or sb[-1] > len(request.trace.pages)):
+                return False
         n = len(request.trace.pages)
         if n == 0 or n > _FAMILY_MAX_ACCESSES[kind]:
             return False          # int32 stamp/counter headroom (above)
@@ -901,6 +1063,10 @@ class PallasReplayBackend(ReplayBackend):
         if kind == "oracle":
             ft_len = _bucket(max(len(r.prefetcher.ft_pages)
                                  for r in requests), 64) + lookahead
+        step_sizes = [0 if r.step_bounds is None
+                      else int(np.asarray(r.step_bounds).size)
+                      for r in requests]
+        steps_len = _bucket(max(step_sizes), 64) if any(step_sizes) else 0
 
         pages = np.zeros((n_lanes, t_max), dtype=np.int32)
         fparams = np.zeros((n_lanes, _N_FPARAMS), dtype=np.float64)
@@ -915,6 +1081,9 @@ class PallasReplayBackend(ReplayBackend):
             ft_in = np.full((n_lanes, ft_len), span, dtype=np.int32)
             pos_in = np.zeros((n_lanes, t_max), dtype=np.int32)
             extra_in = [ft_in, pos_in]
+        if steps_len:
+            sids_in = np.zeros((n_lanes, t_max), dtype=np.int32)
+            extra_in = extra_in + [sids_in]
         for l, req in enumerate(requests):
             trace, cfg, pf = req.trace, req.config, req.prefetcher
             pf.reset()
@@ -949,12 +1118,24 @@ class PallasReplayBackend(ReplayBackend):
                 pos_in[l, :n] = np.searchsorted(
                     pf.ft_index, np.arange(n), side="right")
                 iparams[l, 4] = len(ftp)
+            if steps_len and req.step_bounds is not None:
+                sb = np.asarray(req.step_bounds, dtype=np.int64)
+                # window id per access; accesses past the last bound go
+                # to the trash slot ``steps_len``
+                sid = np.searchsorted(sb, np.arange(n), side="right")
+                sids_in[l, :n] = np.where(sid >= sb.size, steps_len,
+                                          sid).astype(np.int32)
 
         interpret = _interpret_mode()
         with enable_x64():
-            fn = _lane_replay_fn(kind, policy, n_lanes, t_max, span,
-                                 buf_len, ft_len, lookahead, interpret)
-            raw = np.asarray(fn(pages, *extra_in, fparams, iparams))
+            fn = _lane_replay_exec(kind, policy, n_lanes, t_max, span,
+                                   buf_len, ft_len, lookahead, steps_len,
+                                   interpret)
+            raw = fn(pages, *extra_in, fparams, iparams)
+        if steps_len:
+            raw, raw_steps = (np.asarray(raw[0]), np.asarray(raw[1]))
+        else:
+            raw = np.asarray(raw)
 
         out = []
         for l, req in enumerate(requests):
@@ -978,8 +1159,30 @@ class PallasReplayBackend(ReplayBackend):
                 eviction=req.config.eviction,
             )
             stats.backend = self.name
+            if steps_len and req.step_bounds is not None:
+                stats.step_clocks = _fill_step_clocks(
+                    np.asarray(req.step_bounds, dtype=np.int64),
+                    raw_steps[l])
             out.append(stats)
         return out
+
+
+def _fill_step_clocks(bounds: np.ndarray, lane_steps: np.ndarray
+                      ) -> np.ndarray:
+    """Kernel per-window clock maxima -> ``UVMStats.step_clocks``.
+
+    The kernel only writes windows that own at least one access, so empty
+    windows (duplicate bounds) forward-fill from the previous non-empty
+    window and leading empty windows end at clock 0.0 — the exact
+    semantics of the legacy/numpy recording loop (``replay_chunked``),
+    which writes the then-current clock as it crosses duplicate bounds.
+    """
+    n_steps = bounds.size
+    vals = np.asarray(lane_steps[:n_steps], dtype=np.float64)
+    sizes = np.diff(np.concatenate([[0], bounds]))
+    idx = np.where(sizes > 0, np.arange(n_steps), -1)
+    idx = np.maximum.accumulate(idx)
+    return np.where(idx >= 0, vals[np.maximum(idx, 0)], 0.0)
 
 
 def _interpret_mode() -> bool:

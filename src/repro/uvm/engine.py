@@ -67,9 +67,9 @@ def simulate(trace: Trace, prefetcher: Prefetcher,
     down the chain — the returned ``UVMStats.backend`` names the one that
     actually ran, so silent fallbacks are visible to callers.
     ``step_bounds`` requests per-window completion clocks
-    (``UVMStats.step_clocks``; see ``ReplayRequest.step_bounds``) — the
-    pallas lanes decline such requests, so the chain lands on a host-side
-    backend that records them.
+    (``UVMStats.step_clocks``; see ``ReplayRequest.step_bounds``) —
+    every backend honors them bit-identically (the pallas lanes capture
+    the clocks in-kernel).
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")

@@ -110,9 +110,10 @@ class ReplayRequest:
     #: optional non-decreasing exclusive end indices into the access
     #: stream: the replay records the clock after the last access of each
     #: window in ``UVMStats.step_clocks`` (serving traces use decode-step
-    #: boundaries here — see ``repro.offload.serve_trace``).  Host-side
-    #: backends (legacy/numpy) honor it bit-identically; the pallas lanes
-    #: decline such requests in ``can_replay``.
+    #: boundaries here — see ``repro.offload.serve_trace``).  All
+    #: backends honor it bit-identically: legacy/numpy record host-side,
+    #: the pallas lanes capture the clocks in-kernel (a per-window f64
+    #: carry keyed by an access->window id stream).
     step_bounds: Optional[np.ndarray] = None
 
 

@@ -114,6 +114,7 @@ model"):
 from __future__ import annotations
 
 import argparse
+import collections
 import csv
 import dataclasses
 import functools
@@ -122,8 +123,10 @@ import json
 import multiprocessing
 import os
 import sys
+import threading
 import time
 import warnings
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -155,10 +158,11 @@ BACKENDS = ("auto", "numpy", "pallas")
 #: bump on any intentional change to the timing model, trace generators,
 #: prediction pipeline, or row schema — invalidates persisted sweep cells
 #: and cached traces so a resumed sweep never mixes pre- and post-change
-#: numbers (v6: crash-safe persistence — cell files are checksummed
-#: ``{_v, sha256, row}`` envelopes, cached traces embed a content sha,
-#: and rows carry ``retries``/``quarantined`` columns)
-SWEEP_VERSION = 6
+#: numbers (v7: serve rows carry ``slo_source`` — ``kernel`` when the
+#: replay that ran the cell emitted its step clocks in-band, including
+#: the pallas lanes' in-kernel capture; ``side-pass`` when a separate
+#: NumPy replay recovered them)
+SWEEP_VERSION = 7
 
 #: serving SLO columns (``repro.offload.serve_trace``): per-decode-step
 #: latency and time-to-first-token percentiles, None on non-serve rows
@@ -178,7 +182,7 @@ ROW_FIELDS = [
     "backend", "n_accesses", "n_instructions",
     "cycles", "ipc", "hits", "late", "faults", "hit_rate", "prefetch_issued",
     "prefetch_used", "accuracy", "coverage", "unity", "pages_migrated",
-    "pages_evicted", "pcie_bytes", *SERVE_LATENCY_FIELDS,
+    "pages_evicted", "pcie_bytes", *SERVE_LATENCY_FIELDS, "slo_source",
     "retries", "quarantined", "seconds",
 ]
 
@@ -273,6 +277,73 @@ def quarantine_artifact(path: str, reason: str) -> None:
         pass
 
 
+class _TraceMemo:
+    """Bounded in-process LRU over deserialized (and checksum-verified)
+    traces, keyed by the full trace identity (bench, scale, seed, window,
+    cache_dir).
+
+    Co-scheduled cells sharing a trace — 24 serve-smoke cells ride on 4
+    distinct traces — hit the memo instead of re-opening and re-hashing
+    the npz cache file per cell: the checksum is verified **once per
+    (path, sha)** within a process, and the PR 7 quarantine path is
+    untouched for cold reads (a fresh process reading a corrupted file
+    still quarantines + regenerates).  Thread-safe: the lane scheduler's
+    prepare stage runs in a thread pool.  ``REPRO_TRACE_MEMO`` overrides
+    the entry bound (0 disables the memo entirely).
+    """
+
+    def __init__(self, maxsize: int = 32):
+        self.maxsize = maxsize
+        self._lock = threading.Lock()
+        self._data: "collections.OrderedDict[Tuple, Trace]" = \
+            collections.OrderedDict()
+
+    def _bound(self) -> int:
+        try:
+            return int(os.environ.get("REPRO_TRACE_MEMO", self.maxsize))
+        except ValueError:
+            return self.maxsize
+
+    def get(self, key: Tuple) -> Optional[Trace]:
+        if self._bound() <= 0:
+            return None
+        with self._lock:
+            trace = self._data.pop(key, None)
+            if trace is not None:
+                self._data[key] = trace       # refresh LRU position
+            return trace
+
+    def put(self, key: Tuple, trace: Trace) -> None:
+        bound = self._bound()
+        if bound <= 0:
+            return
+        with self._lock:
+            self._data[key] = trace
+            self._data.move_to_end(key)
+            while len(self._data) > bound:
+                self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._data.clear()
+
+
+#: process-wide trace memo (worker processes each build their own)
+_trace_memo = _TraceMemo()
+
+#: single-flight guard: concurrent prepare-stage threads asking for the
+#: same trace must resolve to ONE generate/deserialize/checksum, with the
+#: others blocking on the winner's memo write instead of racing on the
+#: cache file
+_trace_flight_guard = threading.Lock()
+_trace_flights: Dict[Tuple, threading.Lock] = {}
+
+
+def _trace_flight(key: Tuple) -> threading.Lock:
+    with _trace_flight_guard:
+        return _trace_flights.setdefault(key, threading.Lock())
+
+
 def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
                window: Optional[float] = 0.6,
                cache_dir: Optional[str] = None) -> Trace:
@@ -290,7 +361,28 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
     generator instead of the GPU model; serve traces are never
     window-split (the split would desynchronize the decode-step bounds
     their latency columns derive from).
+
+    Loads are memoized in-process (:class:`_TraceMemo`): cells sharing a
+    trace deserialize and checksum it once, not once per cell, and
+    concurrent prepare-stage threads single-flight on the key instead of
+    generating the same trace twice.
     """
+    memo_key = (bench, scale, seed, window, cache_dir)
+    memoized = _trace_memo.get(memo_key)
+    if memoized is not None:
+        return memoized
+    with _trace_flight(memo_key):
+        memoized = _trace_memo.get(memo_key)    # the winner filled it
+        if memoized is not None:
+            return memoized
+        trace = _load_trace_uncached(bench, scale, seed, window, cache_dir)
+        _trace_memo.put(memo_key, trace)
+        return trace
+
+
+def _load_trace_uncached(bench: str, scale: float, seed: int,
+                         window: Optional[float],
+                         cache_dir: Optional[str]) -> Trace:
     trace = None
     path = None
     if cache_dir:
@@ -336,7 +428,7 @@ def load_trace(bench: str, scale: float = 1.0, seed: int = 0,
                 "n_instructions": trace.n_instructions,
                 "meta": trace.meta,
             })
-            tmp = path + f".{os.getpid()}.tmp.npz"
+            tmp = path + f".{os.getpid()}.{threading.get_ident()}.tmp.npz"
             np.savez(tmp, accesses=trace.accesses, meta=np.array(meta),
                      sha=np.array(_trace_digest(trace.accesses, meta)))
             os.replace(tmp, path)
@@ -427,6 +519,7 @@ def _finish_row(cell: SweepCell, stats: UVMStats,
     )
     for f in SERVE_LATENCY_FIELDS:
         row.setdefault(f, None)      # filled on serve rows, None otherwise
+    row.setdefault("slo_source", None)
     if record_timeline and stats.timeline is not None:
         row["timeline"] = stats.timeline.tolist()
     return row
@@ -440,37 +533,61 @@ def _serve_step_bounds(trace: Trace) -> Optional[np.ndarray]:
     return None
 
 
+def _serve_side_pass(cell: SweepCell, trace: Trace, config: UVMConfig,
+                     stats: UVMStats, bounds: np.ndarray,
+                     cache_dir: Optional[str]) -> np.ndarray:
+    """NumPy side-pass replay recovering a serve row's step clocks, with
+    a built-in differential check: its integer counters must match the
+    primary row exactly, whatever backend produced it."""
+    pf = make_prefetcher(cell, trace, config, cache_dir=cache_dir)
+    req = ReplayRequest(trace, pf, config, step_bounds=bounds)
+    check = get_backend("numpy").replay([req])[0]
+    for f in ("hits", "late", "faults", "prefetch_issued",
+              "prefetch_used", "pages_migrated", "pages_evicted"):
+        if getattr(check, f) != getattr(stats, f):
+            raise AssertionError(
+                f"serve step-clock side pass disagrees with the "
+                f"{stats.backend} row on {f}: {getattr(check, f)} != "
+                f"{getattr(stats, f)} "
+                f"({cell.bench}/{cell.prefetcher}/{cell.eviction})")
+    return check.step_clocks
+
+
 def _serve_latency_row(cell: SweepCell, trace: Trace, config: UVMConfig,
                        stats: UVMStats,
                        cache_dir: Optional[str]) -> Dict:
     """The serving SLO columns for one serve-trace row.
 
-    When the replay already recorded ``step_clocks`` (host-side backends
-    honoring ``step_bounds``), they are used directly.  Lane-batched rows
-    (pallas) have none — the step clocks are derived by a NumPy side pass
-    with a fresh prefetcher, whose integer counters must match the lane
-    row exactly: the side pass doubles as a built-in per-row differential
-    check on the experimental backend.
+    Every backend now records ``step_clocks`` in-band (legacy/numpy
+    host-side, the pallas lanes in-kernel), so the normal path is pure
+    percentile math over the clocks the primary replay already produced
+    — ``slo_source="kernel"``.  The NumPy side pass of PR 6 survives in
+    two demoted roles: a fallback when a row somehow arrives without
+    clocks (``slo_source="side-pass"``), and an opt-in differential
+    check (``REPRO_SERVE_CHECK=1``) that re-replays the cell host-side
+    and requires counters AND clocks to match bit-for-bit.
     """
     from repro.offload.serve_trace import (serve_latency_columns,
                                            trace_step_bounds)
 
     bounds = trace_step_bounds(trace)
     clocks = stats.step_clocks
+    source = "kernel"
     if clocks is None or len(clocks) != len(bounds):
-        pf = make_prefetcher(cell, trace, config, cache_dir=cache_dir)
-        req = ReplayRequest(trace, pf, config, step_bounds=bounds)
-        check = get_backend("numpy").replay([req])[0]
-        for f in ("hits", "late", "faults", "prefetch_issued",
-                  "prefetch_used", "pages_migrated", "pages_evicted"):
-            if getattr(check, f) != getattr(stats, f):
-                raise AssertionError(
-                    f"serve step-clock side pass disagrees with the "
-                    f"{stats.backend} row on {f}: {getattr(check, f)} != "
-                    f"{getattr(stats, f)} "
-                    f"({cell.bench}/{cell.prefetcher}/{cell.eviction})")
-        clocks = check.step_clocks
-    return serve_latency_columns(trace, clocks, config)
+        clocks = _serve_side_pass(cell, trace, config, stats, bounds,
+                                  cache_dir)
+        source = "side-pass"
+    elif os.environ.get("REPRO_SERVE_CHECK", "0") == "1":
+        check = _serve_side_pass(cell, trace, config, stats, bounds,
+                                 cache_dir)
+        if not np.array_equal(np.asarray(clocks), np.asarray(check)):
+            raise AssertionError(
+                f"in-band step clocks of the {stats.backend} row diverge "
+                f"from the NumPy side pass "
+                f"({cell.bench}/{cell.prefetcher}/{cell.eviction})")
+    row = serve_latency_columns(trace, clocks, config)
+    row["slo_source"] = source
+    return row
 
 
 def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
@@ -484,8 +601,8 @@ def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
     trace, config, prefetcher, device_pages = prepare_cell(
         cell, cache_dir=cache_dir, trace=trace, prefetcher=prefetcher)
     # serve traces carry decode-step bounds into the replay so the row
-    # gets per-step clocks in one pass (the pallas lanes decline bounds
-    # requests, so the chain lands on a host-side backend here)
+    # gets per-step clocks in one pass, whichever backend runs it (the
+    # pallas lanes capture them in-kernel)
     step_bounds = _serve_step_bounds(trace)
     stats = simulate(trace, prefetcher, config, engine=cell.engine,
                      backend=cell.backend, record_timeline=record_timeline,
@@ -916,16 +1033,44 @@ def _run_lane_batches(cells: Sequence[SweepCell],
     lane.  Cells are visited family-by-family (lane batches must be
     family-homogeneous — ``fits_batch`` refuses to co-bucket two
     prefetcher families, so interleaved families would flush half-empty
-    batches), and batches are built incrementally and flushed as soon as
-    the backend's shape budgets fill, so at most one batch of traces is
-    resident at a time — whole-grid scheduling never materializes every
-    trace at once.  Cells the backend declines (span too large, empty
-    trace, ...) are left out of the result and flow back to the per-cell
-    pool path, which re-reads their traces from the on-disk cache and
-    keeps the ``--workers`` fan-out for them.  A runtime failure of a
-    lane batch (experimental-backend lowering faults) degrades its cells
-    to the NumPy path inline, with a warning; their rows record the
-    backend that actually ran.
+    batches).
+
+    Execution is a **pipeline** of overlapping stages (diagrammed in
+    ``repro/uvm/backends/README.md``, "Sweep pipeline"):
+
+    * *prepare* — trace generation/deserialization and predcache
+      inference run in a small thread pool a bounded lookahead window
+      ahead of the batcher (``REPRO_SWEEP_PREP_THREADS`` /
+      ``REPRO_SWEEP_PREP_WINDOW``); the trace memo means co-scheduled
+      cells sharing a trace resolve to one deserialize + one checksum.
+    * *pack* — the main thread consumes prepared cells **in scheduler
+      order** (results stay deterministic) and packs lanes under
+      ``fits_batch``'s budgets, exactly as before.
+    * *flush* — each full batch replays on a small flush pool while the
+      main thread packs the next one.  At most ``REPRO_SWEEP_FLUSH_THREADS``
+      batches (default 2 — independent policy/family batches parallelize
+      across cores, XLA releases the GIL) are in flight plus one being
+      packed, so batch residency stays O(1) and the whole grid is never
+      materialized — the bounded-memory property of the serial scheduler
+      survives (set the knob to 1 for strict one-in-flight residency),
+      shrunk further by the trace memo sharing Trace objects across
+      lanes.
+
+    Serve cells carry their decode-step bounds into the lane request, so
+    the kernel emits per-step clocks in-band and the row's SLO columns
+    are pure percentile math (``slo_source="kernel"``) — no NumPy
+    side-pass replay unless ``REPRO_SERVE_CHECK=1`` asks for the
+    differential check.
+
+    Cells the backend declines (span too large, empty trace, ...) are
+    left out of the result and flow back to the per-cell pool path,
+    which keeps the ``--workers`` fan-out for them.  A runtime failure
+    of a lane batch (experimental-backend lowering faults) degrades its
+    cells to the NumPy path inline, with a warning; their rows record
+    the backend that actually ran.  A ``TransientBackendFault``
+    propagates out of the flush future and aborts the scheduler — the
+    PR 7 contract (crash the driver, retry on the same backend after
+    resume) is preserved across the thread boundary.
     """
     from repro.uvm.backends.pallas_backend import _lane_shape
 
@@ -934,20 +1079,17 @@ def _run_lane_batches(cells: Sequence[SweepCell],
     batch: List[int] = []
     requests: List[ReplayRequest] = []
     caps: List[Optional[int]] = []
-    # (family, length, span) per queued lane — the family element is what
-    # makes fits_batch refuse to co-bucket two prefetcher families
-    shapes: List[Tuple[str, int, int]] = []
+    # (family, policy, length, span) per queued lane — the family/policy
+    # elements make fits_batch refuse to co-bucket families or policies
+    shapes: List[Tuple[str, str, int, int]] = []
 
-    def _flush() -> None:
-        if not batch:
-            return
-        if verbose:
-            print(f"[sweep] pallas lanes: replaying {len(batch)} cells "
-                  "in one batch", flush=True)
-        faults.fire("lane.flush", f"{len(batch)}:{cells[batch[0]].key()}")
+    def _replay_batch_rows(b: List[int], reqs: List[ReplayRequest],
+                           cps: List[Optional[int]]) -> Dict[int, Dict]:
+        """Flush-stage body (runs on the flush thread): replay one packed
+        batch and assemble its rows."""
         t0 = time.time()
         try:
-            stats = backend.replay(list(requests))
+            stats = backend.replay(list(reqs))
         except TransientBackendFault:
             # retryable by contract: degrading would permanently change
             # the rows' backend column, so let the driver crash and the
@@ -957,16 +1099,37 @@ def _run_lane_batches(cells: Sequence[SweepCell],
             warnings.warn(f"pallas lane batch failed at runtime ({e!r}); "
                           "replaying the affected cells on the NumPy path",
                           RuntimeWarning)
-            stats = [replay_dispatch(r, "numpy") for r in requests]
-        per_cell = (time.time() - t0) / len(batch)
-        for i, st, cap, req in zip(batch, stats, caps, requests):
+            stats = [replay_dispatch(r, "numpy") for r in reqs]
+        per_cell = (time.time() - t0) / len(b)
+        out: Dict[int, Dict] = {}
+        for i, st, cap, req in zip(b, stats, cps, reqs):
             row = _finish_row(cells[i], st, cap, per_cell)
             if req.trace.meta and "serve" in req.trace.meta:
-                # lane rows have no step clocks — the NumPy side pass in
-                # _serve_latency_row fills them and cross-checks counters
                 row.update(_serve_latency_row(cells[i], req.trace,
                                               req.config, st, cache_dir))
-            rows[i] = row
+            out[i] = row
+        return out
+
+    n_flush = max(1, int(_env_num("REPRO_SWEEP_FLUSH_THREADS", 2)))
+    flush_pool = ThreadPoolExecutor(max_workers=n_flush)
+    inflight: collections.deque = collections.deque()   # FIFO of futures
+
+    def _await_inflight(room: int = 0) -> None:
+        """Drain flush futures (oldest first) until at most ``room`` are
+        still in flight; re-raises their failures in the main thread."""
+        while len(inflight) > room:
+            rows.update(inflight.popleft().result())
+
+    def _flush() -> None:
+        if not batch:
+            return
+        if verbose:
+            print(f"[sweep] pallas lanes: replaying {len(batch)} cells "
+                  "in one batch", flush=True)
+        faults.fire("lane.flush", f"{len(batch)}:{cells[batch[0]].key()}")
+        _await_inflight(room=n_flush - 1)    # bounded batches in flight
+        inflight.append(flush_pool.submit(
+            _replay_batch_rows, list(batch), list(requests), list(caps)))
         batch.clear()
         requests.clear()
         caps.clear()
@@ -978,21 +1141,46 @@ def _run_lane_batches(cells: Sequence[SweepCell],
     order = sorted(range(len(cells)),
                    key=lambda i: (families.get(cells[i].prefetcher, "~"),
                                   cells[i].eviction, i))
-    for i in order:
-        cell = cells[i]
-        trace, config, prefetcher, pages = prepare_cell(
-            cell, cache_dir=cache_dir)
-        req = ReplayRequest(trace, prefetcher, config)
-        if not backend.can_replay(req):
-            continue                     # back to the per-cell pool path
-        shape = _lane_shape(req)
-        if not backend.fits_batch(shapes, shape):
-            _flush()
-        batch.append(i)
-        requests.append(req)
-        caps.append(pages)
-        shapes.append(shape)
-    _flush()
+
+    n_prep = max(1, int(_env_num("REPRO_SWEEP_PREP_THREADS", 4)))
+    prep_window = max(1, int(_env_num("REPRO_SWEEP_PREP_WINDOW", 32)))
+    prep_pool = ThreadPoolExecutor(max_workers=n_prep)
+    pending = collections.deque()            # (i, future) in scheduler order
+    feed = iter(order)
+
+    def _top_up() -> None:
+        while len(pending) < prep_window:
+            try:
+                i = next(feed)
+            except StopIteration:
+                return
+            pending.append((i, prep_pool.submit(
+                prepare_cell, cells[i], cache_dir=cache_dir)))
+
+    try:
+        _top_up()
+        while pending:
+            i, fut = pending.popleft()
+            trace, config, prefetcher, pages = fut.result()
+            _top_up()                        # keep the lookahead full
+            req = ReplayRequest(trace, prefetcher, config,
+                                step_bounds=_serve_step_bounds(trace))
+            if not backend.can_replay(req):
+                continue                     # back to the per-cell pool path
+            shape = _lane_shape(req)
+            if not backend.fits_batch(shapes, shape):
+                _flush()
+            batch.append(i)
+            requests.append(req)
+            caps.append(pages)
+            shapes.append(shape)
+        _flush()
+        _await_inflight(room=0)
+    finally:
+        for _, fut in pending:
+            fut.cancel()
+        prep_pool.shutdown(wait=True)
+        flush_pool.shutdown(wait=True)
     return rows
 
 

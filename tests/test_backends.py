@@ -461,3 +461,48 @@ if HAVE_HYPOTHESIS:
         want = [dispatch(build(c), "numpy") for c in cells]
         for i, (g, w) in enumerate(zip(got, want)):
             _assert_equivalent(g, w, context=f"lane {i}/{cells[i][1:]}")
+
+# ---------------------------------------------------------------------------
+# kernel-executable disk cache (REPRO_KERNEL_CACHE)
+# ---------------------------------------------------------------------------
+
+def _exec_cache_files(d):
+    import os
+    return [f for f in os.listdir(d) if f.endswith(".jaxexec")]
+
+
+def test_kernel_exec_cache_roundtrip(tmp_path, monkeypatch):
+    """The compiled-lane cache: the first build serializes to
+    REPRO_KERNEL_CACHE, a later process (simulated by clearing the
+    in-process memo) deserializes bit-equal, a corrupt entry falls back
+    to a fresh build (and is rewritten), and ``0`` disables the cache."""
+    import os
+    from repro.uvm.backends import pallas_backend as pb
+
+    cache = tmp_path / "kernels"
+    monkeypatch.setenv("REPRO_KERNEL_CACHE", str(cache))
+    pages = np.tile(np.arange(40), 2)
+    backend = get_backend("pallas")
+
+    pb._lane_replay_exec.cache_clear()
+    want = backend.replay([_req(pages, cap=24)])[0]     # build + serialize
+    files = _exec_cache_files(cache)
+    assert files, "no serialized executable written"
+
+    pb._lane_replay_exec.cache_clear()                  # "new process"
+    got = backend.replay([_req(pages, cap=24)])[0]      # deserialize path
+    _assert_equivalent(got, want, "exec-cache deserialize")
+
+    for f in files:                                     # corrupt the entry
+        with open(os.path.join(str(cache), f), "wb") as fh:
+            fh.write(b"not a serialized executable")
+    pb._lane_replay_exec.cache_clear()
+    got = backend.replay([_req(pages, cap=24)])[0]      # fallback build
+    _assert_equivalent(got, want, "exec-cache corrupt fallback")
+
+    monkeypatch.setenv("REPRO_KERNEL_CACHE", "0")       # disabled
+    assert pb._kernel_cache_dir() is None
+    pb._lane_replay_exec.cache_clear()
+    got = backend.replay([_req(pages, cap=24)])[0]
+    _assert_equivalent(got, want, "exec-cache disabled")
+    pb._lane_replay_exec.cache_clear()

@@ -78,9 +78,14 @@ def _assert_pairwise_equal(stats_by_backend, context):
                 f"{getattr(got, f)} != {getattr(ref, f)}")
 
 
-def _replay_trace_everywhere(trace, pf_name, cap, mshr, eviction="lru"):
+def _replay_trace_everywhere(trace, pf_name, cap, mshr, eviction="lru",
+                             step_bounds=None):
     """Replay one (trace, config, prefetcher) cell through every accepting
-    backend; returns {backend_name: stats}."""
+    backend; returns {backend_name: stats}.
+
+    With ``step_bounds`` the clock path is part of the guarantee: every
+    required backend must still accept the request (pallas captures the
+    clocks in-kernel), report a clock per window, and agree bitwise."""
     config = UVMConfig(device_pages=cap, mshr_entries=mshr,
                        eviction=eviction)
     stats_by_backend = {}
@@ -88,7 +93,8 @@ def _replay_trace_everywhere(trace, pf_name, cap, mshr, eviction="lru"):
         backend = get_backend(name)
         # a fresh prefetcher per backend: replay consumes its state
         request = ReplayRequest(trace, make_prefetcher(pf_name, trace,
-                                                       config), config)
+                                                       config), config,
+                                step_bounds=step_bounds)
         if not backend.can_replay(request):
             continue
         stats = backend.replay([request])[0]
@@ -98,14 +104,37 @@ def _replay_trace_everywhere(trace, pf_name, cap, mshr, eviction="lru"):
     missing = REQUIRED_BACKENDS - set(stats_by_backend)
     assert not missing, (
         f"backends {sorted(missing)} declined a fuzzed "
-        f"({pf_name}, cap={cap}, eviction={eviction}) cell — the "
-        "differential guarantee would pass vacuously")
+        f"({pf_name}, cap={cap}, eviction={eviction}, "
+        f"bounds={step_bounds is not None}) cell — the differential "
+        "guarantee would pass vacuously")
+    if step_bounds is not None:
+        names = sorted(stats_by_backend)
+        ref = stats_by_backend[names[0]].step_clocks
+        assert ref is not None and len(ref) == len(step_bounds), (
+            f"{names[0]} returned no per-window clocks — the clock-path "
+            "fuzz would pass vacuously")
+        for name in names[1:]:
+            clocks = stats_by_backend[name].step_clocks
+            assert clocks is not None, f"{name} dropped step_clocks"
+            assert np.array_equal(np.asarray(clocks), np.asarray(ref)), (
+                f"{name} vs {names[0]}: step_clocks diverge "
+                f"({pf_name}, cap={cap}, eviction={eviction})")
     return stats_by_backend
 
 
-def _replay_everywhere(pages, pf_name, cap, mshr, eviction="lru"):
+def _replay_everywhere(pages, pf_name, cap, mshr, eviction="lru",
+                       step_bounds=None):
     return _replay_trace_everywhere(_mk_trace(pages), pf_name, cap, mshr,
-                                    eviction)
+                                    eviction, step_bounds=step_bounds)
+
+
+def _draw_bounds(rng, n):
+    """A valid ``step_bounds`` vector for an ``n``-access trace: a
+    non-decreasing cut sequence over [0, n] — repeats (empty windows) and
+    early cutoffs (bounds ending before the trace does) are both legal
+    and deliberately common."""
+    k = int(rng.integers(1, min(n, 48) + 1))
+    return np.sort(rng.integers(0, n + 1, size=k)).astype(np.int64)
 
 
 def _random_pages(rng):
@@ -170,6 +199,45 @@ def test_differential_seeded_cells(cell):
     _assert_pairwise_equal(stats,
                            f"[{name}: {pf_name} cap={cap} mshr={mshr} "
                            f"eviction={eviction} n={len(pages)}]")
+
+
+def test_step_bounds_eligibility_is_not_vacuous():
+    """Every required backend accepts a bounds-carrying cell — if one
+    silently started declining them (as pallas did before the in-kernel
+    step clocks), the clock-path fuzzers would shrink to the host
+    backends and pass vacuously."""
+    rng = np.random.default_rng(3)
+    pages = _random_pages(rng)
+    trace = _mk_trace(pages)
+    config = UVMConfig(device_pages=48, mshr_entries=16)
+    bounds = _draw_bounds(rng, len(pages))
+    for name in sorted(REQUIRED_BACKENDS):
+        req = ReplayRequest(trace, make_prefetcher("none", trace, config),
+                            config, step_bounds=bounds)
+        assert get_backend(name).can_replay(req), name
+
+
+def _seeded_clock_cells():
+    rng = np.random.default_rng(20260807)
+    cells = []
+    for i, pf_name in enumerate(PREFETCHER_NAMES):
+        pages = _random_pages(rng)
+        cells.append((f"clk{i}-{pf_name}", pages, pf_name,
+                      [None, 48, 200][i % 3], EVICTION_POLICIES[i % 3],
+                      _draw_bounds(rng, len(pages))))
+    return cells
+
+
+@pytest.mark.parametrize("cell", _seeded_clock_cells(), ids=lambda c: c[0])
+def test_differential_seeded_step_clocks(cell):
+    """Seeded bounds-carrying cells: counters AND per-window clocks agree
+    across every backend pair (the pallas clocks come from the kernel)."""
+    name, pages, pf_name, cap, eviction, bounds = cell
+    stats = _replay_everywhere(pages, pf_name, cap, 16, eviction,
+                               step_bounds=bounds)
+    _assert_pairwise_equal(stats,
+                           f"[{name}: {pf_name} cap={cap} "
+                           f"eviction={eviction} windows={len(bounds)}]")
 
 
 def _serve_cells():
@@ -265,6 +333,30 @@ if HAVE_HYPOTHESIS:
         _assert_pairwise_equal(stats,
                                f"[{pf_name} cap={cap} mshr={mshr} "
                                f"eviction={eviction} n={len(pages)}]")
+
+    _clock_cell = st_.tuples(
+        _pages,
+        st_.sampled_from(PREFETCHER_NAMES),
+        st_.sampled_from([None, 48, 200]),       # device capacity (pages)
+        st_.sampled_from(EVICTION_POLICIES),     # eviction policy
+        st_.integers(0, 2 ** 32 - 1),            # step_bounds draw seed
+    )
+
+    @settings(max_examples=15, deadline=None)
+    @given(_clock_cell)
+    def test_differential_step_clock_cells(cell):
+        """Random cells with drawn ``step_bounds``: every backend pair is
+        fuzzed on the clock path — counters and per-window clocks must
+        agree bitwise, and all required backends must keep accepting
+        bounds requests (vacuity guard inside the helper)."""
+        pages, pf_name, cap, eviction, bseed = cell
+        bounds = _draw_bounds(np.random.default_rng(bseed), len(pages))
+        stats = _replay_everywhere(pages, pf_name, cap, 16, eviction,
+                                   step_bounds=bounds)
+        _assert_pairwise_equal(stats,
+                               f"[clocks {pf_name} cap={cap} "
+                               f"eviction={eviction} "
+                               f"windows={len(bounds)}]")
 
     @settings(max_examples=8, deadline=None)
     @given(st_.integers(0, 2 ** 32 - 1), st_.sampled_from([None, 700, 1100]),

@@ -5,7 +5,8 @@ timeline binning behind Fig 12."""
 import numpy as np
 import pytest
 
-from repro.uvm.metrics import geomean, pcie_gbs_timeline, unity
+from repro.uvm.metrics import (geomean, pcie_gbs_timeline, slo_percentiles,
+                               sorted_percentiles, unity)
 from repro.uvm.simulator import UVMStats
 
 
@@ -78,6 +79,54 @@ def test_geomean_clamps_nonpositive():
 def test_geomean_scale_invariance():
     xs = [0.5, 2.0, 8.0]
     assert geomean([4 * x for x in xs]) == pytest.approx(4 * geomean(xs))
+
+
+# ---------------------------------------------------------------------------
+# sorted_percentiles / slo_percentiles
+# ---------------------------------------------------------------------------
+
+def test_sorted_percentiles_matches_np_percentile():
+    """The shared-sort helper is bit-identical to np.percentile's default
+    linear method — including oddly sized and single-element samples."""
+    rng = np.random.default_rng(7)
+    for n in (1, 2, 3, 7, 100, 1001):
+        a = rng.exponential(50.0, size=n)
+        got = sorted_percentiles(np.sort(a), (0, 12.5, 50, 95, 99, 100))
+        want = np.percentile(a, (0, 12.5, 50, 95, 99, 100))
+        assert np.array_equal(got, want)   # exact, not approx
+
+
+def test_sorted_percentiles_monotone():
+    """p50 <= p95 <= p99 on any sample set (monotone in q)."""
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        a = np.sort(rng.normal(0.0, 1e3, size=rng.integers(1, 64)))
+        p50, p95, p99 = sorted_percentiles(a, (50, 95, 99))
+        assert p50 <= p95 <= p99
+
+
+def test_sorted_percentiles_rejects_bad_input():
+    with pytest.raises(ValueError):
+        sorted_percentiles(np.array([]), (50,))
+    with pytest.raises(ValueError):
+        sorted_percentiles(np.zeros((2, 2)), (50,))
+    with pytest.raises(ValueError):
+        sorted_percentiles(np.array([1.0]), (101,))
+    with pytest.raises(ValueError):
+        sorted_percentiles(np.array([1.0]), (-1,))
+
+
+def test_slo_percentiles_columns():
+    row = slo_percentiles([3.0, 1.0, 2.0], "decode_lat")
+    assert set(row) == {"decode_lat_p50_us", "decode_lat_p95_us",
+                        "decode_lat_p99_us"}
+    assert row["decode_lat_p50_us"] == pytest.approx(2.0)
+    assert row["decode_lat_p50_us"] <= row["decode_lat_p95_us"] \
+        <= row["decode_lat_p99_us"]
+    # schema-stable on empty input: same keys, None values
+    empty = slo_percentiles([], "ttft")
+    assert empty == {"ttft_p50_us": None, "ttft_p95_us": None,
+                     "ttft_p99_us": None}
 
 
 # ---------------------------------------------------------------------------

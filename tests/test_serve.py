@@ -2,9 +2,9 @@
 
 Covers the serve-* scenario family end to end: load-generator
 determinism, the block <-> page / step <-> kernel encoding invariants,
-``step_bounds`` replay support (legacy and numpy must agree bitwise on
-``step_clocks``; pallas declines), the SLO latency columns, scenario
-registration, and sweep-row integration.
+``step_bounds`` replay support (legacy, numpy, and the pallas lanes —
+which capture ``step_clocks`` in-kernel — must agree bitwise), the SLO
+latency columns, scenario registration, and sweep-row integration.
 """
 import numpy as np
 import pytest
@@ -139,9 +139,10 @@ def test_step_clocks_shape_and_monotone():
     assert clocks[-1] == pytest.approx(stats.cycles)
 
 
-def test_pallas_declines_step_bounds():
-    """The pallas lanes have no step-clock output — they must decline
-    bounds requests (the sweep derives lane-row latency host-side)."""
+def test_pallas_accepts_step_bounds():
+    """The pallas lanes capture step clocks in-kernel, so well-formed
+    bounds requests are accepted; malformed bounds are declined so the
+    host-side backends raise the canonical ValueError instead."""
     trace = build_serve_trace("ServeDecode", scale=0.1, seed=0)
     config = UVMConfig()
     backend = get_backend("pallas")
@@ -149,8 +150,61 @@ def test_pallas_declines_step_bounds():
                                 config, step_bounds=trace_step_bounds(trace))
     without = ReplayRequest(trace, make_prefetcher("none", trace, config),
                             config)
-    assert not backend.can_replay(with_bounds)
+    assert backend.can_replay(with_bounds)
     assert backend.can_replay(without)
+    for bad in (np.array([5, 3], dtype=np.int64),           # decreasing
+                np.array([len(trace) + 1], dtype=np.int64),  # overrun
+                np.array([], dtype=np.int64),                # empty
+                np.zeros((2, 2), dtype=np.int64)):           # not 1-D
+        bad_req = ReplayRequest(trace,
+                                make_prefetcher("none", trace, config),
+                                config, step_bounds=bad)
+        assert not backend.can_replay(bad_req)
+
+
+#: the serve golden cells: every serve workload x eviction policy x
+#: demand-family prefetcher at 2x oversubscription — the fixed matrix the
+#: in-kernel step-clock capture is pinned bit-equal on
+SERVE_GOLDEN_CELLS = [(bench, pol, pf)
+                      for bench in ("ServeDecode", "ServeBursty")
+                      for pol in ("lru", "random", "hotcold")
+                      for pf in ("none", "block")]
+
+
+@pytest.mark.parametrize("bench,policy,pf", SERVE_GOLDEN_CELLS,
+                         ids=[f"{b}-{pol}-{pf}"
+                              for b, pol, pf in SERVE_GOLDEN_CELLS])
+def test_step_clocks_pallas_bitwise(bench, policy, pf):
+    """In-kernel step clocks (and every counter) are bit-identical to the
+    numpy replay on every serve golden cell."""
+    trace = build_serve_trace(bench, scale=0.25, seed=0)
+    cap = int(trace.working_set_pages * 0.5)
+    lane = _replay(trace, "pallas", pf_name=pf, cap=cap, eviction=policy)
+    ref = _replay(trace, "numpy", pf_name=pf, cap=cap, eviction=policy)
+    assert lane.backend == "pallas"
+    assert lane.step_clocks is not None
+    assert np.array_equal(lane.step_clocks, ref.step_clocks)
+    for field in ("cycles", "hits", "late", "faults", "prefetch_issued",
+                  "prefetch_used", "pages_migrated", "pages_evicted",
+                  "pcie_bytes"):
+        assert getattr(lane, field) == getattr(ref, field), field
+
+
+def test_step_clocks_pallas_mixed_batch():
+    """One kernel launch can mix lanes with and without bounds: the
+    no-bounds lane scatters to the trash slot and reports no clocks."""
+    trace = build_serve_trace("ServeDecode", scale=0.1, seed=0)
+    config = UVMConfig(device_pages=int(trace.working_set_pages * 0.5))
+    bounds = trace_step_bounds(trace)
+    with_b = ReplayRequest(trace, make_prefetcher("none", trace, config),
+                           config, step_bounds=bounds)
+    without = ReplayRequest(trace, make_prefetcher("none", trace, config),
+                            config)
+    got = get_backend("pallas").replay([with_b, without])
+    ref = _replay(trace, "numpy", cap=config.device_pages)
+    assert np.array_equal(got[0].step_clocks, ref.step_clocks)
+    assert got[1].step_clocks is None
+    assert got[0].cycles == got[1].cycles == ref.cycles
 
 
 def test_bad_step_bounds_rejected():
