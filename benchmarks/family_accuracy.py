@@ -1,0 +1,92 @@
+"""Table 2-style predictor-family comparison (paper §5 vs §6): the
+reference Transformer and the simplified (revised) predictor trained per
+benchmark through the same :class:`~repro.core.service.PredictorService`
+path the sweep uses, reporting page-prediction accuracy (top-1 / F1 on
+the held-out split) and prediction coverage (fraction of eval-trace
+accesses that get a gated prediction) side by side.
+
+    PYTHONPATH=src python -m benchmarks.family_accuracy
+    PYTHONPATH=src python -m benchmarks.family_accuracy \
+        --benches ATAX,Pathfinder --emit-json /tmp/families.json
+
+The reference Transformer sets the accuracy bar the simplified family is
+engineered to match; ``scripts/ci_check.sh`` gates the emitted JSON
+against ``BENCH_families.json`` and asserts the bar holds on the smoke
+set.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.common import cached, get_eval_trace, get_trace, print_table
+
+FAMILIES = ("simplified", "transformer")
+
+#: the quick/CI benchmark set: small traces where the families converge
+#: within the quick step budget.  NW is the interesting cell — the
+#: reference Transformer reaches full prediction coverage there while the
+#: simplified predictor's confidence gate keeps its coverage at zero.
+SMOKE_BENCHES = ["ATAX", "BICG", "NW"]
+
+
+def family_cell(bench: str, family: str) -> Dict:
+    """Train one (benchmark, family) pair via PredictorService; cached."""
+    key = json.dumps(dict(v=1, suite="family_accuracy", bench=bench,
+                          family=family, steps=common.STEPS),
+                     sort_keys=True)
+
+    def compute():
+        from repro.core.service import PredictorService
+        svc = PredictorService(model_family=family, steps=common.STEPS)
+        res = svc.fit(get_trace(bench))
+        preds = svc.predict_trace(get_eval_trace(bench))
+        return {"name": f"{bench}/{family}", "bench": bench,
+                "model_family": family,
+                "top1": float(res.metrics["top1"]),
+                "f1": float(res.metrics["f1"]),
+                "coverage": float(np.mean(preds >= 0)),
+                "train_seconds": float(res.train_seconds)}
+
+    return cached(key, compute)
+
+
+def run(benches: Optional[List[str]] = None) -> List[Dict]:
+    if benches is None:
+        benches = (SMOKE_BENCHES if common.QUICK
+                   else common.PREDICTOR_BENCHMARKS)
+    return [family_cell(b, fam) for b in benches for fam in FAMILIES]
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Simplified-vs-Transformer predictor accuracy and "
+                    "coverage per benchmark")
+    ap.add_argument("--benches", default=None,
+                    help="comma-separated benchmark list (default: the "
+                         "smoke set under REPRO_BENCH_QUICK=1, the full "
+                         "predictor suite otherwise)")
+    ap.add_argument("--emit-json", default=None, metavar="PATH",
+                    help="write rows as JSON for scripts/check_bench.py")
+    args = ap.parse_args(argv)
+    benches = args.benches.split(",") if args.benches else None
+    rows = run(benches)
+    cols = ["name", "bench", "model_family", "top1", "f1", "coverage",
+            "train_seconds"]
+    print_table("Predictor families: simplified vs reference Transformer",
+                rows, cols)
+    if args.emit_json:
+        doc = {"version": 1, "quick": common.QUICK,
+               "rows": [{c: r[c] for c in cols} for r in rows]}
+        with open(args.emit_json, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.emit_json}")
+
+
+if __name__ == "__main__":
+    main()

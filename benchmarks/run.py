@@ -24,7 +24,8 @@ import json
 import time
 import traceback
 
-from benchmarks import (common, fig5_features, fig6_convergence,
+from benchmarks import (common, family_accuracy, fig5_features,
+                        fig6_convergence,
                         fig9_predictors, oversub_bench,
                         fig10_latency, fig12_pcie, kernels_bench,
                         offload_bench, perf_ipc, serve_bench,
@@ -35,6 +36,9 @@ from benchmarks import (common, fig5_features, fig6_convergence,
 
 SUITES = [
     ("table1", table1_transformer.main),
+    # predictor-family comparison (simplified vs reference Transformer);
+    # explicit empty argv: it has its own CLI like oversub_bench
+    ("families", lambda: family_accuracy.main([])),
     ("table2", table2_clustering.main),
     ("table3", table3_distance.main),
     ("table4", table4_fc.main),

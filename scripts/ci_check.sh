@@ -129,6 +129,36 @@ print(f"[ci] chaos smoke ok: {report['cells']} cells byte-identical after "
 PYEOF
 rm -rf "$CHAOS_OUT"
 
+echo "[ci] transformer-smoke: the model_family axis (simplified vs the"
+echo "[ci] reference Transformer learned cells) x the adaptive eviction"
+echo "[ci] pseudo-policy through the pallas lanes in interpret mode; every"
+echo "[ci] row must record its model_family and the concrete policy the"
+echo "[ci] adaptive selector resolved to (pinned via ADAPTIVE_selector.json)"
+TF_OUT="$(mktemp -d "${TMPDIR:-/tmp}/ci_tf_smoke.XXXXXX")"
+REPRO_ADAPTIVE_TABLE=ADAPTIVE_selector.json JAX_PLATFORMS=cpu \
+    python -m repro.uvm.sweep --scenario transformer-smoke \
+    --backend pallas --out "$TF_OUT"
+python - "$TF_OUT" <<'PYEOF'
+import json, sys
+rows = json.load(open(sys.argv[1] + "/results.json"))["rows"]
+assert len(rows) == 4, f"transformer smoke expanded {len(rows)} cells, not 4"
+bad = [r for r in rows if r["backend"] != "pallas"]
+assert not bad, f"{len(bad)} transformer cells fell off the pallas lanes"
+fams = {r["model_family"] for r in rows}
+assert fams == {"simplified", "transformer"}, fams
+# the adaptive pseudo-policy may never leak into result rows: each cell
+# records the concrete policy the selector resolved to for its benchmark
+leaked = [r["bench"] for r in rows if r["eviction"] == "adaptive"]
+assert not leaked, f"rows recorded the adaptive literal: {leaked}"
+by_bench = {}
+for r in rows:
+    by_bench.setdefault(r["bench"], set()).add(r["eviction"])
+assert by_bench == {"ATAX": {"random"}, "Pathfinder": {"hotcold"}}, by_bench
+print(f"[ci] transformer smoke ok: {len(rows)} rows, families {sorted(fams)}, "
+      f"adaptive resolved " + str({b: sorted(p) for b, p in by_bench.items()}))
+PYEOF
+rm -rf "$TF_OUT"
+
 echo "[ci] perf trajectory: lane_bench + benchmarks.run smoke scenarios vs"
 echo "[ci] the committed BENCH_lanes.json / BENCH_sweep.json baselines"
 echo "[ci] (REPRO_BENCH_TOL fractional timing slack, 0 disables the"
@@ -145,6 +175,28 @@ REPRO_SWEEP_CACHE_DIR="$BENCH_TMP/sweep_cache" JAX_PLATFORMS=cpu \
     python -m benchmarks.run --scenario serve-smoke,oversub-smoke \
     --emit-json "$BENCH_TMP/sweep.json"
 python scripts/check_bench.py BENCH_sweep.json "$BENCH_TMP/sweep.json"
+
+echo "[ci] predictor families: simplified-vs-Transformer accuracy benchmark"
+echo "[ci] (quick smoke set, trained fresh: benchmarks/cache is gitignored)"
+echo "[ci] vs the committed BENCH_families.json schema; the reference"
+echo "[ci] Transformer must reach the simplified predictor's accuracy on"
+echo "[ci] every smoke bench"
+REPRO_BENCH_QUICK=1 JAX_PLATFORMS=cpu python -m benchmarks.family_accuracy \
+    --emit-json "$BENCH_TMP/families.json"
+python scripts/check_bench.py BENCH_families.json "$BENCH_TMP/families.json"
+python - "$BENCH_TMP/families.json" <<'PYEOF'
+import json, sys
+rows = json.load(open(sys.argv[1]))["rows"]
+by = {(r["bench"], r["model_family"]): r for r in rows}
+benches = sorted({r["bench"] for r in rows})
+for b in benches:
+    tf, simp = by[(b, "transformer")], by[(b, "simplified")]
+    assert tf["top1"] >= simp["top1"] - 1e-9, \
+        f"transformer under the simplified bar on {b}: " \
+        f"{tf['top1']:.4f} < {simp['top1']:.4f}"
+print("[ci] family accuracy ok: transformer >= simplified on "
+      + ",".join(benches))
+PYEOF
 rm -rf "$BENCH_TMP"
 
 echo "[ci] OK"

@@ -3,26 +3,50 @@
 Pipeline: GMMU trace -> clustering (SM / SM+warp) -> feature tokens -> delta
 vocabulary -> sliding-window sequence dataset -> Transformer (or revised
 HLSH) predictor -> per-access top-1 page predictions -> LearnedPrefetcher.
-"""
-from repro.core.features import (
-    cluster_trace, delta_convergence, ClusteredTrace, FEATURE_NAMES,
-    CLUSTER_KEYS,
-)
-from repro.core.vocab import DeltaVocab, encode_features, FEATURE_BUCKETS
-from repro.core.dataset import build_dataset, SequenceDataset, SEQ_LEN
-from repro.core.model import (
-    PredictorConfig, revised_config, init_params, apply,
-    EMB_DIMS, REVISED_FEATURES,
-)
-from repro.core.train import train_predictor, evaluate, predict_logits, TrainResult
-from repro.core.service import PredictorService, pretrain_corpus
 
-__all__ = [
-    "cluster_trace", "delta_convergence", "ClusteredTrace", "FEATURE_NAMES",
-    "CLUSTER_KEYS", "DeltaVocab", "encode_features", "FEATURE_BUCKETS",
-    "build_dataset", "SequenceDataset", "SEQ_LEN",
-    "PredictorConfig", "revised_config", "init_params", "apply",
-    "EMB_DIMS", "REVISED_FEATURES",
-    "train_predictor", "evaluate", "predict_logits", "TrainResult",
-    "PredictorService", "pretrain_corpus",
-]
+Attributes are resolved lazily (PEP 562): the config layer
+(``repro.core.families`` — ``PredictorConfig``, the model-family registry)
+is importable without paying the jax import that ``model``/``train``/
+``service`` need, which keeps the sweep CLI and the scenario registry
+jax-free at import time.
+"""
+from typing import Dict
+
+# attribute -> owning submodule; resolved on first access so importing
+# repro.core (or the jax-free repro.core.families directly) never eagerly
+# pulls jax
+_ATTR_MODULES: Dict[str, str] = {
+    "cluster_trace": "features", "delta_convergence": "features",
+    "ClusteredTrace": "features", "FEATURE_NAMES": "features",
+    "CLUSTER_KEYS": "features",
+    "DeltaVocab": "vocab", "encode_features": "vocab",
+    "FEATURE_BUCKETS": "vocab",
+    "build_dataset": "dataset", "SequenceDataset": "dataset",
+    "SEQ_LEN": "dataset",
+    # config layer: jax-free
+    "PredictorConfig": "families", "revised_config": "families",
+    "EMB_DIMS": "families", "REVISED_FEATURES": "families",
+    "MODEL_FAMILIES": "families", "MODEL_FAMILY_BLOCKS": "families",
+    "config_digest": "families", "family_config": "families",
+    "validate_family": "families",
+    "init_params": "model", "apply": "model",
+    "train_predictor": "train", "evaluate": "train",
+    "predict_logits": "train", "TrainResult": "train",
+    "PredictorService": "service", "pretrain_corpus": "service",
+}
+
+__all__ = sorted(_ATTR_MODULES)
+
+
+def __getattr__(name: str):
+    mod = _ATTR_MODULES.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    value = getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

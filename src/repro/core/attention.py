@@ -29,6 +29,23 @@ def full_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return jnp.einsum("bnm,bmd->bnd", jax.nn.softmax(logits, axis=-1), v)
 
 
+def local_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    window: int) -> jnp.ndarray:
+    """Windowed (banded) attention: each query attends only to keys within
+    ``window`` positions (|i - j| <= window).  The paper's interpretability
+    analysis finds the reference Transformer's mass concentrated on recent
+    deltas — this is that observation as an architecture.  With
+    window >= N-1 the band covers everything and this equals
+    :func:`full_attention`."""
+    d = q.shape[-1]
+    n = q.shape[-2]
+    idx = jnp.arange(n)
+    band = jnp.abs(idx[:, None] - idx[None, :]) <= window     # (N, N)
+    logits = jnp.einsum("bnd,bmd->bnm", q, k) / jnp.sqrt(jnp.float32(d))
+    logits = jnp.where(band[None, :, :], logits, -1e9)
+    return jnp.einsum("bnm,bmd->bnd", jax.nn.softmax(logits, axis=-1), v)
+
+
 def lsh_hash(x: jnp.ndarray, n_hashes: int, n_buckets: int,
              key: jax.Array) -> jnp.ndarray:
     """Angular LSH (Reformer): random rotations + argmax over [xR; -xR].

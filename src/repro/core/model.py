@@ -9,77 +9,32 @@
 * ``fc`` / ``mlp`` / ``cnn`` / ``lstm`` — the comparison predictors of
   Table 4 and Fig 9.
 
+The config layer (``PredictorConfig``, the ``MODEL_FAMILIES`` registry,
+``family_config``/``config_digest``) lives in the jax-free
+``repro.core.families`` and is re-exported here.
+
 Pure-functional: ``init_params(cfg, key)`` -> pytree;
 ``apply(cfg, params, x)`` -> logits.  x is (B, seq, n_features) int32.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import attention as attn_lib
+# config layer lives in the jax-free repro.core.families; re-exported here
+# so model-side callers keep one import surface
+from repro.core.families import (  # noqa: F401  (re-exports)
+    EMB_DIMS, MODEL_FAMILIES, MODEL_FAMILY_BLOCKS, PredictorConfig,
+    REVISED_EMB_DIMS, REVISED_FEATURES, config_digest, family_config,
+    revised_config, validate_family,
+)
 from repro.core.quantize import fake_quant, fake_quant_tensor
 from repro.core.vocab import FEATURE_BUCKETS
-
-# embedding width per feature; the full 13(+kernel)-feature concat is 200
-# dims, matching the paper's embedding output of 200 x 30.
-EMB_DIMS: Dict[str, int] = {
-    "pc": 24, "hit": 4, "warp": 12, "sm": 12, "tpc": 8, "cta": 12,
-    "kernel": 8, "paddr": 32, "bbaddr": 16, "raddr": 8, "inarr": 8,
-    "dp": 32, "dbb": 16, "dr": 8,
-}
-# revised predictor (§6): 3 features, 12 total embedding dims
-REVISED_EMB_DIMS: Dict[str, int] = {"paddr": 4, "dp": 6, "pc": 2}
-REVISED_FEATURES = ("paddr", "dp", "pc")
-
-
-@dataclasses.dataclass(frozen=True)
-class PredictorConfig:
-    n_classes: int
-    arch: str = "transformer"          # transformer|fc|mlp|cnn|lstm
-    attention: str = "full"            # full|hlsh|lsh|bypass
-    features: Tuple[str, ...] = tuple(EMB_DIMS)
-    seq_len: int = 30
-    n_layers: int = 2
-    n_heads: int = 4
-    d_ff_mult: int = 4
-    quantize: bool = False
-    revised_dims: bool = False         # use the 12-dim embedding set
-    n_hashes: int = 8
-    n_buckets: int = 8
-    htop: float = 0.9
-    hbot: float = 0.1
-    lsh_seed: int = 7
-    hidden: int = 128                  # lstm/cnn/mlp width
-
-    @property
-    def emb_dims(self) -> Dict[str, int]:
-        base = REVISED_EMB_DIMS if self.revised_dims else EMB_DIMS
-        return {f: base[f] for f in self.features}
-
-    @property
-    def d_model(self) -> int:
-        return sum(self.emb_dims.values())
-
-
-def revised_config(n_classes: int, convergence: float,
-                   bypass_threshold: float = 0.7,
-                   quantize: bool = True) -> PredictorConfig:
-    """§6: SM+warp clustering is handled upstream; here: 3 features, 1 layer,
-    1 head, HLSH attention, and the bypass indicator — if one page delta
-    dominates the training data, attention is skipped entirely."""
-    bypass = convergence >= bypass_threshold
-    return PredictorConfig(
-        n_classes=n_classes, arch="transformer",
-        attention="bypass" if bypass else "hlsh",
-        features=REVISED_FEATURES, revised_dims=True,
-        n_layers=1, n_heads=1, quantize=quantize,
-    )
 
 
 # ---------------------------------------------------------------------------
@@ -195,6 +150,8 @@ def _unheads(x: jnp.ndarray, n_heads: int, b: int) -> jnp.ndarray:
 def _attention(cfg: PredictorConfig, q, k, v) -> jnp.ndarray:
     if cfg.attention == "full":
         return attn_lib.full_attention(q, k, v)
+    if cfg.attention == "local":
+        return attn_lib.local_attention(q, k, v, cfg.local_window)
     key = jax.random.PRNGKey(cfg.lsh_seed)
     if cfg.attention == "lsh":
         return attn_lib.lsh_attention(q, k, v, key, cfg.n_hashes,

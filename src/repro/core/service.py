@@ -18,6 +18,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import families
 from repro.core import model as model_lib
 from repro.core.dataset import SEQ_LEN, build_dataset
 from repro.core.features import ClusteredTrace, cluster_trace, delta_convergence
@@ -47,12 +48,30 @@ class PredictorService:
     quantize: bool = True
     bypass_threshold: float = 0.7
     seed: int = 0
+    # which predictor family to assemble in fit() when no explicit cfg is
+    # passed — "simplified" (§6 revised), "transformer" (the reference
+    # encoder), or "transformer-local"; see repro.core.families
+    model_family: str = "simplified"
 
     trace: Optional[Trace] = None
     ct: Optional[ClusteredTrace] = None
     vocab: Optional[DeltaVocab] = None
     result: Optional[TrainResult] = None
     convergence: float = 0.0
+
+    @property
+    def model_config(self) -> str:
+        """Architecture digest of this service's family block, for cache
+        keying (repro.uvm.predcache).  Trace-determined parts of the
+        resolved config — n_classes and the convergence-driven bypass
+        flip — are pinned to sentinels: the trace content is already part
+        of every predcache key, so the digest only needs to capture the
+        architecture the family + service knobs select."""
+        cfg = families.family_config(self.model_family, n_classes=0,
+                                     convergence=0.0,
+                                     bypass_threshold=self.bypass_threshold,
+                                     quantize=self.quantize)
+        return families.config_digest(cfg)
 
     def fit(self, trace: Trace, init_params=None,
             cfg: model_lib.PredictorConfig | None = None,
@@ -62,8 +81,8 @@ class PredictorService:
         self.vocab = DeltaVocab.build(self.ct, distance=self.distance)
         self.convergence = delta_convergence(self.ct)
         if cfg is None:
-            cfg = model_lib.revised_config(
-                self.vocab.n_classes, self.convergence,
+            cfg = model_lib.family_config(
+                self.model_family, self.vocab.n_classes, self.convergence,
                 self.bypass_threshold, quantize=self.quantize)
         data = build_dataset(self.ct, self.vocab, features=list(cfg.features),
                              seq_len=self.seq_len, distance=self.distance,

@@ -16,10 +16,12 @@ oversubscribed cyclic sweep with LRU eviction churn, and a tree-churn case
 (permuted sweeps alternating between two far-apart regions under
 oversubscription, so tree node counts rise and fall continuously — the
 regime the vectorized ``_TreeAdapter`` must track exactly).  Each trace runs
-against all six prefetcher variants: on-demand, block, tree, learned,
+against all seven prefetcher variants: on-demand, block, tree, learned,
 learned-cached (identical predictions round-tripped through the
 ``repro.uvm.predcache`` atomic store, pinning the cache path bit-exact
-against plain learned), and oracle.
+against plain learned), learned-tf (a distance-16 Transformer-family
+stand-in cached under ``model_family="transformer"``, pinning the
+family-keyed cache path), and oracle.
 
 Per-policy oversubscribed cells (``oversub-random``/``oversub-hotcold``
 on a thrashing cyclic sweep, ``churn-random``/``churn-hotcold`` on a
@@ -53,11 +55,19 @@ INT_FIELDS = ("n_accesses", "n_instructions", "hits", "late", "faults",
 FLOAT_FIELDS = ("cycles", "pcie_bytes", "zero_copy_bytes")
 
 PREFETCHER_NAMES = ("none", "block", "tree", "learned", "learned-cached",
-                    "oracle")
+                    "learned-tf", "oracle")
 
 #: prediction distance / inference overhead of the synthetic learned model
 LEARNED_DISTANCE = 32
 LEARNED_OVERHEAD_US = 1.0
+
+#: the learned-tf cells model the reference-Transformer family: a
+#: *different* prediction distance (so their predictions measurably
+#: differ from the simplified cells') round-tripped through predcache
+#: under ``model_family="transformer"`` — the fixtures then pin the
+#: family-keyed cache path: a key collision would cross-serve
+#: distance-32 predictions into these cells and fail every backend
+LEARNED_TF_DISTANCE = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,16 +174,24 @@ def make_prefetcher(name: str, trace: Trace, config: UVMConfig) -> Prefetcher:
         return LearnedPrefetcher(
             perfect_preds(trace),
             extra_latency_cycles=LEARNED_OVERHEAD_US * config.cycles_per_us)
-    if name == "learned-cached":
-        # same predictions as "learned", but round-tripped through the
-        # prediction cache's atomic npy store — the fixtures pin the cache
-        # path to replay bit-identically to the direct array
+    if name in ("learned-cached", "learned-tf"):
+        # same predictions as "learned" (learned-cached) or the
+        # Transformer-family stand-in at a different prediction distance
+        # (learned-tf), round-tripped through the prediction cache's
+        # atomic npz store — the fixtures pin the cache path to replay
+        # bit-identically to the direct array, and the two names differ
+        # *only* by model_family in their keys, so a family-blind key
+        # would cross-serve the wrong distance and fail every backend
         from repro.uvm import predcache
-        key = predcache.predictions_key(trace, kind="golden-roundtrip")
+        family = "transformer" if name == "learned-tf" else "simplified"
+        distance = (LEARNED_TF_DISTANCE if name == "learned-tf"
+                    else LEARNED_DISTANCE)
+        key = predcache.predictions_key(trace, kind="golden-roundtrip",
+                                        model_family=family)
         cache_dir = _roundtrip_cache_dir()
         preds = predcache.load(cache_dir, key)
         if preds is None:
-            predcache.store(cache_dir, key, perfect_preds(trace))
+            predcache.store(cache_dir, key, perfect_preds(trace, distance))
             preds = predcache.load(cache_dir, key)
         return LearnedPrefetcher(
             preds,

@@ -12,9 +12,16 @@ This module gives those cells train-once semantics:
   instruction count plus every :class:`~repro.core.service.PredictorService`
   field that influences the predictions (cluster key, prediction distance,
   min-prob gate, sequence length, training steps, batch size, quantization,
-  bypass threshold, seed) and a cache-format version.  Two callers holding
-  bit-identical traces and configs always agree on the key, no matter how
-  the trace was produced (generator, npz cache, in-process fixture).
+  bypass threshold, seed, and the model identity: the ``model_family``
+  name plus the architecture digest of its resolved
+  :class:`~repro.core.families.PredictorConfig`) and a cache-format
+  version.  Two callers holding bit-identical traces and configs always
+  agree on the key, no matter how the trace was produced (generator, npz
+  cache, in-process fixture) — and two model families on the same trace
+  can never cross-serve one cached array.  The trace fingerprint is
+  memoized on the trace instance *and the access array is frozen*
+  (``writeable=False``) at memo time, so a later in-place mutation raises
+  instead of silently reusing a stale fingerprint.
 * Values are single-file ``.npz`` archives carrying the predictions array
   **plus its sha256** (over dtype+shape+bytes), written via **atomic
   write-rename** (``os.replace`` of a same-directory tempfile), so
@@ -26,7 +33,10 @@ This module gives those cells train-once semantics:
   :mod:`repro.distributed.fault_tolerance` — makes concurrent misses on
   the same key wait for the first trainer's result instead of training N
   times.  A lock whose owner pid is dead (SIGKILLed trainer on this
-  host) or whose TTL expired is stolen immediately; a live-but-wedged
+  host) or whose TTL expired is stolen immediately; a holder that
+  finished but wrote a *corrupt* entry is detected by the waiters'
+  checksummed polls (quarantine + immediate steal + retrain — no
+  patience burned on an array that can never appear); a live-but-wedged
   holder is waited out for ``lock_patience_s`` and then overridden
   (correctness never depends on the lock).
 * A per-process memo keeps the same array shared in-process even with no
@@ -53,16 +63,22 @@ from repro.uvm import faults
 
 #: bump on any change to the key schema, the stored array semantics, or the
 #: prediction pipeline itself — stale arrays must never be served
-#: (2: checksummed .npz entries with an embedded sha256)
-PREDCACHE_VERSION = 2
+#: (2: checksummed .npz entries with an embedded sha256;
+#:  3: model identity in the key — ``model_family`` + resolved
+#:  PredictorConfig digest, so no two architectures share an entry)
+PREDCACHE_VERSION = 3
 
 #: conventional subdirectory name under a sweep's trace cache
 DEFAULT_SUBDIR = "pred_cache"
 
-#: PredictorService fields that determine the predictions array
+#: PredictorService fields that determine the predictions array.
+#: ``model_config`` is the service's architecture-digest property
+#: (repro.core.families.config_digest of the resolved family config):
+#: without it, two families — or two revisions of one family's block —
+#: on the same trace would collide on one cached array.
 SERVICE_KEY_FIELDS = ("cluster_key", "distance", "min_prob", "seq_len",
                       "steps", "batch_size", "quantize", "bypass_threshold",
-                      "seed")
+                      "seed", "model_family", "model_config")
 
 _MEMO: Dict[str, np.ndarray] = {}
 
@@ -85,7 +101,11 @@ def trace_content_key(trace) -> str:
     plus the instruction count (which scales the timing model, not the
     predictions, but keeps the key an honest trace fingerprint).  The hash
     is memoized on the trace instance — a grid calls this once per cell,
-    and the access array is multi-MB at full scale."""
+    and the access array is multi-MB at full scale.  Memoizing is only
+    sound if the hashed bytes cannot change afterwards, so the access
+    array is frozen (``writeable=False``) at memo time: an in-place
+    mutation after keying then raises at the mutation site instead of
+    silently serving another trace's predictions."""
     key = getattr(trace, "_predcache_content_key", None)
     if key is not None:
         return key
@@ -97,8 +117,11 @@ def trace_content_key(trace) -> str:
     h.update(str(int(trace.n_instructions)).encode())
     key = h.hexdigest()[:24]
     try:
+        trace.accesses.flags.writeable = False
         trace._predcache_content_key = key
-    except AttributeError:               # slots/frozen trace: just recompute
+    except (AttributeError, ValueError):
+        # slots/frozen trace, or an accesses view we cannot freeze: skip
+        # the memo and recompute per call — correct, just slower
         pass
     return key
 
@@ -136,28 +159,37 @@ def _quarantine(path: str, reason: str) -> None:
         pass
 
 
-def load(cache_dir: str, key: str) -> Optional[np.ndarray]:
-    """Load a cached predictions array, or None.  The embedded sha256 is
-    verified against the array bytes: an unreadable or checksum-failing
-    entry (truncation, bit flips — anything the atomic rename cannot
-    rule out) is quarantined to ``<entry>.corrupt`` and reads as a miss,
-    so corruption triggers a retrain instead of silently skewing every
-    downstream hit-rate."""
+def load_checked(cache_dir: str, key: str
+                 ) -> "tuple[Optional[np.ndarray], bool]":
+    """Load a cached predictions array; returns ``(array_or_None,
+    corrupt)``.  The embedded sha256 is verified against the array bytes:
+    an unreadable or checksum-failing entry (truncation, bit flips —
+    anything the atomic rename cannot rule out) is quarantined to
+    ``<entry>.corrupt`` and reads as a miss with ``corrupt=True``, so
+    corruption triggers a retrain instead of silently skewing every
+    downstream hit-rate.  The corrupt flag matters to lock *waiters*: a
+    corrupt entry proves the holder already finished (and failed) its
+    write, so waiting out its lease cannot produce a good array."""
     path = _path(cache_dir, key)
     try:
         with np.load(path, allow_pickle=False) as z:
             preds = np.ascontiguousarray(z["preds"])
             sha = str(z["sha"])
     except (FileNotFoundError, NotADirectoryError):
-        return None
+        return None, False
     except (ValueError, EOFError, OSError, KeyError, zipfile.BadZipFile):
         _quarantine(path, "unreadable prediction cache entry")
-        return None
+        return None, True
     if sha != _preds_digest(preds):
         _quarantine(path, "prediction cache checksum mismatch")
-        return None
+        return None, True
     preds.flags.writeable = False
-    return preds
+    return preds, False
+
+
+def load(cache_dir: str, key: str) -> Optional[np.ndarray]:
+    """:func:`load_checked` without the corrupt flag."""
+    return load_checked(cache_dir, key)[0]
 
 
 def store(cache_dir: str, key: str, preds: np.ndarray) -> str:
@@ -247,11 +279,21 @@ def get_or_train(trace, *, steps: int = 150, seed: int = 0,
         _MEMO[key] = preds
         return preds
 
-    preds = load(cache_dir, key)
+    preds, corrupt = load_checked(cache_dir, key)
     if preds is None:
         os.makedirs(cache_dir, exist_ok=True)
         lock = _path(cache_dir, key) + ".lock"
         got = _try_lock(lock, lock_patience_s)
+        if not got and corrupt:
+            # A corrupt entry under someone else's live lock means its
+            # holder already trained, stored, and failed (the entry is
+            # quarantined): waiting out the lease can never produce a
+            # good array, so steal it and retrain now.  If the entry was
+            # a *previous* crash's debris and the current holder is
+            # healthy, the steal costs one benign duplicate training run
+            # (deterministic, atomic rename — last writer wins).
+            _unlock(lock)
+            got = _try_lock(lock, lock_patience_s)
         if not got:
             # another *live* process is training this key: wait for its
             # array.  Each poll re-probes the lease, so a holder that
@@ -259,8 +301,18 @@ def get_or_train(trace, *, steps: int = 150, seed: int = 0,
             # costing the full patience window.
             deadline = time.monotonic() + lock_patience_s
             while time.monotonic() < deadline:
-                preds = load(cache_dir, key)
+                preds, corrupt = load_checked(cache_dir, key)
                 if preds is not None:
+                    break
+                if corrupt:
+                    # The holder already wrote its entry and the bytes
+                    # are bad (now quarantined): it trained, stored, and
+                    # failed — whether it is still alive, waiting out
+                    # its lease can never yield a good array.  Steal the
+                    # lock and retrain now instead of burning the full
+                    # patience window.
+                    _unlock(lock)
+                    got = _try_lock(lock, lock_patience_s)
                     break
                 if _try_lock(lock, lock_patience_s):
                     got = True           # holder released, died, or TTL'd

@@ -30,6 +30,15 @@ Built-ins:
   harness (``python -m repro.uvm.faults``): the CI check replays it
   fault-free and under a bounded kill+corrupt+raise fault plan and
   requires byte-identical rows.
+* ``transformer-smoke`` — 4 learned cells across the ``simplified`` and
+  reference ``transformer`` predictor families under ``adaptive``
+  eviction: the CI check that rows record ``model_family`` and a
+  concretely resolved ``eviction`` (never the ``adaptive`` literal).
+
+Scenarios may also sweep the ``model_families`` axis
+(``repro.core.families.MODEL_FAMILIES``) and request the ``adaptive``
+eviction pseudo-policy (``repro.uvm.adaptive``), which the sweep
+resolves per cell at prepare time.
 
 Usage::
 
@@ -50,6 +59,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.families import MODEL_FAMILIES  # jax-free config layer
+from repro.uvm.adaptive import ADAPTIVE_POLICY
 from repro.uvm.eviction import EVICTION_POLICIES
 from repro.uvm.sweep import PREFETCHERS, SweepCell
 
@@ -81,6 +92,10 @@ class Scenario:
     seeds: Tuple[int, ...] = (0,)
     prediction_us: float = 1.0
     service_steps: int = 150
+    # predictor families for the learned prefetcher cells; non-learned
+    # cells still expand per family (the axis is part of the cell key)
+    # so keep this ("simplified",) unless the scenario compares families
+    model_families: Tuple[str, ...] = ("simplified",)
 
     # ------------------------------------------------------------------
     def validate(self) -> "Scenario":
@@ -107,8 +122,11 @@ class Scenario:
                 "window=None (a window split would desynchronize the "
                 "decode-step bounds the latency columns derive from)")
         for field, values, vocab in (
-                ("evictions", self.evictions, set(EVICTION_POLICIES)),
-                ("prefetchers", self.prefetchers, set(PREFETCHERS))):
+                ("evictions", self.evictions,
+                 set(EVICTION_POLICIES) | {ADAPTIVE_POLICY}),
+                ("prefetchers", self.prefetchers, set(PREFETCHERS)),
+                ("model_families", self.model_families,
+                 set(MODEL_FAMILIES))):
             if not values:
                 raise ValueError(f"scenario {self.name!r}: empty {field}")
             bad = [v for v in values if v not in vocab]
@@ -135,20 +153,23 @@ class Scenario:
                 for ratio in self.ratios:
                     for eviction in self.evictions:
                         for pf in self.prefetchers:
-                            out.append(SweepCell(
-                                bench=bench, prefetcher=pf,
-                                scale=self.scale, seed=seed,
-                                window=self.window,
-                                prediction_us=self.prediction_us,
-                                device_frac=ratio, eviction=eviction,
-                                scenario=self.name, engine=engine,
-                                backend=backend,
-                                service_steps=self.service_steps))
+                            for fam in self.model_families:
+                                out.append(SweepCell(
+                                    bench=bench, prefetcher=pf,
+                                    scale=self.scale, seed=seed,
+                                    window=self.window,
+                                    prediction_us=self.prediction_us,
+                                    device_frac=ratio, eviction=eviction,
+                                    scenario=self.name, engine=engine,
+                                    backend=backend,
+                                    service_steps=self.service_steps,
+                                    model_family=fam))
         return out
 
     def n_cells(self) -> int:
         return (len(self.benches) * len(self.seeds) * len(self.ratios)
-                * len(self.evictions) * len(self.prefetchers))
+                * len(self.evictions) * len(self.prefetchers)
+                * len(self.model_families))
 
     # ------------------------------------------------------------------
     def to_dict(self) -> Dict:
@@ -158,7 +179,8 @@ class Scenario:
 def scenario_from_dict(doc: Dict) -> Scenario:
     """JSON round-trip: lists come back as the dataclass's tuples."""
     kwargs = dict(doc)
-    for field in ("benches", "ratios", "evictions", "prefetchers", "seeds"):
+    for field in ("benches", "ratios", "evictions", "prefetchers", "seeds",
+                  "model_families"):
         if field in kwargs and kwargs[field] is not None:
             kwargs[field] = tuple(kwargs[field])
     return Scenario(**kwargs).validate()
@@ -261,6 +283,25 @@ register_scenario(Scenario(
     evictions=("lru", "hotcold"),
     prefetchers=("none", "tree"),
     scale=0.25,
+))
+
+register_scenario(Scenario(
+    name="transformer-smoke",
+    description=(
+        "CI smoke for the predictor-family axis: 2 small benchmarks x 1 "
+        "oversubscribed ratio x adaptive eviction x the learned "
+        "prefetcher, across the simplified AND reference-Transformer "
+        "families at scale 0.25 with short training — 4 cells proving "
+        "rows record their model_family and a concretely resolved "
+        "eviction policy through the pallas interpret-mode lanes "
+        "(scripts/ci_check.sh)"),
+    benches=("ATAX", "Pathfinder"),
+    ratios=(0.75,),
+    evictions=(ADAPTIVE_POLICY,),
+    prefetchers=("learned",),
+    model_families=("simplified", "transformer"),
+    scale=0.25,
+    service_steps=40,
 ))
 
 register_scenario(Scenario(

@@ -131,9 +131,10 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.families import MODEL_FAMILIES  # jax-free config layer
 from repro.distributed import fault_tolerance as ft
 from repro.traces.trace import ACCESS_DTYPE, Trace
-from repro.uvm import faults
+from repro.uvm import adaptive, faults
 from repro.uvm.replay_core import TransientBackendFault
 from repro.uvm.config import UVMConfig
 from repro.uvm.engine import simulate
@@ -161,8 +162,11 @@ BACKENDS = ("auto", "numpy", "pallas")
 #: numbers (v7: serve rows carry ``slo_source`` — ``kernel`` when the
 #: replay that ran the cell emitted its step clocks in-band, including
 #: the pallas lanes' in-kernel capture; ``side-pass`` when a separate
-#: NumPy replay recovered them)
-SWEEP_VERSION = 7
+#: NumPy replay recovered them; v8: learned cells carry a
+#: ``model_family`` column — simplified vs the reference Transformer
+#: variants — and the ``adaptive`` pseudo-policy resolves to a concrete
+#: policy at prepare time, recorded honestly in ``eviction``)
+SWEEP_VERSION = 8
 
 #: serving SLO columns (``repro.offload.serve_trace``): per-decode-step
 #: latency and time-to-first-token percentiles, None on non-serve rows
@@ -178,8 +182,8 @@ SERVE_LATENCY_FIELDS = (
 #: cell expanded from — None for ad-hoc grids)
 ROW_FIELDS = [
     "bench", "prefetcher", "scale", "seed", "window", "prediction_us",
-    "device_pages", "device_frac", "eviction", "scenario", "engine",
-    "backend", "n_accesses", "n_instructions",
+    "device_pages", "device_frac", "eviction", "model_family", "scenario",
+    "engine", "backend", "n_accesses", "n_instructions",
     "cycles", "ipc", "hits", "late", "faults", "hit_rate", "prefetch_issued",
     "prefetch_used", "accuracy", "coverage", "unity", "pages_migrated",
     "pages_evicted", "pcie_bytes", *SERVE_LATENCY_FIELDS, "slo_source",
@@ -199,11 +203,13 @@ class SweepCell:
     prediction_us: float = 1.0          # learned-model inference overhead
     device_pages: Optional[int] = None  # absolute capacity, or ...
     device_frac: Optional[float] = None  # ... fraction of the working set
-    eviction: str = "lru"               # lru | random | hotcold
+    eviction: str = "lru"               # lru | random | hotcold | adaptive
     scenario: Optional[str] = None      # scenario-registry entry (if any)
     engine: str = "auto"
     backend: str = "auto"               # numpy | pallas | auto
     service_steps: int = 150            # learned-predictor training steps
+    model_family: str = "simplified"    # predictor family for learned cells
+                                        # (repro.core.families.MODEL_FAMILIES)
 
     def to_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -221,6 +227,7 @@ def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
                 prediction_us: Sequence[float] = (1.0,),
                 device_fracs: Sequence[Optional[float]] = (None,),
                 evictions: Sequence[str] = ("lru",),
+                model_families: Sequence[str] = ("simplified",),
                 scenario: Optional[str] = None,
                 engine: str = "auto",
                 backend: str = "auto",
@@ -235,14 +242,16 @@ def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
                         for us in prediction_us:
                             for frac in device_fracs:
                                 for ev in evictions:
-                                    cells.append(SweepCell(
-                                        bench=bench, prefetcher=pf,
-                                        scale=scale, seed=seed,
-                                        window=window, prediction_us=us,
-                                        device_frac=frac, eviction=ev,
-                                        scenario=scenario,
-                                        engine=engine, backend=backend,
-                                        service_steps=service_steps))
+                                    for fam in model_families:
+                                        cells.append(SweepCell(
+                                            bench=bench, prefetcher=pf,
+                                            scale=scale, seed=seed,
+                                            window=window, prediction_us=us,
+                                            device_frac=frac, eviction=ev,
+                                            scenario=scenario,
+                                            engine=engine, backend=backend,
+                                            service_steps=service_steps,
+                                            model_family=fam))
     return cells
 
 
@@ -454,8 +463,9 @@ def make_prefetcher(cell: SweepCell, trace: Trace, config: UVMConfig,
         from repro.uvm import predcache
         pred_dir = (os.path.join(cache_dir, predcache.DEFAULT_SUBDIR)
                     if cache_dir else None)
-        preds = predcache.get_or_train(trace, steps=cell.service_steps,
-                                       cache_dir=pred_dir)
+        preds = predcache.get_or_train(
+            trace, steps=cell.service_steps, cache_dir=pred_dir,
+            service_kwargs={"model_family": cell.model_family})
         return LearnedPrefetcher(
             preds,
             extra_latency_cycles=cell.prediction_us * config.cycles_per_us)
@@ -480,8 +490,14 @@ def prepare_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
     device_pages = cell.device_pages
     if device_pages is None and cell.device_frac is not None:
         device_pages = int(trace.working_set_pages * cell.device_frac)
+    # the adaptive pseudo-policy resolves to a concrete one here, before
+    # the replay config exists: lane batches stay policy-homogeneous and
+    # the row's eviction column (from stats.eviction) records what ran
+    eviction = adaptive.resolve_eviction(cell.eviction, cell.bench,
+                                         trace=trace,
+                                         device_pages=device_pages)
     config = UVMConfig(prediction_overhead_us=cell.prediction_us,
-                       device_pages=device_pages, eviction=cell.eviction)
+                       device_pages=device_pages, eviction=eviction)
     if prefetcher is None:
         prefetcher = make_prefetcher(cell, trace, config,
                                      cache_dir=cache_dir)
@@ -1384,7 +1400,12 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="e.g. '0.5,0.75' (empty = no oversubscription)")
     ap.add_argument("--evictions", default="lru",
                     help="eviction policies under oversubscription, comma "
-                         f"list from {','.join(EVICTION_POLICIES)}")
+                         f"list from {','.join(EVICTION_POLICIES)} or "
+                         f"'{adaptive.ADAPTIVE_POLICY}' (resolved per cell "
+                         "at prepare time; rows record the concrete policy)")
+    ap.add_argument("--model-families", default="simplified",
+                    help="predictor families for learned cells, comma list "
+                         f"from {','.join(MODEL_FAMILIES)}")
     ap.add_argument("--scenario", default=None,
                     help="expand a named scenario from "
                          "repro.uvm.scenarios (e.g. 'oversub-full': the "
@@ -1436,10 +1457,16 @@ def main(argv: Optional[List[str]] = None) -> None:
                      f"workloads {','.join(sorted(SERVE_WORKLOADS))} "
                      "(rate variants like ServeBursty@r128 accepted)")
         evictions = args.evictions.split(",")
-        bad = [e for e in evictions if e not in EVICTION_POLICIES]
+        ev_vocab = EVICTION_POLICIES + (adaptive.ADAPTIVE_POLICY,)
+        bad = [e for e in evictions if e not in ev_vocab]
         if bad:
             ap.error(f"unknown eviction policy(ies) {','.join(bad)}; "
-                     f"choose from {','.join(EVICTION_POLICIES)}")
+                     f"choose from {','.join(ev_vocab)}")
+        model_families = args.model_families.split(",")
+        bad = [m for m in model_families if m not in MODEL_FAMILIES]
+        if bad:
+            ap.error(f"unknown model family(ies) {','.join(bad)}; "
+                     f"choose from {','.join(MODEL_FAMILIES)}")
         fracs: List[Optional[float]] = [None]
         if args.device_fracs:
             fracs += [float(x) for x in args.device_fracs.split(",")]
@@ -1449,7 +1476,8 @@ def main(argv: Optional[List[str]] = None) -> None:
             windows=[None if x == "full" else float(x)
                      for x in args.windows.split(",")],
             prediction_us=[float(x) for x in args.prediction_us.split(",")],
-            device_fracs=fracs, evictions=evictions, engine=args.engine,
+            device_fracs=fracs, evictions=evictions,
+            model_families=model_families, engine=args.engine,
             backend=backend)
     t0 = time.time()
     rows = run_sweep(cells, out_dir=args.out, workers=args.workers,

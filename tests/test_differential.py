@@ -14,7 +14,10 @@ Coverage is deliberately skewed toward the paper's hard regimes:
 * tree cells under oversubscription (escalation counts rising and falling
   through LRU churn — the regime the dense count arrays must track),
 * learned cells whose predictions ride through the ``repro.uvm.predcache``
-  atomic store (the ``learned-cached`` variant),
+  atomic store (the ``learned-cached`` variant, plus ``learned-tf``:
+  the Transformer-family stand-in cached under its own
+  ``model_family`` key — the model-family axis fuzzes across every
+  backend pair by construction),
 * tight-MSHR fault storms and ragged tiny traces,
 * serving-traffic traces (``repro.offload.serve_trace``): the
   PagedKVStore-derived trace source replays through the same guarantee,
@@ -51,7 +54,7 @@ FLOAT_FIELDS = ("cycles", "pcie_bytes")
 REQUIRED_BACKENDS = {"legacy", "numpy", "pallas"}
 
 PREFETCHER_NAMES = ("none", "block", "tree", "learned", "learned-cached",
-                    "oracle")
+                    "learned-tf", "oracle")
 
 
 def _mk_trace(pages):
@@ -168,12 +171,13 @@ def _seeded_cells():
     rng = np.random.default_rng(20260728)
     cells = []
     # every prefetcher family over random traces / caps / MSHR depths;
-    # the cap index shifts by one per repetition (i // 6) so each
-    # prefetcher sees a different capacity — including a real one — in
-    # each of its three policy-rotated appearances
+    # the cap index shifts by one per repetition of the name tuple so
+    # each prefetcher sees a different capacity — including a real one —
+    # in each of its three policy-rotated appearances
     for i, pf_name in enumerate(PREFETCHER_NAMES * 3):
+        rep = i // len(PREFETCHER_NAMES)
         cells.append((f"seed{i}", _random_pages(rng), pf_name,
-                      [None, 48, 200][(i + i // 6) % 3], [4, 16, 64][i % 3],
+                      [None, 48, 200][(i + rep) % 3], [4, 16, 64][i % 3],
                       EVICTION_POLICIES[(i // 3) % 3]))
     # every (prefetcher, policy) pair under a guaranteed-thrashing cap —
     # (backend pair x policy) coverage by construction, hypothesis or not

@@ -1,0 +1,109 @@
+"""Predictor-family config layer (``repro.core.families``): block-factory
+resolution, digests, the family axis on PredictorService, and the
+windowed-attention kernel backing the transformer-local family."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import attention as A
+from repro.core import families
+
+
+def test_family_registry_shape():
+    assert families.MODEL_FAMILIES[0] == "simplified"
+    assert set(families.MODEL_FAMILY_BLOCKS) == {"transformer",
+                                                 "transformer-local"}
+    assert set(families.MODEL_FAMILIES) == (
+        {"simplified"} | set(families.MODEL_FAMILY_BLOCKS))
+
+
+def test_validate_family_rejects_unknown():
+    families.validate_family("transformer")        # no raise
+    with pytest.raises(ValueError, match="unknown model family"):
+        families.validate_family("lstm")
+
+
+def test_family_config_resolution():
+    """The block overrides resolve onto the paper's configs: simplified is
+    the revised (quantized, bypassing) config; the transformer families
+    are the full reference encoder, full vs windowed attention."""
+    simp = families.family_config("simplified", n_classes=10)
+    assert simp.attention == "hlsh" and simp.quantize
+    assert simp.features == families.REVISED_FEATURES
+    assert simp.n_layers == 1 and simp.revised_dims
+    # the §6 bypass indicator: dominant-delta traces skip attention
+    bypassed = families.family_config("simplified", n_classes=10,
+                                      convergence=0.9)
+    assert bypassed.attention == "bypass"
+
+    tf = families.family_config("transformer", n_classes=10)
+    assert tf.arch == "transformer" and tf.attention == "full"
+    assert tf.n_layers == 2 and not tf.quantize
+    assert set(tf.features) == set(families.EMB_DIMS)
+
+    loc = families.family_config("transformer-local", n_classes=10)
+    assert loc.attention == "local" and loc.local_window == 8
+    # the families agree on everything except the block overrides
+    assert dataclasses.replace(
+        loc, attention="full", local_window=tf.local_window) == tf
+
+
+def test_family_config_quantize_guard():
+    """The reference Transformer is the paper's *unquantized* baseline:
+    asking for a quantized transformer must not silently produce one."""
+    cfg = families.family_config("transformer", n_classes=5, quantize=True)
+    assert not cfg.quantize
+
+
+def test_config_digests_distinct_and_stable():
+    digests = {fam: families.config_digest(
+        families.family_config(fam, n_classes=7))
+        for fam in families.MODEL_FAMILIES}
+    assert len(set(digests.values())) == len(families.MODEL_FAMILIES)
+    # deterministic across calls (the predcache key depends on this)
+    again = families.config_digest(
+        families.family_config("transformer", n_classes=7))
+    assert again == digests["transformer"]
+    # and sensitive to any config axis, not just the family name
+    moved = families.config_digest(dataclasses.replace(
+        families.family_config("transformer", n_classes=7), n_heads=8))
+    assert moved != digests["transformer"]
+
+
+def test_service_model_config_property():
+    """PredictorService.model_config digests the *resolved* family config
+    with trace-determined fields pinned to sentinels — equal across
+    traces, distinct across families, distinct across service knobs that
+    reach the architecture."""
+    from repro.core.service import PredictorService
+
+    a = PredictorService(steps=5, model_family="transformer")
+    b = PredictorService(steps=9, model_family="transformer")
+    assert a.model_config == b.model_config        # steps is keyed separately
+    c = PredictorService(steps=5, model_family="transformer-local")
+    assert a.model_config != c.model_config
+
+
+def test_local_attention_matches_full_when_window_covers():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 12, 8)), jnp.float32)
+    full = A.full_attention(x, x, x)
+    loc = A.local_attention(x, x, x, window=11)    # band covers everything
+    np.testing.assert_allclose(np.asarray(loc), np.asarray(full), atol=1e-5)
+
+
+def test_local_attention_windowed_semantics():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 16, 8)), jnp.float32)
+    loc = A.local_attention(x, x, x, window=2)
+    assert loc.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(loc)))
+    # a small window really changes the output vs full attention
+    full = A.full_attention(x, x, x)
+    assert not np.allclose(np.asarray(loc), np.asarray(full), atol=1e-4)
+    # window=0 attends only to self: softmax over one logit -> V itself
+    self_only = A.local_attention(x, x, x, window=0)
+    np.testing.assert_allclose(np.asarray(self_only), np.asarray(x),
+                               atol=1e-5)

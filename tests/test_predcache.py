@@ -249,3 +249,126 @@ def test_corrupt_entry_quarantined_and_retrained(tmp_path):
     # a rewritten entry round-trips again
     predcache.store(cache, key_t, preds)
     np.testing.assert_array_equal(predcache.load(cache, key_t), preds)
+
+
+def test_model_family_keys_never_cross_serve(tmp_path, monkeypatch):
+    """Tentpole regression: the key carries the model identity
+    (``model_family`` + resolved-config digest), so two predictor
+    families on the same trace get distinct keys and can never serve
+    each other's cached arrays — through the memo or the disk cache."""
+    from repro.core.families import MODEL_FAMILIES
+    from repro.core.service import PredictorService
+
+    predcache.clear_memo()
+    cache = str(tmp_path)
+    tr = _mk_trace(np.arange(300) % 41)
+    keys = {}
+    for fam in MODEL_FAMILIES:
+        svc = PredictorService(steps=5, model_family=fam)
+        fields = {f: getattr(svc, f) for f in predcache.SERVICE_KEY_FIELDS}
+        keys[fam] = predcache.predictions_key(tr, **fields)
+    assert len(set(keys.values())) == len(MODEL_FAMILIES)
+
+    # train both families with distinguishable outputs: a collision
+    # would surface the wrong family's fill value
+    fills = {"simplified": 1, "transformer": 2}
+    monkeypatch.setattr(PredictorService, "fit",
+                        lambda self, *a, **k: None)
+    monkeypatch.setattr(
+        PredictorService, "predict_trace",
+        lambda self: np.full(len(tr), fills[self.model_family],
+                             dtype=np.int64))
+    simp = predcache.get_or_train(
+        tr, steps=5, cache_dir=cache,
+        service_kwargs={"model_family": "simplified"})
+    tf = predcache.get_or_train(
+        tr, steps=5, cache_dir=cache,
+        service_kwargs={"model_family": "transformer"})
+    assert int(simp[0]) == 1 and int(tf[0]) == 2
+
+    # cold memo: both must come back family-correct from *disk*, and a
+    # hit must not retrain
+    predcache.clear_memo()
+    monkeypatch.setattr(
+        PredictorService, "fit",
+        lambda self, *a, **k: (_ for _ in ()).throw(
+            AssertionError("disk hit must not train")))
+    for fam, want in fills.items():
+        got = predcache.get_or_train(tr, steps=5, cache_dir=cache,
+                                     service_kwargs={"model_family": fam})
+        assert int(got[0]) == want
+    predcache.clear_memo()
+
+
+def test_trace_content_key_freezes_accesses():
+    """Satellite: the content key is memoized on the trace, which is only
+    sound if the hashed bytes cannot change afterwards — keying must
+    freeze the access array so a later in-place mutation raises instead
+    of silently reusing a stale fingerprint."""
+    tr = _mk_trace(np.arange(200) % 23)
+    assert tr.accesses.flags.writeable
+    k0 = predcache.trace_content_key(tr)
+    assert not tr.accesses.flags.writeable
+    with pytest.raises(ValueError):
+        tr.accesses["page"][0] = 12345
+    # the memoized key stays honest: unchanged bytes, unchanged key
+    assert predcache.trace_content_key(tr) == k0
+
+
+def test_corrupt_holder_stolen_without_burning_patience(tmp_path,
+                                                        monkeypatch):
+    """Satellite: a lock holder that trained, stored a *corrupt* entry
+    (injected via the ``pred.artifact`` fault plane), and died must not
+    cost waiters the full ``lock_patience_s``: the checksummed probe
+    observes the corruption, quarantines the entry, steals the
+    still-live-looking foreign lease, and retrains immediately."""
+    import json
+    import time
+
+    from repro.core.service import PredictorService
+    from repro.uvm import faults
+
+    predcache.clear_memo()
+    cache = str(tmp_path / "cache")
+    ledger = str(tmp_path / "ledger")
+    tr = _mk_trace(np.arange(150) % 13)
+    svc = PredictorService(steps=5)
+    fields = {f: getattr(svc, f) for f in predcache.SERVICE_KEY_FIELDS}
+    key = predcache.predictions_key(tr, **fields)
+    path = predcache._path(cache, key)
+
+    # the "holder": stores its result under a fault plan that truncates
+    # the entry right after the atomic rename (bounded to one firing, so
+    # the waiter's own retrain stores cleanly), then dies mid-lease
+    plan = {"seed": 0, "ledger_dir": ledger, "specs": [
+        {"site": "pred.artifact", "kind": "truncate", "prob": 1.0,
+         "max_count": 1}]}
+    monkeypatch.setenv(faults.FAULT_PLAN_ENV, json.dumps(plan))
+    faults.reset()
+    try:
+        predcache.store(cache, key, np.zeros(len(tr), dtype=np.int64))
+    finally:
+        monkeypatch.delenv(faults.FAULT_PLAN_ENV)
+        faults.reset()
+    assert os.listdir(ledger)            # the corruption really fired
+    # its lease looks *live*: foreign host (no pid probe possible) with a
+    # fresh timestamp, so neither the dead-pid nor the TTL path steals it
+    with open(path + ".lock", "w") as f:
+        json.dump({"pid": 1, "host": "definitely-not-this-host",
+                   "ts": time.time(), "role": "predcache-train"}, f)
+
+    monkeypatch.setattr(PredictorService, "fit",
+                        lambda self, *a, **k: None)
+    monkeypatch.setattr(PredictorService, "predict_trace",
+                        lambda self: np.full(len(tr), 5, dtype=np.int64))
+    t0 = time.monotonic()
+    with pytest.warns(RuntimeWarning, match="quarantining"):
+        got = predcache.get_or_train(tr, steps=5, cache_dir=cache,
+                                     lock_poll_s=0.25,
+                                     lock_patience_s=60.0)
+    waited = time.monotonic() - t0
+    assert int(got[0]) == 5              # retrained, not the corrupt zeros
+    assert waited < 15.0                 # did not wait out the lease
+    assert os.path.exists(path + ".corrupt")
+    np.testing.assert_array_equal(predcache.load(cache, key), got)
+    predcache.clear_memo()

@@ -23,8 +23,10 @@ import json
 import numpy as np
 import pytest
 
+from repro.core.families import MODEL_FAMILIES
 from repro.traces.trace import Trace, make_records
 from repro.uvm import UVMConfig
+from repro.uvm.adaptive import ADAPTIVE_POLICY
 from repro.uvm.eviction import (EVICTION_POLICIES, eviction_score,
                                 eviction_scores, make_eviction_policy)
 from repro.uvm.golden import make_prefetcher
@@ -91,6 +93,26 @@ def test_oversub_smoke_stays_small():
     assert s.n_cells() == 2 * 2 * 3 * 2
 
 
+def test_transformer_smoke_family_axis():
+    """The predictor-family CI smoke: 2 benches x adaptive eviction x
+    learned, across two model families — 4 cells, each keyed distinctly
+    by its family."""
+    s = get_scenario("transformer-smoke")
+    assert s.model_families == ("simplified", "transformer")
+    assert all(f in MODEL_FAMILIES for f in s.model_families)
+    assert s.evictions == (ADAPTIVE_POLICY,)
+    assert s.prefetchers == ("learned",)
+    assert s.n_cells() == 2 * 1 * 1 * 1 * 2
+    cells = expand_scenario("transformer-smoke", backend="pallas")
+    assert len(cells) == s.n_cells()
+    assert {c.model_family for c in cells} == {"simplified", "transformer"}
+    assert all(c.eviction == ADAPTIVE_POLICY for c in cells)
+    # the family axis is part of the resume key
+    assert len({c.key() for c in cells}) == len(cells)
+    back = scenario_from_dict(json.loads(json.dumps(s.to_dict())))
+    assert back == s and back.cells() == s.cells()
+
+
 def test_scenario_json_roundtrip():
     s = get_scenario("oversub-full")
     back = scenario_from_dict(json.loads(json.dumps(s.to_dict())))
@@ -107,6 +129,12 @@ def test_scenario_validation_rejects_bad_axes():
         Scenario(**{**ok, "evictions": ("lru", "mru")}).validate()
     with pytest.raises(ValueError, match="unknown prefetchers"):
         Scenario(**{**ok, "prefetchers": ("psychic",)}).validate()
+    with pytest.raises(ValueError, match="unknown model_families"):
+        Scenario(**{**ok, "model_families": ("lstm",)}).validate()
+    with pytest.raises(ValueError, match="empty model_families"):
+        Scenario(**{**ok, "model_families": ()}).validate()
+    # the adaptive pseudo-policy is part of the evictions vocabulary
+    Scenario(**{**ok, "evictions": ("lru", ADAPTIVE_POLICY)}).validate()
     with pytest.raises(ValueError, match="ratios"):
         Scenario(**{**ok, "ratios": ()}).validate()
     with pytest.raises(ValueError, match="ratios"):

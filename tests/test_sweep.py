@@ -604,6 +604,93 @@ def test_trace_memo_disabled_rereads_disk(tmp_path, monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# model-family axis + adaptive eviction resolution
+# ---------------------------------------------------------------------------
+
+def test_grid_model_family_axis():
+    """model_families is a first-class grid axis: cells carry it, key on
+    it, and rows record it."""
+    cells = expand_grid(["ATAX"], ["learned"], scales=[0.25],
+                        model_families=["simplified", "transformer"])
+    assert len(cells) == 2
+    assert [c.model_family for c in cells] == ["simplified", "transformer"]
+    assert len({c.key() for c in cells}) == 2
+    assert "model_family" in ROW_FIELDS
+
+
+def test_row_records_model_family(monkeypatch):
+    """The learned cell hands its family to predcache (so training keys
+    on the model identity) and the row records which family replayed."""
+    from repro.uvm import predcache as predcache_mod
+
+    seen = []
+
+    def fake_get_or_train(trace, *, steps, cache_dir=None,
+                          service_kwargs=None, **kw):
+        seen.append(dict(service_kwargs or {}, steps=steps))
+        return np.full(len(trace.accesses), -1, dtype=np.int64)
+
+    monkeypatch.setattr(predcache_mod, "get_or_train", fake_get_or_train)
+    row = simulate_cell(SweepCell("ATAX", "learned", scale=0.25,
+                                  model_family="transformer",
+                                  service_steps=5))
+    assert seen == [{"model_family": "transformer", "steps": 5}]
+    assert row["model_family"] == "transformer"
+    # non-learned cells default to (and record) the simplified family
+    base = simulate_cell(SweepCell("ATAX", "none", scale=0.25))
+    assert base["model_family"] == "simplified"
+
+
+def test_adaptive_cell_resolves_to_concrete_policy(tmp_path, monkeypatch):
+    """An adaptive cell resolves at prepare time — the row's eviction
+    column records the concrete policy that replayed, never the
+    ``adaptive`` literal, and a selector table pins the choice."""
+    from repro.uvm import adaptive
+
+    adaptive.clear_memo()
+    row = simulate_cell(SweepCell("ATAX", "none", scale=0.25,
+                                  device_frac=0.5, eviction="adaptive"))
+    from repro.uvm.eviction import EVICTION_POLICIES
+    assert row["eviction"] in EVICTION_POLICIES
+
+    table = tmp_path / "table.json"
+    table.write_text(json.dumps({"ATAX": "hotcold"}))
+    monkeypatch.setenv("REPRO_ADAPTIVE_TABLE", str(table))
+    pinned = simulate_cell(SweepCell("ATAX", "none", scale=0.25,
+                                     device_frac=0.5, eviction="adaptive"))
+    assert pinned["eviction"] == "hotcold"
+    # no pressure -> every policy is a no-op -> canonical lru
+    monkeypatch.delenv("REPRO_ADAPTIVE_TABLE")
+    free = simulate_cell(SweepCell("Pathfinder", "none", scale=0.25,
+                                   eviction="adaptive"))
+    assert free["eviction"] == "lru"
+    adaptive.clear_memo()
+
+
+def test_selector_from_rows_picks_cheapest_per_bench():
+    from repro.uvm.adaptive import selector_from_rows
+
+    rows = [
+        {"bench": "A", "eviction": "lru", "cycles": 300},
+        {"bench": "A", "eviction": "random", "cycles": 100},
+        {"bench": "A", "eviction": "hotcold", "cycles": 200},
+        # bench B: two rows per policy -> mean decides
+        {"bench": "B", "eviction": "lru", "cycles": 100},
+        {"bench": "B", "eviction": "lru", "cycles": 300},
+        {"bench": "B", "eviction": "hotcold", "cycles": 150},
+        {"bench": "B", "eviction": "hotcold", "cycles": 150},
+        # ties break in EVICTION_POLICIES order (lru first)
+        {"bench": "C", "eviction": "random", "cycles": 50},
+        {"bench": "C", "eviction": "lru", "cycles": 50},
+        # quarantined rows (no cycles) and adaptive literals are ignored
+        {"bench": "D", "eviction": "lru", "cycles": None},
+        {"bench": "D", "eviction": "adaptive", "cycles": 10},
+    ]
+    assert selector_from_rows(rows) == {"A": "random", "B": "hotcold",
+                                        "C": "lru"}
+
+
+# ---------------------------------------------------------------------------
 # serve rows: SLO columns come from in-band step clocks (slo_source)
 # ---------------------------------------------------------------------------
 

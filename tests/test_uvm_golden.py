@@ -103,7 +103,7 @@ def _family_of(cell_id):
     pf = cell_id.split("/")[1]
     return {"none": "demand", "block": "demand", "tree": "tree",
             "learned": "learned", "learned-cached": "learned",
-            "oracle": "oracle"}[pf]
+            "learned-tf": "learned", "oracle": "oracle"}[pf]
 
 
 PALLAS_LANE_GROUPS = {}
@@ -179,6 +179,18 @@ def test_cached_learned_matches_plain_learned():
     for cell_id in pairs:
         plain = cell_id.replace("/learned-cached", "/learned")
         assert GOLDEN[cell_id] == GOLDEN[plain], cell_id
+
+
+def test_family_keyed_cache_distinguishes_learned_tf():
+    """learned-tf rides the same predcache round trip as learned-cached
+    but under ``model_family="transformer"`` with a different prediction
+    distance.  If the cache key ignored the model family, the round trip
+    would cross-serve the simplified cells' distance-32 array and every
+    learned-tf fixture would collapse onto its plain learned sibling."""
+    pairs = [c for c in GOLDEN if c.endswith("/learned-tf")]
+    assert pairs
+    assert any(GOLDEN[c] != GOLDEN[c.replace("/learned-tf", "/learned")]
+               for c in pairs)
 
 
 def test_timeline_equivalence():
@@ -342,7 +354,7 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=25, deadline=None)
     @given(st_.lists(st_.integers(0, 600), min_size=20, max_size=300),
            st_.sampled_from(["none", "block", "tree", "learned",
-                             "learned-cached", "oracle"]),
+                             "learned-cached", "learned-tf", "oracle"]),
            st_.sampled_from([None, 48, 200]))
     def test_property_equivalence(pages, pf_name, cap):
         from repro.uvm.golden import make_prefetcher
