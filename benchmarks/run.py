@@ -26,7 +26,7 @@ import traceback
 
 from benchmarks import (common, family_accuracy, fig5_features,
                         fig6_convergence,
-                        fig9_predictors, oversub_bench,
+                        fig9_predictors, mt_bench, oversub_bench,
                         fig10_latency, fig12_pcie, kernels_bench,
                         offload_bench, perf_ipc, serve_bench,
                         table1_transformer,
@@ -60,6 +60,8 @@ SUITES = [
     ("oversub", lambda: oversub_bench.main([])),
     # serving-traffic SLO sweep (rate x capacity x eviction x prefetcher)
     ("serve", lambda: serve_bench.main([])),
+    # multi-tenant interference sweep (pair x capacity split x eviction)
+    ("mt", lambda: mt_bench.main([])),
 ]
 
 
@@ -111,8 +113,10 @@ def main() -> None:
                 scenario_argv += ["--emit-json",
                                   f"{args.emit_json}.{scen}.rows.json"]
             # serve-* scenarios route through serve_bench so the printed
-            # table carries the SLO latency columns
+            # table carries the SLO latency columns; mt-* through
+            # mt_bench for the per-tenant/interference columns
             module = (serve_bench if scen.startswith("serve")
+                      else mt_bench if scen.startswith("mt")
                       else oversub_bench)
             suites.append((f"scenario:{scen}",
                            lambda m=module, a=scenario_argv: m.main(a)))

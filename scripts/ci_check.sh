@@ -106,6 +106,48 @@ print(f"[ci] serve smoke ok: {len(rows)} rows, policies {sorted(policies)}, "
 PYEOF
 rm -rf "$SRV_OUT"
 
+echo "[ci] multi-tenant smoke: mt-smoke (1 interleaved bench pair x 2"
+echo "[ci] oversubscribed ratios x 3 capacity splits (shared / hard 50-50"
+echo "[ci] / 40-40 + spill) x all eviction policies x none/tree) through"
+echo "[ci] the pallas lanes in interpret mode; every row must record"
+echo "[ci] tenants, its capacity split, both per-tenant hit rates, and"
+echo "[ci] the interference slowdown vs the tenants' solo replays"
+MT_OUT="$(mktemp -d "${TMPDIR:-/tmp}/ci_mt_smoke.XXXXXX")"
+JAX_PLATFORMS=cpu python -m repro.uvm.sweep --scenario mt-smoke \
+    --backend pallas --out "$MT_OUT"
+python - "$MT_OUT" <<'PYEOF'
+import json, sys
+rows = json.load(open(sys.argv[1] + "/results.json"))["rows"]
+assert len(rows) == 36, f"mt smoke expanded {len(rows)} cells, not 36"
+bad = [r for r in rows if r["backend"] != "pallas"]
+assert not bad, f"{len(bad)} mt cells fell off the pallas lanes"
+policies = {r["eviction"] for r in rows}
+assert policies == {"lru", "random", "hotcold"}, policies
+splits = {r["capacity_split"] for r in rows}
+assert splits == {"shared", "0.5/0.5", "0.4/0.4"}, splits
+for r in rows:
+    assert r["scenario"] == "mt-smoke"
+    assert r["tenants"] == 2, r["tenants"]
+    # hit rates may legitimately hit 0.0 (streaming tenant under demand
+    # paging); slowdowns are ratios of positive cycle counts, never 0
+    for f in ("hit_rate_t0", "hit_rate_t1"):
+        assert isinstance(r[f], float) and r[f] >= 0.0, (f, r.get(f))
+    for f in ("slowdown_t0", "slowdown_t1", "interference_slowdown"):
+        assert isinstance(r[f], float) and r[f] > 0.0, (f, r.get(f))
+    assert abs(r["interference_slowdown"]
+               - max(r["slowdown_t0"], r["slowdown_t1"])) < 1e-12
+# the quota must do visible work: under pressure, the hard 50/50 split
+# lifts tenant 0's hit rate over shared contention for the same cell
+key = lambda r: (r["device_frac"], r["eviction"], r["prefetcher"])
+shared = {key(r): r for r in rows if r["capacity_split"] == "shared"}
+lifted = sum(1 for r in rows if r["capacity_split"] == "0.5/0.5"
+             and r["hit_rate_t0"] > shared[key(r)]["hit_rate_t0"])
+assert lifted > 0, "no quota cell improved tenant 0 over shared capacity"
+print(f"[ci] mt smoke ok: {len(rows)} rows, splits {sorted(splits)}, "
+      f"{lifted} quota cells lifted the protected tenant")
+PYEOF
+rm -rf "$MT_OUT"
+
 echo "[ci] chaos-smoke: the chaos-smoke scenario fault-free and under the"
 echo "[ci] bounded kill+corrupt+raise plan (SIGKILLed drivers restarted,"
 echo "[ci] torn/corrupted artifacts quarantined + regenerated); the final"
@@ -138,7 +180,7 @@ TF_OUT="$(mktemp -d "${TMPDIR:-/tmp}/ci_tf_smoke.XXXXXX")"
 REPRO_ADAPTIVE_TABLE=ADAPTIVE_selector.json JAX_PLATFORMS=cpu \
     python -m repro.uvm.sweep --scenario transformer-smoke \
     --backend pallas --out "$TF_OUT"
-python - "$TF_OUT" <<'PYEOF'
+python - "$TF_OUT" ADAPTIVE_selector.json <<'PYEOF'
 import json, sys
 rows = json.load(open(sys.argv[1] + "/results.json"))["rows"]
 assert len(rows) == 4, f"transformer smoke expanded {len(rows)} cells, not 4"
@@ -150,10 +192,15 @@ assert fams == {"simplified", "transformer"}, fams
 # records the concrete policy the selector resolved to for its benchmark
 leaked = [r["bench"] for r in rows if r["eviction"] == "adaptive"]
 assert not leaked, f"rows recorded the adaptive literal: {leaked}"
+# data-driven against the committed selector table (re-recorded via
+# scripts/record_adaptive_selector.py): each bench must resolve to
+# exactly its table entry
+selector = json.load(open(sys.argv[2]))["selector"]
 by_bench = {}
 for r in rows:
     by_bench.setdefault(r["bench"], set()).add(r["eviction"])
-assert by_bench == {"ATAX": {"random"}, "Pathfinder": {"hotcold"}}, by_bench
+want = {b: {selector[b]} for b in by_bench}
+assert by_bench == want, f"{by_bench} != selector picks {want}"
 print(f"[ci] transformer smoke ok: {len(rows)} rows, families {sorted(fams)}, "
       f"adaptive resolved " + str({b: sorted(p) for b, p in by_bench.items()}))
 PYEOF
@@ -175,6 +222,12 @@ REPRO_SWEEP_CACHE_DIR="$BENCH_TMP/sweep_cache" JAX_PLATFORMS=cpu \
     python -m benchmarks.run --scenario serve-smoke,oversub-smoke \
     --emit-json "$BENCH_TMP/sweep.json"
 python scripts/check_bench.py BENCH_sweep.json "$BENCH_TMP/sweep.json"
+# multi-tenant trajectory: the per-tenant hit rates and interference
+# slowdowns are counter_* fields, so any accounting drift fails exactly
+# (backend-agnostic — the backends are bit-equal on mt cells)
+REPRO_SWEEP_CACHE_DIR="$BENCH_TMP/mt_cache" JAX_PLATFORMS=cpu \
+    python -m benchmarks.mt_bench --emit-json "$BENCH_TMP/mt.json"
+python scripts/check_bench.py BENCH_mt.json "$BENCH_TMP/mt.json"
 
 echo "[ci] predictor families: simplified-vs-Transformer accuracy benchmark"
 echo "[ci] (quick smoke set, trained fresh: benchmarks/cache is gitignored)"

@@ -17,11 +17,17 @@ Resolution order:
    ``{bench: policy}`` mapping, e.g. distilled from a previous scenario
    matrix via :func:`selector_from_rows`) — the "pick the policy per
    benchmark from scenario-matrix results" path.
-2. **Probe replay**: with no table entry, a short demand-paging replay of
-   the cell's own trace prefix under every policy (NumPy backend,
-   capacity scaled to preserve the cell's oversubscription ratio) picks
-   the cheapest-in-cycles policy.  Deterministic, memoized per (trace
-   content, device capacity), and cheap relative to a full cell replay.
+2. **Probe replay**: with no table entry, a short replay of the cell's
+   own trace prefix under every policy (NumPy backend, capacity scaled
+   to preserve the cell's oversubscription ratio) picks the
+   cheapest-in-cycles policy.  The probe runs under a cheap *proxy* of
+   the cell's prefetcher family — demand paging for ``none``, the real
+   block/tree prefetchers for theirs, and an oracle over the prefix for
+   ``oracle`` **and** ``learned`` (training a predictor inside a probe
+   would cost more than the cell) — because the best policy depends on
+   which pages prefetching keeps warm, not just the demand stream.
+   Deterministic, memoized per (trace content, device capacity, proxy
+   family), and cheap relative to a full cell replay.
 3. **No eviction pressure** (capacity absent or >= working set): every
    policy is a no-op, resolve to the canonical first policy (``lru``).
 """
@@ -49,9 +55,10 @@ def is_adaptive(policy: Optional[str]) -> bool:
 
 
 def clear_memo() -> None:
-    """Drop the probe memo (tests)."""
+    """Drop the probe memo and the parsed-table cache (tests)."""
     with _MEMO_LOCK:
         _MEMO.clear()
+        _TABLE_CACHE.clear()
 
 
 def selector_from_rows(rows: Iterable[Dict]) -> Dict[str, str]:
@@ -77,24 +84,77 @@ def selector_from_rows(rows: Iterable[Dict]) -> Dict[str, str]:
     return out
 
 
+#: parsed selector tables keyed by (path, mtime_ns): the sweep's prepare
+#: stage resolves a cell per *thread*, and re-reading + re-parsing the
+#: JSON once per cell turned the table lookup into a hot stat+parse loop
+#: on large grids — the cache re-reads only when the file actually
+#: changes on disk
+_TABLE_CACHE: Dict[Tuple[str, int], Dict[str, str]] = {}
+
+
 def _table() -> Dict[str, str]:
     path = os.environ.get("REPRO_ADAPTIVE_TABLE")
     if not path:
         return {}
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError as e:
+        raise FileNotFoundError(
+            f"REPRO_ADAPTIVE_TABLE points at an unreadable selector "
+            f"table {path!r} ({e}); unset the variable or fix the path "
+            "(the table format is the JSON written by "
+            "'python -m repro.uvm.adaptive')") from e
+    key = (path, mtime)
+    with _MEMO_LOCK:
+        hit = _TABLE_CACHE.get(key)
+    if hit is not None:
+        return hit
     with open(path) as f:
         doc = json.load(f)
     if isinstance(doc, dict) and isinstance(doc.get("selector"), dict):
         doc = doc["selector"]
-    return {str(b): validate_policy(p) for b, p in doc.items()}
+    table = {str(b): validate_policy(p) for b, p in doc.items()}
+    with _MEMO_LOCK:
+        _TABLE_CACHE.clear()          # one live table at a time
+        _TABLE_CACHE[key] = table
+    return table
 
 
-def _probe(trace, device_pages: int, probe_accesses: int) -> str:
-    """Replay a demand-paging prefix of ``trace`` under every concrete
-    policy and return the cheapest.  Capacity is scaled so the prefix
-    sees the same oversubscription ratio as the full cell."""
+#: probe prefetcher proxy per cell prefetcher family — ``learned``
+#: probes under an oracle over the prefix (its predictions are
+#: near-oracle when trained, and training inside a probe would dwarf
+#: the cell itself)
+_PROBE_PROXIES = {"none": "none", "block": "block", "tree": "tree",
+                  "oracle": "oracle", "learned": "oracle"}
+
+
+def probe_proxy(prefetcher: Optional[str]) -> str:
+    """The proxy family a cell's prefetcher probes under (also the memo
+    key component, so e.g. oracle and learned cells share one probe)."""
+    return _PROBE_PROXIES.get(prefetcher or "none", "none")
+
+
+def _probe_prefetcher(proxy: str, prefix):
+    from repro.uvm.prefetchers import (BlockPrefetcher, NoPrefetcher,
+                                       OraclePrefetcher, TreePrefetcher)
+    if proxy == "block":
+        return BlockPrefetcher()
+    if proxy == "tree":
+        return TreePrefetcher()
+    if proxy == "oracle":
+        import numpy as np
+        return OraclePrefetcher(np.asarray(prefix.pages))
+    return NoPrefetcher()
+
+
+def _probe(trace, device_pages: int, probe_accesses: int,
+           proxy: str = "none") -> str:
+    """Replay a prefix of ``trace`` under every concrete policy (with
+    the cell's probe-proxy prefetcher) and return the cheapest.
+    Capacity is scaled so the prefix sees the same oversubscription
+    ratio as the full cell."""
     # local imports: this module is part of the sweep's jax-free surface
     from repro.uvm.config import UVMConfig
-    from repro.uvm.prefetchers import NoPrefetcher
     from repro.uvm.replay_core import ReplayRequest, dispatch
 
     n = len(trace.accesses)
@@ -106,8 +166,9 @@ def _probe(trace, device_pages: int, probe_accesses: int) -> str:
     best = None
     for i, policy in enumerate(EVICTION_POLICIES):
         cfg = UVMConfig(device_pages=probe_pages, eviction=policy)
-        stats = dispatch(ReplayRequest(prefix, NoPrefetcher(), cfg),
-                         backend="numpy")
+        stats = dispatch(
+            ReplayRequest(prefix, _probe_prefetcher(proxy, prefix), cfg),
+            backend="numpy")
         score = (stats.cycles, i)
         if best is None or score < best[0]:
             best = (score, policy)
@@ -116,14 +177,18 @@ def _probe(trace, device_pages: int, probe_accesses: int) -> str:
 
 def resolve_eviction(policy: str, bench: str, trace=None,
                      device_pages: Optional[int] = None,
-                     probe_accesses: int = PROBE_ACCESSES) -> str:
+                     probe_accesses: int = PROBE_ACCESSES,
+                     prefetcher: Optional[str] = None) -> str:
     """Resolve a cell's eviction policy to a concrete one.
 
     Non-adaptive policies validate and pass through unchanged.  For
     ``adaptive``: selector table first, then the probe replay (memoized
-    per (trace content, capacity) — thread-safe, the sweep's prepare
-    stage runs in a pool), and ``lru`` when there is no eviction
-    pressure to measure.
+    per (trace content, capacity, probe-proxy family) — thread-safe,
+    the sweep's prepare stage runs in a pool), and ``lru`` when there
+    is no eviction pressure to measure.  ``prefetcher`` is the cell's
+    prefetcher name: the probe replays under its proxy family (see
+    :func:`probe_proxy`) so a tree-prefetched cell is not resolved from
+    demand-paging behavior it will never exhibit.
     """
     if not is_adaptive(policy):
         return validate_policy(policy)
@@ -133,14 +198,15 @@ def resolve_eviction(policy: str, bench: str, trace=None,
     if (trace is None or device_pages is None
             or device_pages >= trace.working_set_pages):
         return EVICTION_POLICIES[0]
+    proxy = probe_proxy(prefetcher)
     from repro.uvm import predcache
     memo_key = (predcache.trace_content_key(trace), device_pages,
-                probe_accesses)
+                probe_accesses, proxy)
     with _MEMO_LOCK:
         hit = _MEMO.get(memo_key)
     if hit is not None:
         return hit
-    choice = _probe(trace, device_pages, probe_accesses)
+    choice = _probe(trace, device_pages, probe_accesses, proxy)
     with _MEMO_LOCK:
         _MEMO.setdefault(memo_key, choice)
     return choice

@@ -87,13 +87,14 @@ import numpy as np
 
 from repro.traces.trace import BASIC_BLOCK_PAGES, ROOT_PAGES
 from repro.uvm.eviction import (EVICTION_POLICIES, SCORE_MULT_1,
-                                SCORE_MULT_2, SCORE_SEED_MULT)
+                                SCORE_MULT_2, SCORE_SEED_MULT,
+                                resolve_tenancy)
 from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
                                    NoPrefetcher, OraclePrefetcher,
                                    Prefetcher, TreePrefetcher)
 from repro.uvm.replay_core import (ReplayBackend, ReplayRequest,
                                    cycles_per_access, dense_bounds)
-from repro.uvm.simulator import UVMStats
+from repro.uvm.simulator import UVMStats, _tenant_accesses
 
 #: lane-family kind per exact prefetcher type — the single source of
 #: truth the scheduler derives its name-level family map from (oracle
@@ -143,11 +144,16 @@ ORACLE_MAX_EXTRAS = 16
 MAX_LANE_STEPS = 1 << 16
 
 _N_FPARAMS = 8       # cpa, page_tx, far_fault, ptw, pcie_lat, pfo, extra, page_size
-_N_IPARAMS = 6       # n_accesses, device_pages(-1=uncapped), mshr, has_block,
-#                      n_ft, lane-lo mod 2^32 (random-policy priority draws)
+_N_IPARAMS = 9       # n_accesses, device_pages(-1=uncapped), mshr, has_block,
+#                      n_ft, lane-lo mod 2^32 (random-policy priority draws),
+#                      tenant boundary (dense; IMAX = single-tenant lane),
+#                      q0, q1 (per-tenant quota pages; q0 = -1 = shared mode)
 STAT_FIELDS = ("cycles", "hits", "late", "faults", "prefetch_issued",
                "prefetch_used", "pages_migrated", "pages_evicted",
                "pcie_bytes")
+#: extra per-lane stat column of multi-tenant kernels (``mt=True``):
+#: tenant-0 hits, appended after STAT_FIELDS (tenant-1 hits = hits - t0)
+MT_STAT_FIELDS = ("hits_t0",)
 
 #: lane-family max trace lengths (see MAX_LANE_ACCESSES note above)
 _FAMILY_MAX_ACCESSES = {
@@ -190,7 +196,7 @@ def _bucket(n: int, floor: int) -> int:
 @functools.lru_cache(maxsize=None)
 def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                     span: int, buf_len: int, ft_len: int, lookahead: int,
-                    steps_len: int, interpret: bool):
+                    steps_len: int, mt: bool, interpret: bool):
     """Build (and cache) the jitted multi-lane replay for one batch shape.
 
     ``family`` is the kernel kind (demand/tree/learned/oracle); ``ft_len``
@@ -199,6 +205,17 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
     (a batch is policy-homogeneous: the victim-selection code and the
     extra per-lane carry — ``random`` priority draws, ``hotcold``
     frequency counts — are static kernel structure).
+
+    ``mt`` enables multi-tenant lane support (``repro.traces.interleave``):
+    per-lane tenancy parameters (dense region boundary + per-tenant
+    quotas), a tenant-0 residency carry, per-tenant quota eviction with
+    tenant-masked victim selection, and a tenant-0 hit-count carry drained
+    into one extra stat column (:data:`MT_STAT_FIELDS`).  Tenancy is
+    *per-lane dynamic*: a single-tenant lane of an mt batch rides with
+    boundary = IMAX and ``q0 = -1``, which makes every tenant branch a
+    no-op — its stats stay bit-identical to the ``mt=False`` kernel, so
+    mixed batches need no extra homogeneity rule.  ``mt=False`` builds
+    the exact pre-tenancy kernel.
 
     ``steps_len > 0`` enables in-kernel step-clock capture
     (``ReplayRequest.step_bounds``): each access carries its window id in
@@ -274,6 +291,15 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
         has_block = iparams_ref[0, 3] > 0
         track_lru = cap >= 0
         IMAX64 = jnp.int64(IMAX64_NP)
+        if mt:
+            # per-lane tenancy: dense boundary page (IMAX = single-tenant
+            # lane: every page compares tenant 0 and the branches no-op),
+            # per-tenant quotas (q0 < 0 = shared capacity)
+            bnd = iparams_ref[0, 6]
+            q0 = iparams_ref[0, 7]
+            q1 = iparams_ref[0, 8]
+            tsplit = q0 >= 0
+            slot_iota = jnp.arange(state_len, dtype=i32)
         if randomp:
             # absolute page ids mod 2^32 per state slot: the random
             # policy's priority draws hash the absolute page, so all
@@ -321,6 +347,9 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
             hits = s["hits"] + is_hit.astype(i32)
             late = s["late"] + is_late.astype(i32)
             faults = s["faults"] + is_fault.astype(i32)
+            if mt:
+                th0 = s["th0"] + (is_hit & (p < bnd)).astype(i32)
+                rc0 = s["rc0"]
 
             # prefetched-but-unused consumption (False on faults by
             # construction: eviction clears the flag with the residency)
@@ -352,6 +381,8 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                     is_fault, _rand_score(abs_u32[p], counter), prio[p]))
             counter = counter + 1
             resident = s["resident"] + is_fault.astype(i32)
+            if mt:
+                rc0 = rc0 + (is_fault & (p < bnd)).astype(i32)
             migrated = s["migrated"] + is_fault.astype(i32)
             pcie_free = jnp.where(is_fault, start + page_tx, pcie_free)
 
@@ -410,6 +441,10 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                         (blk,))
                 counter = counter + k
                 resident = resident + k
+                if mt:
+                    # the 64 KB block never straddles the (root-aligned)
+                    # tenant boundary: the whole batch is p's tenant
+                    rc0 = rc0 + jnp.where(p < bnd, k, 0)
                 migrated = migrated + k
                 issued = issued + k
                 pcie_free = jnp.where(k > 0, end, pcie_free)
@@ -475,6 +510,10 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                         (root,))
                 counter = counter + k
                 resident = resident + k
+                if mt:
+                    # the 2 MB root window is entirely on p's side of the
+                    # root-aligned tenant boundary
+                    rc0 = rc0 + jnp.where(p < bnd, k, 0)
                 migrated = migrated + k
                 issued = issued + k
                 pcie_free = jnp.where(k > 0, end, pcie_free)
@@ -525,6 +564,8 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                 pfu = pfu.at[safe].set(do_pf | pfu[safe])
                 counter = counter + do_pf.astype(i32)
                 resident = resident + do_pf.astype(i32)
+                if mt:
+                    rc0 = rc0 + (do_pf & (safe < bnd)).astype(i32)
                 migrated = migrated + do_pf.astype(i32)
                 issued = issued + do_pf.astype(i32)
                 pcie_free = jnp.where(do_pf, end2, pcie_free)
@@ -541,12 +582,17 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                 win_idx = jax.lax.dynamic_slice(ft, (pos_t,), (lookahead,))
 
                 def scan(arrival, stamp, pfu, counter, resident, migrated,
-                         issued, pcie_free, pol, active, batch):
+                         issued, pcie_free, pol, rc0, active, batch):
                     got = arrival[win_idx]
                     nonres = base_valid & (got == INF) & active
                     csum = jnp.cumsum(nonres.astype(i32))
                     take = nonres & (csum <= ORACLE_MAX_EXTRAS)
                     k = jnp.sum(take, dtype=i32)
+                    if mt:
+                        # oracle lookahead windows can span both tenant
+                        # regions: count the tenant-0 insertions directly
+                        rc0 = rc0 + jnp.sum(take & (win_idx < bnd),
+                                            dtype=i32)
                     rank = csum - 1              # emission order rank
                     kf = k.astype(jnp.float64)
                     ex_ready = clock + pfo + extra_lat
@@ -590,22 +636,26 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                     issued = issued + k
                     pcie_free = jnp.where(k > 0, end, pcie_free)
                     return (arrival, stamp, pfu, counter, resident,
-                            migrated, issued, pcie_free, pol)
+                            migrated, issued, pcie_free, pol, rc0)
 
                 pol = ()
                 if hotcold:
                     pol = (freq,)
                 if randomp:
                     pol = (prio,)
+                rc0_c = rc0 if mt else zero
                 (arrival, stamp, pfu, counter, resident, migrated, issued,
-                 pcie_free, pol) = scan(arrival, stamp, pfu, counter,
-                                        resident, migrated, issued,
-                                        pcie_free, pol, is_fault, True)
+                 pcie_free, pol, rc0_c) = scan(arrival, stamp, pfu, counter,
+                                               resident, migrated, issued,
+                                               pcie_free, pol, rc0_c,
+                                               is_fault, True)
                 (arrival, stamp, pfu, counter, resident, migrated, issued,
-                 pcie_free, pol) = scan(arrival, stamp, pfu, counter,
-                                        resident, migrated, issued,
-                                        pcie_free, pol, jnp.bool_(True),
-                                        False)
+                 pcie_free, pol, rc0_c) = scan(arrival, stamp, pfu, counter,
+                                               resident, migrated, issued,
+                                               pcie_free, pol, rc0_c,
+                                               jnp.bool_(True), False)
+                if mt:
+                    rc0 = rc0_c
                 if hotcold:
                     (freq,) = pol
                 if randomp:
@@ -630,27 +680,51 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
             # (lru = min touch stamp, exact OrderedDict order; random =
             # min insert-time priority draw; hotcold = min (freq, stamp));
             # an in-flight victim is retouched at MRU and stops the loop
+            def _allowed(c):
+                """Per-tenant residency ceilings (Tenancy.allowed in
+                int32) + the over-allowance flags of a quota-split lane."""
+                rc0c = c["rc0"]
+                rc1c = c["resident"] - rc0c
+                spill = cap - q0 - q1
+                a0 = q0 + jnp.maximum(0, spill - jnp.maximum(0, rc1c - q1))
+                a1 = q1 + jnp.maximum(0, spill - jnp.maximum(0, rc0c - q0))
+                return rc0c > a0, rc1c > a1
+
             def econd(c):
+                if mt:
+                    over0, over1 = _allowed(c)
+                    return c["cont"] & jnp.where(
+                        tsplit, over0 | over1, c["resident"] > cap)
                 return c["cont"] & (c["resident"] > cap)
 
             def ebody(c):
                 arrival, stamp, pfu = c["arrival"], c["stamp"], c["pfu"]
                 counter = c["counter"]
+                res_mask = arrival < INF
+                if mt:
+                    # quota split: trim whichever tenant is over its
+                    # allowance (tenant 0 first, like the legacy loop),
+                    # victim masked to that tenant's state slots; shared
+                    # mode keeps the unmasked single-tenant selection
+                    over0, _ = _allowed(c)
+                    u = jnp.where(over0, 0, 1)
+                    res_mask = res_mask & (
+                        ~tsplit | ((slot_iota >= bnd).astype(i32) == u))
                 if hotcold:
                     fq = c["freq"]
                     key = jnp.where(
-                        (arrival < INF) & (stamp < IMAX),
+                        res_mask & (stamp < IMAX),
                         (fq.astype(jnp.int64) << 32)
                         | stamp.astype(jnp.int64), IMAX64)
                     vi = jnp.argmin(key)
                 elif randomp:
                     # prio is static while resident: safe to close over
                     key = jnp.where(
-                        (arrival < INF) & (stamp < IMAX),
+                        res_mask & (stamp < IMAX),
                         (prio.astype(jnp.int64) << 21) | iota64, IMAX64)
                     vi = jnp.argmin(key)
                 else:
-                    vi = jnp.argmin(jnp.where(arrival < INF, stamp, IMAX))
+                    vi = jnp.argmin(jnp.where(res_mask, stamp, IMAX))
                 v_arr = arrival[vi]
                 in_flight = v_arr > clock
                 stamp = stamp.at[vi].set(
@@ -672,6 +746,9 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                            pfu=pfu, counter=counter, resident=resident,
                            evicted=evicted, wbacks=wbacks,
                            pcie_free=pcie_free)
+                if mt:
+                    out["rc0"] = c["rc0"] - ((~in_flight)
+                                             & (vi < bnd)).astype(i32)
                 if hotcold:
                     out["freq"] = fq
                 if family == "tree":
@@ -685,6 +762,8 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                       "pfu": pfu, "counter": counter, "resident": resident,
                       "evicted": s["evicted"], "wbacks": s["wbacks"],
                       "pcie_free": pcie_free}
+            if mt:
+                ecarry["rc0"] = rc0
             if hotcold:
                 ecarry["freq"] = freq
             if family == "tree":
@@ -701,6 +780,9 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
                 "issued": issued, "used": used, "migrated": migrated,
                 "evicted": ecarry["evicted"], "wbacks": ecarry["wbacks"],
             }
+            if mt:
+                out["rc0"] = ecarry["rc0"]
+                out["th0"] = th0
             if family == "learned":
                 out["next_free"] = next_free
             if family == "tree":
@@ -725,6 +807,9 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
             "issued": zero, "used": zero, "migrated": zero,
             "evicted": zero, "wbacks": zero,
         }
+        if mt:
+            init["rc0"] = zero
+            init["th0"] = zero
         if family == "oracle":
             # trash slot: reads resident, never the LRU victim
             init["arrival"] = init["arrival"].at[span].set(0.0)
@@ -764,6 +849,8 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
         out_ref[0, 7] = final["evicted"].astype(jnp.float64)
         out_ref[0, 8] = ((final["migrated"] + final["wbacks"])
                          .astype(jnp.float64) * page_size)
+        if mt:
+            out_ref[0, 9] = final["th0"].astype(jnp.float64)
 
     in_specs = [pl.BlockSpec((1, t_max), lambda l: (l, 0))]
     if family == "learned":
@@ -775,9 +862,9 @@ def _lane_replay_fn(family: str, policy: str, n_lanes: int, t_max: int,
         in_specs.append(pl.BlockSpec((1, t_max), lambda l: (l, 0)))
     in_specs += [pl.BlockSpec((1, _N_FPARAMS), lambda l: (l, 0)),
                  pl.BlockSpec((1, _N_IPARAMS), lambda l: (l, 0))]
-    out_specs = pl.BlockSpec((1, len(STAT_FIELDS)), lambda l: (l, 0))
-    out_shape = jax.ShapeDtypeStruct((n_lanes, len(STAT_FIELDS)),
-                                     jnp.float64)
+    n_stats = len(STAT_FIELDS) + (len(MT_STAT_FIELDS) if mt else 0)
+    out_specs = pl.BlockSpec((1, n_stats), lambda l: (l, 0))
+    out_shape = jax.ShapeDtypeStruct((n_lanes, n_stats), jnp.float64)
     if steps_len:
         out_specs = [out_specs,
                      pl.BlockSpec((1, steps_len), lambda l: (l, 0))]
@@ -836,7 +923,7 @@ def _kernel_cache_path(cache_dir: str, key: Tuple) -> str:
 @functools.lru_cache(maxsize=None)
 def _lane_replay_exec(family: str, policy: str, n_lanes: int, t_max: int,
                       span: int, buf_len: int, ft_len: int, lookahead: int,
-                      steps_len: int, interpret: bool):
+                      steps_len: int, mt: bool, interpret: bool):
     """Compiled lane executable for one batch shape, loaded from the
     on-disk kernel cache when possible.
 
@@ -857,7 +944,7 @@ def _lane_replay_exec(family: str, policy: str, n_lanes: int, t_max: int,
     import jax.numpy as jnp
 
     key = (family, policy, n_lanes, t_max, span, buf_len, ft_len,
-           lookahead, steps_len, interpret)
+           lookahead, steps_len, mt, interpret)
     cache_dir = _kernel_cache_dir()
     path = _kernel_cache_path(cache_dir, key) if cache_dir else None
     if path is not None and os.path.exists(path):
@@ -953,6 +1040,12 @@ class PallasReplayBackend(ReplayBackend):
                     or np.any(np.diff(sb) < 0) or sb[0] < 0
                     or sb[-1] > len(request.trace.pages)):
                 return False
+        try:
+            # invalid tenancy (quotas without an mt trace / capacity):
+            # decline so the host-side backends raise the canonical error
+            resolve_tenancy(request.trace, request.config)
+        except ValueError:
+            return False
         n = len(request.trace.pages)
         if n == 0 or n > _FAMILY_MAX_ACCESSES[kind]:
             return False          # int32 stamp/counter headroom (above)
@@ -1067,11 +1160,18 @@ class PallasReplayBackend(ReplayBackend):
                       else int(np.asarray(r.step_bounds).size)
                       for r in requests]
         steps_len = _bucket(max(step_sizes), 64) if any(step_sizes) else 0
+        # mt is a static kernel flag but tenancy stays per-lane dynamic:
+        # single-tenant lanes of a mixed batch ride with boundary = IMAX
+        # and q0 = -1, which keeps their replay bit-identical (see
+        # _lane_replay_fn), so packing needs no tenancy homogeneity
+        tenancies = [resolve_tenancy(r.trace, r.config) for r in requests]
+        mt = any(t is not None for t in tenancies)
 
         pages = np.zeros((n_lanes, t_max), dtype=np.int32)
         fparams = np.zeros((n_lanes, _N_FPARAMS), dtype=np.float64)
         iparams = np.full((n_lanes, _N_IPARAMS), -1, dtype=np.int32)
         iparams[:, 0] = 0                      # padding lanes replay nothing
+        iparams[:, 6] = np.iinfo(np.int32).max  # single-tenant boundary
         extra_in: List[np.ndarray] = []
         if kind == "learned":
             preds_in = np.full((n_lanes, t_max), -1, dtype=np.int32)
@@ -1107,6 +1207,15 @@ class PallasReplayBackend(ReplayBackend):
             # hash the absolute page id, identical across backends
             iparams[l, 5] = np.array(lo & 0xFFFFFFFF,
                                      dtype=np.uint32).astype(np.int32)
+            tn = tenancies[l]
+            if tn is not None:
+                # dense boundary: may fall outside [0, span) when a trace
+                # slice only touches one tenant's region — the compares
+                # stay correct either way (all-0 / all-1 lanes)
+                iparams[l, 6] = int(tn.boundary) - lo
+                if tn.split:
+                    iparams[l, 7] = int(tn.quotas[0])
+                    iparams[l, 8] = int(tn.quotas[1])
             if kind == "learned":
                 pr = np.asarray(pf.predicted_pages, dtype=np.int64)[:n]
                 preds_in[l, :n] = np.where(pr >= 0, pr - lo, -1)
@@ -1130,7 +1239,7 @@ class PallasReplayBackend(ReplayBackend):
         with enable_x64():
             fn = _lane_replay_exec(kind, policy, n_lanes, t_max, span,
                                    buf_len, ft_len, lookahead, steps_len,
-                                   interpret)
+                                   mt, interpret)
             raw = fn(pages, *extra_in, fparams, iparams)
         if steps_len:
             raw, raw_steps = (np.asarray(raw[0]), np.asarray(raw[1]))
@@ -1159,6 +1268,11 @@ class PallasReplayBackend(ReplayBackend):
                 eviction=req.config.eviction,
             )
             stats.backend = self.name
+            if tenancies[l] is not None:
+                th0 = int(row[len(STAT_FIELDS)])
+                stats.tenant_hits = (th0, stats.hits - th0)
+                stats.tenant_accesses = _tenant_accesses(
+                    req.trace.pages, tenancies[l])
             if steps_len and req.step_bounds is not None:
                 stats.step_clocks = _fill_step_clocks(
                     np.asarray(req.step_bounds, dtype=np.int64),

@@ -25,6 +25,16 @@ class UVMConfig:
     # device memory capacity in pages; None = never oversubscribed
     device_pages: int | None = None
 
+    # per-tenant hard quotas (pages) for multi-tenant interleaved traces
+    # (repro.traces.interleave): a (q0, q1) tuple partitions device_pages
+    # into per-tenant capacity, with device_pages - q0 - q1 left as a
+    # shared spill pool either tenant may borrow while the other is under
+    # its quota.  None (default) = shared capacity: tenants contend for
+    # the whole device exactly like the single-tenant model.  Requires
+    # device_pages and a multi-tenant trace; see repro.uvm.eviction
+    # .resolve_tenancy for validation and the spill arithmetic.
+    tenant_pages: tuple | None = None
+
     # eviction policy under oversubscription: "lru" (default, the
     # historical behavior), "random" (counter-based deterministic PRNG
     # replacement), or "hotcold" (access-frequency cold-first, arXiv

@@ -38,8 +38,9 @@ the test suites pin the equality.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -100,6 +101,83 @@ def eviction_score(page: int, draw: int) -> int:
 
 
 # ---------------------------------------------------------------------------
+# tenancy: per-tenant capacity partitioning for multi-tenant traces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Tenancy:
+    """Resolved tenancy of one replay: the page-region boundary of a
+    multi-tenant trace (``repro.traces.interleave``) plus the optional
+    hard quotas partitioning device capacity.
+
+    ``quotas=None`` is **shared mode**: both tenants contend for the whole
+    device exactly like the single-tenant model (per-tenant stats are
+    still recorded — it is the interference-allowed baseline the isolation
+    property test contrasts against).  With quotas ``(q0, q1)``, tenant
+    ``t`` owns ``q_t`` pages outright and may additionally borrow from the
+    ``spill`` pool (``device_pages - q0 - q1``) whatever the co-tenant is
+    not currently borrowing — so victim selection for tenant ``t`` is
+    masked to tenant ``t``'s own resident pages, and a thrashing co-tenant
+    can never evict a quota-protected tenant's pages.
+    """
+
+    boundary: int                          # first page of tenant 1's region
+    quotas: Optional[Tuple[int, int]]      # hard per-tenant quotas, or None
+    spill: int                             # shared pool beyond the quotas
+
+    @property
+    def split(self) -> bool:
+        return self.quotas is not None
+
+    def tenant_of(self, page: int) -> int:
+        return 1 if page >= self.boundary else 0
+
+    def allowed(self, rc0: int, rc1: int) -> Tuple[int, int]:
+        """Per-tenant residency ceilings given current residencies: quota
+        plus whatever spill the co-tenant has not borrowed.  The pallas
+        kernel re-implements this arithmetic in int32; the differential
+        suite pins the equality."""
+        q0, q1 = self.quotas
+        a0 = q0 + max(0, self.spill - max(0, rc1 - q1))
+        a1 = q1 + max(0, self.spill - max(0, rc0 - q0))
+        return a0, a1
+
+
+def resolve_tenancy(trace, config) -> Optional[Tenancy]:
+    """The single tenancy-validation chokepoint shared by all three
+    backends: returns None for a plain single-tenant replay, a
+    :class:`Tenancy` for a multi-tenant trace, and raises on inconsistent
+    requests (quotas without a multi-tenant trace, quotas without a
+    capacity, quotas exceeding the capacity)."""
+    from repro.traces.interleave import tenant_boundary
+    boundary = tenant_boundary(trace)
+    tp = getattr(config, "tenant_pages", None)
+    if tp is None:
+        if boundary is None:
+            return None
+        return Tenancy(boundary=boundary, quotas=None, spill=0)
+    if boundary is None:
+        raise ValueError(
+            f"config.tenant_pages={tp!r} but trace {trace.name!r} is not "
+            "multi-tenant (no meta['mt'] sidecar; build it via "
+            "repro.traces.interleave.build_mt_trace)")
+    if config.device_pages is None:
+        raise ValueError(
+            "config.tenant_pages requires device_pages: quotas partition "
+            "a finite device capacity")
+    quotas = tuple(int(q) for q in tp)
+    if len(quotas) != 2 or any(q < 0 for q in quotas):
+        raise ValueError(f"tenant_pages must be two non-negative page "
+                         f"counts, got {tp!r}")
+    spill = int(config.device_pages) - sum(quotas)
+    if spill < 0:
+        raise ValueError(
+            f"tenant_pages {quotas} exceed device_pages "
+            f"{config.device_pages} (spill would be {spill})")
+    return Tenancy(boundary=boundary, quotas=quotas, spill=spill)
+
+
+# ---------------------------------------------------------------------------
 # reference policy objects (the legacy per-access loop drives these; the
 # NumPy and pallas engines replay the same semantics vectorized)
 # ---------------------------------------------------------------------------
@@ -115,9 +193,14 @@ class EvictionPolicy:
     * ``on_touch(page)`` — resident page touched (hit/late access, or an
       in-flight victim spared by the eviction loop and retouched at MRU).
     * ``on_evict(page)`` — page left residency.
-    * ``select_victim(resident)`` — the next victim among the keys of
-      ``resident`` (the simulator's page → arrival ``OrderedDict``, kept
-      in exact LRU order by the access loop).
+    * ``select_victim(resident, tenant=None)`` — the next victim among
+      the keys of ``resident`` (the simulator's page → arrival
+      ``OrderedDict``, kept in exact LRU order by the access loop).
+      With per-tenant quotas the simulator first calls
+      :meth:`bind_tenancy` and then passes the over-quota tenant id, and
+      selection is masked to that tenant's resident pages — the policy's
+      internal ordering (LRU order, random priorities, hotcold keys) is
+      unchanged; only the candidate set shrinks.
 
     The event counter (one tick per insert and per touch) is shared
     vocabulary with the vectorized engines' LRU touch stamps — policies
@@ -126,6 +209,16 @@ class EvictionPolicy:
     """
 
     name = "abstract"
+
+    #: page -> tenant id mapping when quota-split tenancy is bound
+    #: (bind_tenancy); None = single-tenant / shared-capacity selection
+    _tenant_of = None
+
+    def bind_tenancy(self, tenant_of) -> None:
+        """Install a ``page -> tenant`` mapping so victim selection can be
+        masked per tenant.  Must be called before any ``on_insert`` (the
+        heap-backed policies shard their heaps by tenant at insert time)."""
+        self._tenant_of = tenant_of
 
     def reset(self) -> None:
         pass
@@ -139,7 +232,7 @@ class EvictionPolicy:
     def on_evict(self, page: int) -> None:
         pass
 
-    def select_victim(self, resident) -> int:
+    def select_victim(self, resident, tenant: Optional[int] = None) -> int:
         raise NotImplementedError
 
 
@@ -150,8 +243,12 @@ class LRUEviction(EvictionPolicy):
 
     name = "lru"
 
-    def select_victim(self, resident) -> int:
-        return next(iter(resident))
+    def select_victim(self, resident, tenant: Optional[int] = None) -> int:
+        if tenant is None or self._tenant_of is None:
+            return next(iter(resident))
+        # masked LRU: the least-recently-used page OF THIS TENANT — the
+        # OrderedDict is already in LRU order, so the first match is it
+        return next(p for p in resident if self._tenant_of(p) == tenant)
 
 
 class RandomEviction(EvictionPolicy):
@@ -169,14 +266,20 @@ class RandomEviction(EvictionPolicy):
     def reset(self) -> None:
         self.counter = 0
         self.prio: Dict[int, int] = {}
-        self.heap: List[Tuple[int, int]] = []
+        # heaps sharded by tenant id (None = unmasked): priorities are
+        # unchanged by tenancy, only which shard gets popped from
+        self.heaps: Dict[Optional[int], List[Tuple[int, int]]] = {None: []}
+
+    def _heap(self, page: int) -> List[Tuple[int, int]]:
+        key = self._tenant_of(page) if self._tenant_of else None
+        return self.heaps.setdefault(key, [])
 
     def on_insert(self, page: int) -> None:
         if page in self.prio:
             return
         pr = eviction_score(page, self.counter)
         self.prio[page] = pr
-        heapq.heappush(self.heap, (pr, page))
+        heapq.heappush(self._heap(page), (pr, page))
         self.counter += 1
 
     def on_touch(self, page: int) -> None:
@@ -185,11 +288,13 @@ class RandomEviction(EvictionPolicy):
     def on_evict(self, page: int) -> None:
         del self.prio[page]
 
-    def select_victim(self, resident) -> int:
+    def select_victim(self, resident, tenant: Optional[int] = None) -> int:
+        key = tenant if self._tenant_of else None
+        heap = self.heaps[key]
         while True:
-            pr, page = self.heap[0]
+            pr, page = heap[0]
             if self.prio.get(page) != pr:
-                heapq.heappop(self.heap)     # evicted or re-drawn: stale
+                heapq.heappop(heap)          # evicted or re-drawn: stale
                 continue
             return page
 
@@ -210,14 +315,19 @@ class HotColdEviction(EvictionPolicy):
         self.counter = 0
         self.freq: Dict[int, int] = {}
         self.stamp: Dict[int, int] = {}
-        self.heap: List[Tuple[int, int, int]] = []
+        self.heaps: Dict[Optional[int],
+                         List[Tuple[int, int, int]]] = {None: []}
+
+    def _heap(self, page: int) -> List[Tuple[int, int, int]]:
+        key = self._tenant_of(page) if self._tenant_of else None
+        return self.heaps.setdefault(key, [])
 
     def on_insert(self, page: int) -> None:
         if page in self.stamp:
             return
         self.freq[page] = 0
         self.stamp[page] = self.counter
-        heapq.heappush(self.heap, (0, self.counter, page))
+        heapq.heappush(self._heap(page), (0, self.counter, page))
         self.counter += 1
 
     def on_touch(self, page: int) -> None:
@@ -230,15 +340,17 @@ class HotColdEviction(EvictionPolicy):
         del self.freq[page]
         del self.stamp[page]
 
-    def select_victim(self, resident) -> int:
+    def select_victim(self, resident, tenant: Optional[int] = None) -> int:
+        key = tenant if self._tenant_of else None
+        heap = self.heaps[key]
         while True:
-            f, s, page = self.heap[0]
+            f, s, page = heap[0]
             cur = self.stamp.get(page)
             if cur is None:                  # evicted: drop the entry
-                heapq.heappop(self.heap)
+                heapq.heappop(heap)
                 continue
             if (self.freq[page], cur) != (f, s):
-                heapq.heapreplace(self.heap, (self.freq[page], cur, page))
+                heapq.heapreplace(heap, (self.freq[page], cur, page))
                 continue
             return page
 

@@ -28,6 +28,13 @@ on a thrashing cyclic sweep, ``churn-random``/``churn-hotcold`` on a
 permuted two-region sweep) pin the non-LRU eviction policies
 (``repro.uvm.eviction``) bit-equal across every backend, prefetcher
 included — the regime where victim-selection order diverges first.
+
+Multi-tenant cells (``mt-shared``/``mt-quota``) replay an interleaved
+ATAX+Pathfinder trace (``repro.traces.interleave``) under oversubscribed
+shared capacity and under hard per-tenant quotas with a spill pool —
+pinning per-tenant residency accounting and tenant-masked victim
+selection bit-equal across every backend (the fixtures record
+``tenant_hits`` too).
 """
 from __future__ import annotations
 
@@ -121,6 +128,15 @@ def golden_cases() -> Tuple[GoldenCase, ...]:
     pol_churn = np.concatenate([pol_perm + (0 if k % 2 == 0 else 4096)
                                 for k in range(6)])
 
+    # Multi-tenant interleave: ATAX and Pathfinder zipped into one stream
+    # with disjoint page regions, replayed at ~0.6x the union working set
+    # so both tenants feel eviction pressure — once contending for the
+    # whole device (mt-shared) and once under hard 40%/40% quotas with a
+    # 20% spill pool and tenant-masked hotcold victim selection (mt-quota)
+    from repro.traces.interleave import build_mt_trace
+    mt = build_mt_trace("ATAX+Pathfinder", scale=0.25)
+    mt_cap = int(0.6 * mt.working_set_pages)
+
     return (
         GoldenCase("atax", atax, UVMConfig()),
         GoldenCase("pathfinder", pathfinder, UVMConfig()),
@@ -141,6 +157,12 @@ def golden_cases() -> Tuple[GoldenCase, ...]:
         GoldenCase("churn-hotcold", _mk_trace("churn-hotcold", pol_churn),
                    UVMConfig(device_pages=700, eviction="hotcold",
                              mshr_entries=16)),
+        GoldenCase("mt-shared", mt, UVMConfig(device_pages=mt_cap)),
+        GoldenCase("mt-quota", mt,
+                   UVMConfig(device_pages=mt_cap,
+                             tenant_pages=(int(0.4 * mt_cap),
+                                           int(0.4 * mt_cap)),
+                             eviction="hotcold")),
     )
 
 
@@ -231,4 +253,8 @@ def iter_golden_cells() -> Iterator[Tuple[str, Trace, UVMConfig,
 def stats_to_dict(stats: UVMStats) -> Dict:
     out = {f: int(getattr(stats, f)) for f in INT_FIELDS}
     out.update({f: float(getattr(stats, f)) for f in FLOAT_FIELDS})
+    if stats.tenant_hits is not None:
+        # multi-tenant cells pin the per-tenant accounting too
+        out["tenant_hits"] = [int(x) for x in stats.tenant_hits]
+        out["tenant_accesses"] = [int(x) for x in stats.tenant_accesses]
     return out

@@ -31,6 +31,15 @@ def sorted_percentiles(sorted_samples: np.ndarray,
         raise ValueError(f"expected a 1-D sample vector, got shape {a.shape}")
     if a.size == 0:
         raise ValueError("cannot take percentiles of an empty sample set")
+    if not np.isfinite(a).all():
+        # np.sort parks NaN at the tail, so a NaN-poisoned clock stream
+        # would flow straight into the high percentiles (and p99 ordering
+        # checks pass vacuously: NaN comparisons are all False) — reject
+        # loudly instead of laundering a broken replay into SLO columns
+        raise ValueError(
+            f"non-finite latency samples "
+            f"({int((~np.isfinite(a)).sum())} of {a.size}): percentiles "
+            "over NaN/inf would silently corrupt the SLO columns")
     q = np.asarray(qs, dtype=np.float64)
     if q.size and (q.min() < 0.0 or q.max() > 100.0):
         raise ValueError("percentiles must lie in [0, 100]")
@@ -59,11 +68,25 @@ def slo_percentiles(samples: Sequence[float], prefix: str,
 
 def pcie_gbs_timeline(timeline: np.ndarray, core_mhz: float,
                       window_cycles: float = 10_000.0) -> np.ndarray:
-    """(cycle, bytes) transfer events -> (window_center_cycle, GB/s) rows."""
+    """(cycle, bytes) transfer events -> (window_center_cycle, GB/s) rows.
+
+    Events may arrive in any order (binning is order-independent), but
+    every cycle stamp must be finite and non-negative: a negative stamp
+    floor-divides to a negative window index, which ``np.add.at`` wraps
+    to the *tail* window — the bandwidth spike lands on the wrong end of
+    the plot with no error.  Reject instead of mis-binning."""
     if timeline is None or len(timeline) == 0:
         return np.zeros((0, 2))
+    if window_cycles <= 0:
+        raise ValueError(f"window_cycles must be positive: {window_cycles}")
     t = timeline[:, 0]
     b = timeline[:, 1]
+    if not np.isfinite(t).all() or (t < 0).any():
+        bad = int(((~np.isfinite(t)) | (t < 0)).sum())
+        raise ValueError(
+            f"invalid PCIe timeline: {bad} of {t.size} cycle stamps are "
+            "negative or non-finite (negative stamps would wrap into the "
+            "tail window)")
     n_win = int(t.max() // window_cycles) + 1
     idx = (t // window_cycles).astype(np.int64)
     acc = np.zeros(n_win)

@@ -63,11 +63,11 @@ import numpy as np
 from repro.traces.trace import BASIC_BLOCK_PAGES, ROOT_PAGES, Trace
 from repro.uvm.config import UVMConfig
 from repro.uvm.eviction import (EVICTION_POLICIES, eviction_score,
-                                validate_policy)
+                                resolve_tenancy, validate_policy)
 from repro.uvm.prefetchers import (BlockPrefetcher, LearnedPrefetcher,
                                    NoPrefetcher, OraclePrefetcher, Prefetcher,
                                    TreePrefetcher)
-from repro.uvm.simulator import UVMSimulator, UVMStats
+from repro.uvm.simulator import UVMSimulator, UVMStats, _tenant_accesses
 
 # Beyond this many pages of span the dense state arrays stop paying for
 # themselves; fall back to the legacy dict-based loop.
@@ -653,11 +653,24 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
     # insert-time priority draws (lazy heaps over both, like the LRU one)
     freq = np.zeros(span, dtype=np.int64) if (track_lru and hotcold) else None
     prio = np.zeros(span, dtype=np.int64) if (track_lru and randomp) else None
-    lru_heap: List[Tuple[int, int]] = []
-    hc_heap: List[Tuple[int, int, int]] = []
-    rand_heap: List[Tuple[int, int]] = []
+    # multi-tenant traces (repro.traces.interleave): per-tenant hit
+    # counters always; per-tenant residency counters + tenant-masked
+    # victim selection only under hard quotas (Tenancy.split).  The lazy
+    # heaps shard by tenant at insert time — without a split everything
+    # lands in shard 0, so the single-tenant pop order is untouched.
+    tenancy = resolve_tenancy(trace, cfg)
+    split = track_lru and tenancy is not None and tenancy.split
+    bnd = (tenancy.boundary - lo) if tenancy is not None else 0
+    rc = [0, 0]                            # per-tenant resident counts
+    th = [0, 0]                            # per-tenant hits
+    lru_heaps: List[List[Tuple[int, int]]] = [[], []]
+    hc_heaps: List[List[Tuple[int, int, int]]] = [[], []]
+    rand_heaps: List[List[Tuple[int, int]]] = [[], []]
     counter = 0                            # monotone LRU touch counter
     resident_count = 0
+
+    def _shard(pi: int) -> int:
+        return 1 if (split and pi >= bnd) else 0
 
     clock = 0.0
     pcie_free = 0.0
@@ -700,17 +713,20 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
         nonlocal resident_count, counter
         if arrival[pi] == _INF:
             resident_count += 1
+            if split:
+                rc[1 if pi >= bnd else 0] += 1
             if track_lru:
                 stamp[pi] = counter
+                sh = _shard(pi)
                 if hotcold:
                     freq[pi] = 0
-                    heapq.heappush(hc_heap, (0, counter, pi))
+                    heapq.heappush(hc_heaps[sh], (0, counter, pi))
                 elif randomp:
                     pr = eviction_score(pi + lo, counter)
                     prio[pi] = pr
-                    heapq.heappush(rand_heap, (pr, pi))
+                    heapq.heappush(rand_heaps[sh], (pr, pi))
                 else:
-                    heapq.heappush(lru_heap, (counter, pi))
+                    heapq.heappush(lru_heaps[sh], (counter, pi))
             counter += 1
         arrival[pi] = t                    # overwrite keeps LRU position
 
@@ -763,43 +779,72 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
         prefetch_issued += k
         adapter.on_migrate(extras)
 
-    def _select_victim() -> int:
-        """Policy victim: lazy-heap min of (stamp) / (prio, page) /
+    def _select_victim(sh: int) -> int:
+        """Policy victim from heap shard ``sh`` (the over-quota tenant, or
+        0 without a split): lazy-heap min of (stamp) / (prio, page) /
         (freq, stamp) — stale entries self-heal at pop time.  The LRU
         branch pops its entry (the spare path re-pushes); the other
         policies peek (their stale tops heal on the next selection)."""
         if hotcold:
+            heap = hc_heaps[sh]
             while True:
-                f, s, vi = hc_heap[0]
+                f, s, vi = heap[0]
                 if arrival[vi] == _INF:
-                    heapq.heappop(hc_heap)     # evicted since: stale
+                    heapq.heappop(heap)        # evicted since: stale
                     continue
                 if freq[vi] != f or stamp[vi] != s:
-                    heapq.heapreplace(hc_heap,
+                    heapq.heapreplace(heap,
                                       (int(freq[vi]), int(stamp[vi]), vi))
                     continue
                 return vi
         if randomp:
+            heap = rand_heaps[sh]
             while True:
-                pr, vi = rand_heap[0]
+                pr, vi = heap[0]
                 if arrival[vi] == _INF or prio[vi] != pr:
-                    heapq.heappop(rand_heap)   # evicted or re-drawn
+                    heapq.heappop(heap)        # evicted or re-drawn
                     continue
                 return vi
+        heap = lru_heaps[sh]
         while True:                        # lazy-heap pop of the true LRU
-            s, vi = heapq.heappop(lru_heap)
+            s, vi = heapq.heappop(heap)
             if arrival[vi] == _INF:
                 continue                   # evicted since: stale entry
             if stamp[vi] != s:
-                heapq.heappush(lru_heap, (int(stamp[vi]), vi))
+                heapq.heappush(heap, (int(stamp[vi]), vi))
                 continue
             return vi
+
+    def _over() -> bool:
+        """Eviction pressure: over total capacity, or (quota split) any
+        tenant over its current allowance."""
+        if not track_lru:
+            return False
+        if split:
+            a0, a1 = tenancy.allowed(rc[0], rc[1])
+            return rc[0] > a0 or rc[1] > a1
+        return resident_count > cap
 
     def _evict_loop() -> None:
         nonlocal resident_count, pages_evicted, pcie_bytes, pcie_free
         nonlocal counter
-        while resident_count > cap:
-            vi = _select_victim()
+        while True:
+            if split:
+                # per-tenant quotas: trim whichever tenant is over its
+                # allowance, tenant 0 first — same order as the legacy
+                # loop and the pallas kernel
+                a0, a1 = tenancy.allowed(rc[0], rc[1])
+                if rc[0] > a0:
+                    u = 0
+                elif rc[1] > a1:
+                    u = 1
+                else:
+                    break
+            else:
+                if resident_count <= cap:
+                    break
+                u = 0
+            vi = _select_victim(u)
             v_arr = float(arrival[vi])
             if v_arr > clock:
                 # never evict in-flight pages; retouch at MRU (the
@@ -809,13 +854,15 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
                 if hotcold:
                     freq[vi] += 1
                 elif not randomp:
-                    heapq.heappush(lru_heap, (counter, vi))
+                    heapq.heappush(lru_heaps[u], (counter, vi))
                 counter += 1
                 break
             if strict:
                 assert v_arr <= clock, "evicted an in-flight page"
             arrival[vi] = _INF
             resident_count -= 1
+            if split:
+                rc[u] -= 1
             pfu[vi] = False
             adapter.on_evict(vi + lo)
             pages_evicted += 1
@@ -835,6 +882,8 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
         if a != _INF:
             if a <= clock:
                 hits += 1
+                if tenancy is not None:
+                    th[1 if pi >= bnd else 0] += 1
             else:
                 late += 1
                 heapq.heappush(outstanding, float(a))
@@ -879,8 +928,9 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
     chunk = 512
     dense = 0      # consecutive chunk scans that hit an event at offset 0
     while i < n:
-        if track_lru and resident_count > cap:
-            # eviction dribble: legacy retries the LRU pop every access
+        if _over():
+            # eviction dribble: legacy retries the victim pop every
+            # access (total cap, or any tenant over its quota allowance)
             _step(i)
             i += 1
             continue
@@ -894,7 +944,7 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
                 _step(i)
                 i += 1
                 streak = streak + 1 if plain else 0
-                if track_lru and resident_count > cap:
+                if _over():
                     break
             dense = 0
             chunk = 64
@@ -915,6 +965,10 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
             h = event
             hseg = seg[:h]
             hits += h
+            if tenancy is not None:
+                n1 = int((hseg >= bnd).sum())
+                th[1] += n1
+                th[0] += h - n1
             m = pfu[hseg]
             if m.any():
                 # first hit on each prefetched-unused page consumes it
@@ -968,6 +1022,8 @@ def replay_chunked(request: ReplayRequest) -> UVMStats:
         timeline=np.asarray(timeline) if record else None,
         eviction=cfg.eviction,
         step_clocks=step_clocks,
+        tenant_hits=(th[0], th[1]) if tenancy is not None else None,
+        tenant_accesses=_tenant_accesses(pages, tenancy),
     )
 
 

@@ -26,6 +26,12 @@ Built-ins:
   ``repro.offload.serve_trace``) replayed as first-class traces, with
   p50/p95/p99 decode-latency and TTFT columns on every row.  Serve
   scenarios pin ``window=None`` — validation enforces it.
+* ``mt-full`` / ``mt-smoke`` — the multi-tenant interference family:
+  two benchmarks interleaved into ONE access stream
+  (``repro.traces.interleave``) contending for a single device, swept
+  across capacity splits (shared pool vs. hard per-tenant quotas with
+  an optional spill pool); rows carry per-tenant hit rates and the
+  interference slowdown vs. each tenant's solo replay.
 * ``chaos-smoke`` — an 8-cell grid sized for the chaos convergence
   harness (``python -m repro.uvm.faults``): the CI check replays it
   fault-free and under a bounded kill+corrupt+raise fault plan and
@@ -96,25 +102,49 @@ class Scenario:
     # cells still expand per family (the axis is part of the cell key)
     # so keep this ("simplified",) unless the scenario compares families
     model_families: Tuple[str, ...] = ("simplified",)
+    # multi-tenant capacity splits ("shared" | "f0/f1" quota fractions of
+    # device_pages, see repro.uvm.sweep.parse_capacity_split); quota
+    # splits require every bench to be an interleaved pair ("A+B")
+    capacity_splits: Tuple[Optional[str], ...] = (None,)
 
     # ------------------------------------------------------------------
     def validate(self) -> "Scenario":
         """Check every axis against the live registries; returns self."""
         from repro.offload.serve_trace import is_serve_bench
         from repro.traces.generators import BENCHMARKS
+        from repro.traces.interleave import is_mt_bench
+        from repro.uvm.sweep import parse_capacity_split
 
         if not self.name or "/" in self.name:
             raise ValueError(f"bad scenario name {self.name!r}")
         if not self.benches:
             raise ValueError(f"scenario {self.name!r}: empty benches")
         bad = [b for b in self.benches
-               if b not in BENCHMARKS and not is_serve_bench(b)]
+               if b not in BENCHMARKS and not is_serve_bench(b)
+               and not is_mt_bench(b)]
         if bad:
             raise ValueError(
                 f"scenario {self.name!r}: unknown benches {bad}; choose "
-                f"from {sorted(BENCHMARKS)} or serve workloads (see "
+                f"from {sorted(BENCHMARKS)}, multi-tenant pairs like "
+                "'ATAX+Pathfinder', or serve workloads (see "
                 "repro.offload.serve_trace.SERVE_WORKLOADS, rate variants "
                 "like 'ServeBursty@r128' accepted)")
+        if not self.capacity_splits:
+            raise ValueError(
+                f"scenario {self.name!r}: empty capacity_splits")
+        quota_splits = []
+        for split in self.capacity_splits:
+            try:
+                if parse_capacity_split(split) is not None:
+                    quota_splits.append(split)
+            except ValueError as e:
+                raise ValueError(f"scenario {self.name!r}: {e}") from None
+        single = [b for b in self.benches if not is_mt_bench(b)]
+        if quota_splits and single:
+            raise ValueError(
+                f"scenario {self.name!r}: capacity splits {quota_splits} "
+                f"need multi-tenant benches, but {single} are "
+                "single-tenant")
         serve = [b for b in self.benches if is_serve_bench(b)]
         if serve and self.window is not None:
             raise ValueError(
@@ -152,24 +182,27 @@ class Scenario:
             for seed in self.seeds:
                 for ratio in self.ratios:
                     for eviction in self.evictions:
-                        for pf in self.prefetchers:
-                            for fam in self.model_families:
-                                out.append(SweepCell(
-                                    bench=bench, prefetcher=pf,
-                                    scale=self.scale, seed=seed,
-                                    window=self.window,
-                                    prediction_us=self.prediction_us,
-                                    device_frac=ratio, eviction=eviction,
-                                    scenario=self.name, engine=engine,
-                                    backend=backend,
-                                    service_steps=self.service_steps,
-                                    model_family=fam))
+                        for split in self.capacity_splits:
+                            for pf in self.prefetchers:
+                                for fam in self.model_families:
+                                    out.append(SweepCell(
+                                        bench=bench, prefetcher=pf,
+                                        scale=self.scale, seed=seed,
+                                        window=self.window,
+                                        prediction_us=self.prediction_us,
+                                        device_frac=ratio,
+                                        eviction=eviction,
+                                        capacity_split=split,
+                                        scenario=self.name, engine=engine,
+                                        backend=backend,
+                                        service_steps=self.service_steps,
+                                        model_family=fam))
         return out
 
     def n_cells(self) -> int:
         return (len(self.benches) * len(self.seeds) * len(self.ratios)
                 * len(self.evictions) * len(self.prefetchers)
-                * len(self.model_families))
+                * len(self.model_families) * len(self.capacity_splits))
 
     # ------------------------------------------------------------------
     def to_dict(self) -> Dict:
@@ -180,7 +213,7 @@ def scenario_from_dict(doc: Dict) -> Scenario:
     """JSON round-trip: lists come back as the dataclass's tuples."""
     kwargs = dict(doc)
     for field in ("benches", "ratios", "evictions", "prefetchers", "seeds",
-                  "model_families"):
+                  "model_families", "capacity_splits"):
         if field in kwargs and kwargs[field] is not None:
             kwargs[field] = tuple(kwargs[field])
     return Scenario(**kwargs).validate()
@@ -302,6 +335,44 @@ register_scenario(Scenario(
     model_families=("simplified", "transformer"),
     scale=0.25,
     service_steps=40,
+))
+
+#: multi-tenant bench pairs of the full interference matrix: diverse
+#: pairings (streaming x wavefront, linear-algebra x stencil, ...) per
+#: the shared-virtual-memory interference argument of arXiv 2405.06811
+MT_BENCHES = ("ATAX+Pathfinder", "BICG+Hotspot", "MVT+StreamTriad",
+              "Backprop+NW")
+
+register_scenario(Scenario(
+    name="mt-full",
+    description=(
+        "Multi-tenant interference matrix: 4 diverse benchmark pairs "
+        "interleaved into one access stream x oversubscribed capacity "
+        "ratios x capacity splits (shared contention, a hard 50/50 "
+        "partition, and a 40/40 split leaving a 20% spill pool) x all "
+        "eviction policies x all five prefetcher families; every row "
+        "carries per-tenant hit rates and the interference slowdown vs. "
+        "each tenant's solo replay"),
+    benches=MT_BENCHES,
+    ratios=(0.75, 0.5),
+    capacity_splits=("shared", "0.5/0.5", "0.4/0.4"),
+))
+
+register_scenario(Scenario(
+    name="mt-smoke",
+    description=(
+        "CI smoke for the multi-tenant plane: 1 interleaved pair x 2 "
+        "oversubscribed ratios x 3 capacity splits (shared / hard 50-50 "
+        "/ 40-40 + spill) x all eviction policies x (none, tree) at "
+        "scale 0.25 — 36 cells on ONE shared trace, replayed through "
+        "the pallas interpret-mode lanes; every row must record "
+        "tenants, its capacity split, both per-tenant hit rates, and "
+        "the interference slowdown (scripts/ci_check.sh)"),
+    benches=("ATAX+Pathfinder",),
+    ratios=(0.75, 0.5),
+    capacity_splits=("shared", "0.5/0.5", "0.4/0.4"),
+    prefetchers=("none", "tree"),
+    scale=0.25,
 ))
 
 register_scenario(Scenario(

@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.traces.trace import Trace
 from repro.uvm.config import UVMConfig
-from repro.uvm.eviction import make_eviction_policy
+from repro.uvm.eviction import make_eviction_policy, resolve_tenancy
 from repro.uvm.prefetchers import Prefetcher
 
 
@@ -66,6 +66,11 @@ class UVMStats:
     #: per-decode-step latency and TTFT percentiles
     #: (``repro.offload.serve_trace``).
     step_clocks: Optional[np.ndarray] = None
+    #: per-tenant (hits, accesses) on multi-tenant interleaved traces
+    #: (``repro.traces.interleave``); None on single-tenant replays.  The
+    #: sweep's per-tenant hit-rate columns derive from these.
+    tenant_hits: Optional[Tuple[int, int]] = None
+    tenant_accesses: Optional[Tuple[int, int]] = None
 
     @property
     def ipc(self) -> float:
@@ -144,6 +149,16 @@ class UVMSimulator:
         cap = cfg.device_pages
         track = cap is not None      # policy callbacks only matter capped
 
+        # multi-tenant traces: per-tenant hit counters always; per-tenant
+        # residency counters + tenant-masked victim selection only when
+        # hard quotas split the capacity (see repro.uvm.eviction.Tenancy)
+        tenancy = resolve_tenancy(trace, cfg)
+        split = track and tenancy is not None and tenancy.split
+        if split:
+            policy.bind_tenancy(tenancy.tenant_of)
+        rc = [0, 0]                  # per-tenant resident page counts
+        th = [0, 0]                  # per-tenant hits
+
         if step_bounds is not None:
             sb = np.asarray(step_bounds, dtype=np.int64)
             if sb.size and (np.any(np.diff(sb) < 0) or sb[-1] > n):
@@ -175,6 +190,8 @@ class UVMSimulator:
             for q in extras:
                 t += page_tx
                 ex_arr = (end if batch else t) + cfg.pcie_latency_cycles
+                if split and q not in resident:
+                    rc[tenancy.tenant_of(q)] += 1
                 resident[q] = ex_arr
                 if track:
                     policy.on_insert(q)
@@ -194,6 +211,8 @@ class UVMSimulator:
             if arr is not None:
                 if arr <= clock:
                     hits += 1
+                    if tenancy is not None:
+                        th[tenancy.tenant_of(p)] += 1
                     if prefetched_unused.pop(p, None):
                         prefetch_used += 1
                 else:
@@ -218,6 +237,8 @@ class UVMSimulator:
                 start = max(ready, pcie_free)
                 arrival = start + cfg.pcie_latency_cycles + page_tx
                 pcie_free = start + page_tx
+                if split:
+                    rc[tenancy.tenant_of(p)] += 1
                 resident[p] = arrival
                 resident.move_to_end(p)
                 if track:
@@ -247,8 +268,24 @@ class UVMSimulator:
             # (LRU = first key of the order-maintained dict, exactly the
             # historical popitem(last=False))
             if track:
-                while len(resident) > cap:
-                    victim = policy.select_victim(resident)
+                while True:
+                    if split:
+                        # per-tenant quotas: trim whichever tenant is over
+                        # its allowance (tenant 0 first — the vectorized
+                        # engines and the pallas kernel use the same
+                        # order), victim masked to that tenant's pages
+                        a0, a1 = tenancy.allowed(rc[0], rc[1])
+                        if rc[0] > a0:
+                            u: Optional[int] = 0
+                        elif rc[1] > a1:
+                            u = 1
+                        else:
+                            break
+                    else:
+                        if len(resident) <= cap:
+                            break
+                        u = None
+                    victim = policy.select_victim(resident, u)
                     v_arr = resident[victim]
                     if v_arr > clock:
                         # never evict in-flight pages; retouch at MRU
@@ -256,6 +293,8 @@ class UVMSimulator:
                         policy.on_touch(victim)
                         break
                     del resident[victim]
+                    if split:
+                        rc[u] -= 1
                     policy.on_evict(victim)
                     prefetched_unused.pop(victim, None)
                     prefetcher.on_evict(victim)
@@ -294,4 +333,17 @@ class UVMSimulator:
             timeline=np.asarray(timeline) if self.record_timeline else None,
             eviction=cfg.eviction,
             step_clocks=step_clocks,
+            tenant_hits=(th[0], th[1]) if tenancy is not None else None,
+            tenant_accesses=_tenant_accesses(pages, tenancy),
         )
+
+
+def _tenant_accesses(pages: np.ndarray,
+                     tenancy) -> Optional[Tuple[int, int]]:
+    """Host-side per-tenant access counts (every backend derives these
+    the same way — the counts are a property of the trace slice, not of
+    the replay)."""
+    if tenancy is None:
+        return None
+    n1 = int(np.count_nonzero(np.asarray(pages) >= tenancy.boundary))
+    return int(len(pages)) - n1, n1

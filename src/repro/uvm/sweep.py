@@ -165,14 +165,30 @@ BACKENDS = ("auto", "numpy", "pallas")
 #: NumPy replay recovered them; v8: learned cells carry a
 #: ``model_family`` column — simplified vs the reference Transformer
 #: variants — and the ``adaptive`` pseudo-policy resolves to a concrete
-#: policy at prepare time, recorded honestly in ``eviction``)
-SWEEP_VERSION = 8
+#: policy at prepare time, recorded honestly in ``eviction``;
+#: v9: multi-tenant interleaved rows (``repro.traces.interleave``) carry
+#: ``tenants`` / ``capacity_split`` / per-tenant hit rates and the
+#: interference-slowdown columns, and the adaptive probe is keyed by the
+#: cell's prefetcher family instead of demand-paging only)
+SWEEP_VERSION = 9
 
 #: serving SLO columns (``repro.offload.serve_trace``): per-decode-step
 #: latency and time-to-first-token percentiles, None on non-serve rows
 SERVE_LATENCY_FIELDS = (
     "decode_lat_p50_us", "decode_lat_p95_us", "decode_lat_p99_us",
     "ttft_p50_us", "ttft_p95_us", "ttft_p99_us",
+)
+
+#: multi-tenant columns (``repro.traces.interleave``): tenant count,
+#: the capacity split the cell replayed under (``"shared"`` or
+#: ``"f0/f1"`` quota fractions), per-tenant hit rates, and the
+#: interference slowdown — each tenant's completion cycles in the mix
+#: over its *solo* replay (the tenant's accesses extracted and replayed
+#: alone at the capacity its quota grants, or the full device when
+#: shared).  None on single-tenant rows.
+MT_FIELDS = (
+    "tenants", "capacity_split", "hit_rate_t0", "hit_rate_t1",
+    "slowdown_t0", "slowdown_t1", "interference_slowdown",
 )
 
 #: columns of the structured results, in CSV order (``engine`` is the
@@ -187,8 +203,34 @@ ROW_FIELDS = [
     "cycles", "ipc", "hits", "late", "faults", "hit_rate", "prefetch_issued",
     "prefetch_used", "accuracy", "coverage", "unity", "pages_migrated",
     "pages_evicted", "pcie_bytes", *SERVE_LATENCY_FIELDS, "slo_source",
-    "retries", "quarantined", "seconds",
+    *MT_FIELDS, "retries", "quarantined", "seconds",
 ]
+
+
+def parse_capacity_split(split: Optional[str]) -> Optional[Tuple[float,
+                                                                 float]]:
+    """Validate/parse a ``capacity_split`` spec.
+
+    ``None`` or ``"shared"`` -> None (tenants contend for the whole
+    device); ``"f0/f1"`` -> the two per-tenant quota *fractions* of
+    ``device_pages`` (``f0 + f1 <= 1``; the remainder is the shared
+    spill pool, see ``UVMConfig.tenant_pages``).  Raises ``ValueError``
+    on anything else — scenario validation and cell preparation share
+    this single parser.
+    """
+    if split is None or split == "shared":
+        return None
+    try:
+        f0, f1 = (float(x) for x in str(split).split("/"))
+    except ValueError:
+        raise ValueError(
+            f"bad capacity_split {split!r}: expected 'shared' or two "
+            "quota fractions like '0.5/0.5'") from None
+    if f0 < 0 or f1 < 0 or f0 + f1 > 1.0 + 1e-9:
+        raise ValueError(
+            f"bad capacity_split {split!r}: fractions must be "
+            "non-negative and sum to at most 1")
+    return f0, f1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,6 +246,7 @@ class SweepCell:
     device_pages: Optional[int] = None  # absolute capacity, or ...
     device_frac: Optional[float] = None  # ... fraction of the working set
     eviction: str = "lru"               # lru | random | hotcold | adaptive
+    capacity_split: Optional[str] = None  # mt cells: "shared" | "f0/f1"
     scenario: Optional[str] = None      # scenario-registry entry (if any)
     engine: str = "auto"
     backend: str = "auto"               # numpy | pallas | auto
@@ -228,6 +271,7 @@ def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
                 device_fracs: Sequence[Optional[float]] = (None,),
                 evictions: Sequence[str] = ("lru",),
                 model_families: Sequence[str] = ("simplified",),
+                capacity_splits: Sequence[Optional[str]] = (None,),
                 scenario: Optional[str] = None,
                 engine: str = "auto",
                 backend: str = "auto",
@@ -242,16 +286,21 @@ def expand_grid(benches: Sequence[str], prefetchers: Sequence[str], *,
                         for us in prediction_us:
                             for frac in device_fracs:
                                 for ev in evictions:
-                                    for fam in model_families:
-                                        cells.append(SweepCell(
-                                            bench=bench, prefetcher=pf,
-                                            scale=scale, seed=seed,
-                                            window=window, prediction_us=us,
-                                            device_frac=frac, eviction=ev,
-                                            scenario=scenario,
-                                            engine=engine, backend=backend,
-                                            service_steps=service_steps,
-                                            model_family=fam))
+                                    for split in capacity_splits:
+                                        for fam in model_families:
+                                            cells.append(SweepCell(
+                                                bench=bench, prefetcher=pf,
+                                                scale=scale, seed=seed,
+                                                window=window,
+                                                prediction_us=us,
+                                                device_frac=frac,
+                                                eviction=ev,
+                                                capacity_split=split,
+                                                scenario=scenario,
+                                                engine=engine,
+                                                backend=backend,
+                                                service_steps=service_steps,
+                                                model_family=fam))
     return cells
 
 
@@ -421,8 +470,11 @@ def _load_trace_uncached(bench: str, scale: float, seed: int,
     if trace is None:
         from repro.offload.serve_trace import build_serve_trace, \
             is_serve_bench
+        from repro.traces.interleave import build_mt_trace, is_mt_bench
         if is_serve_bench(bench):
             trace = build_serve_trace(bench, scale=scale, seed=seed)
+        elif is_mt_bench(bench):
+            trace = build_mt_trace(bench, scale=scale, seed=seed)
         else:
             from repro.traces import GPUModel, generate_benchmark
             from repro.traces.gpu_model import GPUModelConfig
@@ -495,9 +547,21 @@ def prepare_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
     # the row's eviction column (from stats.eviction) records what ran
     eviction = adaptive.resolve_eviction(cell.eviction, cell.bench,
                                          trace=trace,
-                                         device_pages=device_pages)
+                                         device_pages=device_pages,
+                                         prefetcher=cell.prefetcher)
+    fracs = parse_capacity_split(cell.capacity_split)
+    tenant_pages = None
+    if fracs is not None:
+        if device_pages is None:
+            raise ValueError(
+                f"cell {cell.bench}/{cell.prefetcher}: capacity_split="
+                f"{cell.capacity_split!r} needs a device capacity "
+                "(device_pages or device_frac)")
+        tenant_pages = (int(fracs[0] * device_pages),
+                        int(fracs[1] * device_pages))
     config = UVMConfig(prediction_overhead_us=cell.prediction_us,
-                       device_pages=device_pages, eviction=eviction)
+                       device_pages=device_pages, eviction=eviction,
+                       tenant_pages=tenant_pages)
     if prefetcher is None:
         prefetcher = make_prefetcher(cell, trace, config,
                                      cache_dir=cache_dir)
@@ -536,6 +600,8 @@ def _finish_row(cell: SweepCell, stats: UVMStats,
     for f in SERVE_LATENCY_FIELDS:
         row.setdefault(f, None)      # filled on serve rows, None otherwise
     row.setdefault("slo_source", None)
+    for f in MT_FIELDS:
+        row.setdefault(f, None)      # filled on multi-tenant rows
     if record_timeline and stats.timeline is not None:
         row["timeline"] = stats.timeline.tolist()
     return row
@@ -547,6 +613,27 @@ def _serve_step_bounds(trace: Trace) -> Optional[np.ndarray]:
         from repro.offload.serve_trace import trace_step_bounds
         return trace_step_bounds(trace)
     return None
+
+
+def _mt_step_bounds(trace: Trace) -> Optional[np.ndarray]:
+    """Step bounds marking each tenant's *last access* in an interleaved
+    trace (None for single-tenant traces): the replay's step clocks at
+    these bounds are the per-tenant completion cycles behind the
+    interference-slowdown columns — reusing the serve-row step-clock
+    machinery, in-kernel on the pallas lanes included."""
+    from repro.traces.interleave import tenant_last_index
+    last = tenant_last_index(trace)
+    if last is None:
+        return None
+    bounds = sorted({i + 1 for i in last if i >= 0})
+    return np.asarray(bounds, dtype=np.int64)
+
+
+def _step_bounds(trace: Trace) -> Optional[np.ndarray]:
+    """The step bounds a cell's replay should clock: serve decode steps,
+    multi-tenant completion bounds, or None."""
+    bounds = _serve_step_bounds(trace)
+    return bounds if bounds is not None else _mt_step_bounds(trace)
 
 
 def _serve_side_pass(cell: SweepCell, trace: Trace, config: UVMConfig,
@@ -606,6 +693,90 @@ def _serve_latency_row(cell: SweepCell, trace: Trace, config: UVMConfig,
     return row
 
 
+#: solo-replay cycles memo for the interference-slowdown columns: cells
+#: of one grid share solo baselines across capacity splits and backends
+#: (key: trace identity + tenant + solo capacity + replay knobs)
+_solo_memo: Dict[Tuple, int] = {}
+_solo_lock = threading.Lock()
+
+
+def _mt_solo_cycles(cell: SweepCell, trace: Trace, tenant: int,
+                    capacity: Optional[int], eviction: str,
+                    cache_dir: Optional[str]) -> int:
+    """Cycles of one tenant's *solo* replay: its accesses extracted from
+    the interleaved trace (``mt_component_trace``) and replayed alone on
+    the NumPy engine at ``capacity`` — the tenant's quota on split rows,
+    the full device on shared rows.  Memoized: every cell of a grid that
+    shares (trace, tenant, capacity, prefetcher, policy) reuses one
+    baseline replay."""
+    from repro.traces.interleave import mt_component_trace
+
+    key = (cell.bench, cell.scale, cell.seed, cell.window, tenant,
+           capacity, cell.prefetcher, eviction, cell.prediction_us,
+           cell.model_family)
+    with _solo_lock:
+        hit = _solo_memo.get(key)
+    if hit is not None:
+        return hit
+    solo = mt_component_trace(trace, tenant)
+    cfg = UVMConfig(prediction_overhead_us=cell.prediction_us,
+                    device_pages=capacity, eviction=eviction)
+    pf = make_prefetcher(cell, solo, cfg, cache_dir=cache_dir)
+    stats = get_backend("numpy").replay([ReplayRequest(solo, pf, cfg)])[0]
+    cycles = int(stats.cycles)
+    with _solo_lock:
+        _solo_memo.setdefault(key, cycles)
+    return cycles
+
+
+def _mt_row(cell: SweepCell, trace: Trace, config: UVMConfig,
+            stats: UVMStats, device_pages: Optional[int],
+            cache_dir: Optional[str]) -> Dict:
+    """The multi-tenant columns for one interleaved-trace row: tenant
+    count, the capacity split that ran, per-tenant hit rates, and the
+    interference slowdown (per-tenant completion cycles in the mix over
+    the tenant's solo replay)."""
+    from repro.traces.interleave import N_TENANTS, tenant_last_index
+
+    row: Dict = {"tenants": N_TENANTS,
+                 "capacity_split": cell.capacity_split or "shared"}
+    th, ta = stats.tenant_hits, stats.tenant_accesses
+    for t in range(N_TENANTS):
+        row[f"hit_rate_t{t}"] = (th[t] / ta[t]) if ta and ta[t] else None
+
+    last = tenant_last_index(trace)
+    bounds = sorted({i + 1 for i in last if i >= 0})
+    clocks = stats.step_clocks
+    if clocks is None or len(clocks) != len(bounds):
+        # a row without in-band clocks (or with desynchronized bounds)
+        # recovers them from the NumPy side pass, counter-checked
+        # against the primary replay like the serve rows
+        clocks = _serve_side_pass(cell, trace, config, stats,
+                                  np.asarray(bounds, dtype=np.int64),
+                                  cache_dir)
+    cyc_at = {b: float(c) for b, c in zip(bounds, np.asarray(clocks))}
+    slowdowns = []
+    for t in range(N_TENANTS):
+        if last[t] < 0:
+            row[f"slowdown_t{t}"] = None
+            continue
+        capacity = (config.tenant_pages[t] if config.tenant_pages
+                    else device_pages)
+        solo = _mt_solo_cycles(cell, trace, t, capacity, config.eviction,
+                               cache_dir)
+        sd = cyc_at[last[t] + 1] / solo if solo > 0 else None
+        row[f"slowdown_t{t}"] = sd
+        if sd is not None:
+            slowdowns.append(sd)
+    row["interference_slowdown"] = max(slowdowns) if slowdowns else None
+    return row
+
+
+def _is_mt_trace(trace: Trace) -> bool:
+    from repro.traces.interleave import tenant_boundary
+    return tenant_boundary(trace) is not None
+
+
 def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
                   trace: Optional[Trace] = None,
                   prefetcher: Optional[Prefetcher] = None,
@@ -618,16 +789,22 @@ def simulate_cell(cell: SweepCell, *, cache_dir: Optional[str] = None,
         cell, cache_dir=cache_dir, trace=trace, prefetcher=prefetcher)
     # serve traces carry decode-step bounds into the replay so the row
     # gets per-step clocks in one pass, whichever backend runs it (the
-    # pallas lanes capture them in-kernel)
-    step_bounds = _serve_step_bounds(trace)
+    # pallas lanes capture them in-kernel); multi-tenant traces reuse the
+    # same machinery for per-tenant completion cycles
+    serve_bounds = _serve_step_bounds(trace)
+    step_bounds = serve_bounds if serve_bounds is not None \
+        else _mt_step_bounds(trace)
     stats = simulate(trace, prefetcher, config, engine=cell.engine,
                      backend=cell.backend, record_timeline=record_timeline,
                      step_bounds=step_bounds)
     row = _finish_row(cell, stats, device_pages, time.time() - t0,
                       record_timeline)
-    if step_bounds is not None:
+    if serve_bounds is not None:
         row.update(_serve_latency_row(cell, trace, config, stats,
                                       cache_dir))
+    elif _is_mt_trace(trace):
+        row.update(_mt_row(cell, trace, config, stats, device_pages,
+                           cache_dir))
     return row
 
 
@@ -1123,6 +1300,9 @@ def _run_lane_batches(cells: Sequence[SweepCell],
             if req.trace.meta and "serve" in req.trace.meta:
                 row.update(_serve_latency_row(cells[i], req.trace,
                                               req.config, st, cache_dir))
+            elif _is_mt_trace(req.trace):
+                row.update(_mt_row(cells[i], req.trace, req.config, st,
+                                   cap, cache_dir))
             out[i] = row
         return out
 
@@ -1180,7 +1360,7 @@ def _run_lane_batches(cells: Sequence[SweepCell],
             trace, config, prefetcher, pages = fut.result()
             _top_up()                        # keep the lookahead full
             req = ReplayRequest(trace, prefetcher, config,
-                                step_bounds=_serve_step_bounds(trace))
+                                step_bounds=_step_bounds(trace))
             if not backend.can_replay(req):
                 continue                     # back to the per-cell pool path
             shape = _lane_shape(req)
@@ -1398,6 +1578,10 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--prediction-us", default="1.0")
     ap.add_argument("--device-fracs", default="",
                     help="e.g. '0.5,0.75' (empty = no oversubscription)")
+    ap.add_argument("--capacity-splits", default="",
+                    help="multi-tenant capacity splits for '<A>+<B>' "
+                         "benches, e.g. 'shared,0.5/0.5,0.4/0.4' "
+                         "(empty = shared capacity)")
     ap.add_argument("--evictions", default="lru",
                     help="eviction policies under oversubscription, comma "
                          f"list from {','.join(EVICTION_POLICIES)} or "
@@ -1449,13 +1633,28 @@ def main(argv: Optional[List[str]] = None) -> None:
             ap.error(f"unknown prefetcher(s) {','.join(bad)}; "
                      f"choose from {','.join(PREFETCHERS)}")
         from repro.offload.serve_trace import SERVE_WORKLOADS, is_serve_bench
+        from repro.traces.interleave import is_mt_bench
         bad = [b for b in benches
-               if b not in BENCHMARKS and not is_serve_bench(b)]
+               if b not in BENCHMARKS and not is_serve_bench(b)
+               and not is_mt_bench(b)]
         if bad:
             ap.error(f"unknown benchmark(s) {','.join(bad)}; "
-                     f"choose from {','.join(sorted(BENCHMARKS))} or serve "
+                     f"choose from {','.join(sorted(BENCHMARKS))}, "
+                     "multi-tenant pairs like ATAX+Pathfinder, or serve "
                      f"workloads {','.join(sorted(SERVE_WORKLOADS))} "
                      "(rate variants like ServeBursty@r128 accepted)")
+        splits: List[Optional[str]] = [None]
+        if args.capacity_splits:
+            splits = list(args.capacity_splits.split(","))
+            for s in splits:
+                try:
+                    parse_capacity_split(s)
+                except ValueError as e:
+                    ap.error(str(e))
+            mt_less = [b for b in benches if not is_mt_bench(b)]
+            if mt_less and any(parse_capacity_split(s) for s in splits):
+                ap.error(f"--capacity-splits needs multi-tenant benches; "
+                         f"{','.join(mt_less)} are single-tenant")
         evictions = args.evictions.split(",")
         ev_vocab = EVICTION_POLICIES + (adaptive.ADAPTIVE_POLICY,)
         bad = [e for e in evictions if e not in ev_vocab]
@@ -1477,8 +1676,8 @@ def main(argv: Optional[List[str]] = None) -> None:
                      for x in args.windows.split(",")],
             prediction_us=[float(x) for x in args.prediction_us.split(",")],
             device_fracs=fracs, evictions=evictions,
-            model_families=model_families, engine=args.engine,
-            backend=backend)
+            model_families=model_families, capacity_splits=splits,
+            engine=args.engine, backend=backend)
     t0 = time.time()
     rows = run_sweep(cells, out_dir=args.out, workers=args.workers,
                      resume=not args.no_resume, verbose=True)

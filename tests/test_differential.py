@@ -21,6 +21,10 @@ Coverage is deliberately skewed toward the paper's hard regimes:
 * tight-MSHR fault storms and ragged tiny traces,
 * serving-traffic traces (``repro.offload.serve_trace``): the
   PagedKVStore-derived trace source replays through the same guarantee,
+* multi-tenant interleaved traces (``repro.traces.interleave``) under
+  shared capacity AND hard per-tenant quotas with a spill pool: the
+  per-tenant hit/access counters and the tenant-masked victim selection
+  are part of the pairwise guarantee (``tenant_pages`` is a fuzz axis),
 * every eviction policy (lru/random/hotcold): the policy is a first-class
   fuzz axis, so every (backend pair × policy) combination is covered by
   construction — a seeded deterministic sweep exercises all policies even
@@ -79,10 +83,17 @@ def _assert_pairwise_equal(stats_by_backend, context):
                 getattr(ref, f), rel=1e-9, abs=1e-9), (
                 f"{context}: {name} vs {ref_name}: {f} "
                 f"{getattr(got, f)} != {getattr(ref, f)}")
+        # multi-tenant cells: per-tenant counters are part of the
+        # guarantee too (None == None on single-tenant cells)
+        for f in ("tenant_hits", "tenant_accesses"):
+            g, r = getattr(got, f), getattr(ref, f)
+            assert (g is None) == (r is None) and (
+                g is None or tuple(map(int, g)) == tuple(map(int, r))), (
+                f"{context}: {name} vs {ref_name}: {f} {g} != {r}")
 
 
 def _replay_trace_everywhere(trace, pf_name, cap, mshr, eviction="lru",
-                             step_bounds=None):
+                             step_bounds=None, tenant_pages=None):
     """Replay one (trace, config, prefetcher) cell through every accepting
     backend; returns {backend_name: stats}.
 
@@ -90,7 +101,7 @@ def _replay_trace_everywhere(trace, pf_name, cap, mshr, eviction="lru",
     required backend must still accept the request (pallas captures the
     clocks in-kernel), report a clock per window, and agree bitwise."""
     config = UVMConfig(device_pages=cap, mshr_entries=mshr,
-                       eviction=eviction)
+                       eviction=eviction, tenant_pages=tenant_pages)
     stats_by_backend = {}
     for name in available_backends():
         backend = get_backend(name)
@@ -275,6 +286,78 @@ def test_differential_serve_traces(cell):
     _assert_pairwise_equal(stats, f"[serve {name} n={len(trace)}]")
 
 
+# ---------------------------------------------------------------------------
+# multi-tenant cells: tenancy (boundary-derived) + quota/spill arithmetic
+# ---------------------------------------------------------------------------
+
+#: tenant 1's region base for synthetic mt traces — far above every page
+#: _random_pages can draw (< 2048), with room to spare
+MT_BOUNDARY = 16 * ROOT_PAGES
+
+
+def _mk_mt_trace(pages0, pages1):
+    """Two fuzzed page streams as one interleaved multi-tenant trace:
+    tenant 1 rebased above ``MT_BOUNDARY``, clock-proportional merge
+    (same key arithmetic as ``repro.traces.interleave``)."""
+    pages0 = np.asarray(pages0, dtype=np.int64)
+    pages1 = np.asarray(pages1, dtype=np.int64) + MT_BOUNDARY
+    na, nb = len(pages0), len(pages1)
+    keys = np.concatenate([np.arange(1, na + 1, dtype=np.int64) * nb,
+                           np.arange(1, nb + 1, dtype=np.int64) * na])
+    order = np.argsort(keys, kind="stable")
+    pages = np.concatenate([pages0, pages1])[order]
+    recs = make_records(len(pages))
+    recs["page"] = pages
+    return Trace("fuzz-mt", recs, {}, {}, len(pages) * 100,
+                 meta={"mt": {"benches": ["A", "B"], "tenants": 2,
+                              "boundary": int(MT_BOUNDARY)}})
+
+
+#: (q0, q1) quota splits fuzzed against a 240-page device: generous,
+#: zero-spill, and asymmetric-with-spill
+MT_SPLITS = (None, (80, 80), (100, 100), (140, 20))
+
+
+def _mt_cells():
+    rng = np.random.default_rng(20260808)
+    cells = []
+    for i, pf_name in enumerate(PREFETCHER_NAMES):
+        for j, policy in enumerate(EVICTION_POLICIES):
+            tp = MT_SPLITS[(i + j) % len(MT_SPLITS)]
+            cap = 240 if tp else [None, 150][(i + j) % 2]
+            cells.append((f"mt-{pf_name}-{policy}", _random_pages(rng),
+                          _random_pages(rng), pf_name, cap, policy, tp))
+    return cells
+
+
+@pytest.mark.parametrize("cell", _mt_cells(), ids=lambda c: c[0])
+def test_differential_multitenant_cells(cell):
+    """Seeded multi-tenant cells — every (prefetcher, policy) pair across
+    shared and quota splits — agree across every backend pair, per-tenant
+    counters included."""
+    name, p0, p1, pf_name, cap, policy, tp = cell
+    stats = _replay_trace_everywhere(_mk_mt_trace(p0, p1), pf_name, cap,
+                                     16, policy, tenant_pages=tp)
+    for backend, st in stats.items():
+        assert st.tenant_hits is not None, backend
+        assert sum(st.tenant_accesses) == st.n_accesses, backend
+        assert sum(st.tenant_hits) == st.hits, backend
+    _assert_pairwise_equal(stats, f"[{name} cap={cap} quotas={tp}]")
+
+
+def test_differential_multitenant_step_clocks():
+    """A quota-split mt cell with drawn step bounds: the in-kernel clock
+    path and the tenancy plane compose — counters, per-tenant counters,
+    and per-window clocks all agree bitwise."""
+    rng = np.random.default_rng(11)
+    trace = _mk_mt_trace(_random_pages(rng), _random_pages(rng))
+    bounds = _draw_bounds(rng, len(trace.accesses))
+    stats = _replay_trace_everywhere(trace, "tree", 240, 16, "hotcold",
+                                     step_bounds=bounds,
+                                     tenant_pages=(100, 100))
+    _assert_pairwise_equal(stats, f"[mt clocks windows={len(bounds)}]")
+
+
 def test_differential_learned_cached_matches_plain():
     """Learned cells whose predictions round-trip the predcache store
     agree across all backends AND with the direct-array learned cell on
@@ -361,6 +444,28 @@ if HAVE_HYPOTHESIS:
                                f"[clocks {pf_name} cap={cap} "
                                f"eviction={eviction} "
                                f"windows={len(bounds)}]")
+
+    _mt_cell = st_.tuples(
+        _pages, _pages,                          # one stream per tenant
+        st_.sampled_from(PREFETCHER_NAMES),
+        st_.sampled_from(EVICTION_POLICIES),
+        st_.sampled_from(MT_SPLITS),             # shared + quota splits
+    )
+
+    @settings(max_examples=12, deadline=None)
+    @given(_mt_cell)
+    def test_differential_multitenant_random(cell):
+        """Random multi-tenant cells (two fuzzed streams, every
+        prefetcher/policy, shared vs quota capacity): the tenancy plane
+        agrees across every backend pair by construction."""
+        pages0, pages1, pf_name, eviction, tp = cell
+        cap = 240 if tp else 150
+        stats = _replay_trace_everywhere(_mk_mt_trace(pages0, pages1),
+                                         pf_name, cap, 16, eviction,
+                                         tenant_pages=tp)
+        _assert_pairwise_equal(stats,
+                               f"[mt {pf_name} eviction={eviction} "
+                               f"quotas={tp}]")
 
     @settings(max_examples=8, deadline=None)
     @given(st_.integers(0, 2 ** 32 - 1), st_.sampled_from([None, 700, 1100]),

@@ -116,6 +116,26 @@ def test_sorted_percentiles_rejects_bad_input():
         sorted_percentiles(np.array([1.0]), (-1,))
 
 
+def test_sorted_percentiles_rejects_non_finite():
+    """np.sort parks NaN at the tail, so a NaN-poisoned clock stream
+    would land in the high percentiles and sail through p50<=p99 checks
+    (NaN comparisons are all False) — the helper must refuse loudly."""
+    with pytest.raises(ValueError, match="non-finite"):
+        sorted_percentiles(np.array([1.0, 2.0, np.nan]), (50, 99))
+    with pytest.raises(ValueError, match="non-finite"):
+        sorted_percentiles(np.array([np.inf]), (50,))
+    with pytest.raises(ValueError, match="non-finite"):
+        sorted_percentiles(np.array([-np.inf, 3.0]), (50,))
+    # the message counts the poisoned samples for triage
+    with pytest.raises(ValueError, match="2 of 3"):
+        sorted_percentiles(np.array([np.nan, 1.0, np.nan]), (50,))
+
+
+def test_slo_percentiles_rejects_non_finite():
+    with pytest.raises(ValueError, match="non-finite"):
+        slo_percentiles([1.0, np.nan, 3.0], "decode_lat")
+
+
 def test_slo_percentiles_columns():
     row = slo_percentiles([3.0, 1.0, 2.0], "decode_lat")
     assert set(row) == {"decode_lat_p50_us", "decode_lat_p95_us",
@@ -166,6 +186,29 @@ def test_timeline_bins_by_window_and_sums_bytes():
     np.testing.assert_allclose(
         out[:, 1],
         np.array([8192.0, 4096.0, 0.0, 8192.0]) / secs / 1e9)
+
+
+def test_timeline_rejects_bad_stamps_and_window():
+    """A negative cycle stamp floor-divides to a negative window index,
+    which np.add.at wraps to the *tail* window — the bandwidth spike
+    lands at the wrong end of the plot with no error.  Non-finite stamps
+    blow up the window count.  Both must be rejected, as must a
+    non-positive window."""
+    with pytest.raises(ValueError, match="negative or non-finite"):
+        pcie_gbs_timeline(np.array([[-1.0, 4096.0]]), core_mhz=1481.0)
+    with pytest.raises(ValueError, match="negative or non-finite"):
+        pcie_gbs_timeline(np.array([[np.nan, 4096.0], [5.0, 4096.0]]),
+                          core_mhz=1481.0)
+    with pytest.raises(ValueError, match="negative or non-finite"):
+        pcie_gbs_timeline(np.array([[np.inf, 4096.0]]), core_mhz=1481.0)
+    # the message counts the offending stamps
+    with pytest.raises(ValueError, match="2 of 3"):
+        pcie_gbs_timeline(
+            np.array([[-2.0, 1.0], [np.nan, 1.0], [7.0, 1.0]]),
+            core_mhz=1481.0)
+    with pytest.raises(ValueError, match="window_cycles"):
+        pcie_gbs_timeline(np.array([[1.0, 4096.0]]), core_mhz=1481.0,
+                          window_cycles=0.0)
 
 
 def test_timeline_total_bytes_conserved():

@@ -690,6 +690,84 @@ def test_selector_from_rows_picks_cheapest_per_bench():
                                         "C": "lru"}
 
 
+def test_adaptive_table_parsed_once_per_mtime(tmp_path, monkeypatch):
+    """The selector table is parsed once per (path, mtime): prepare-stage
+    threads resolving thousands of cells must not re-read + re-parse the
+    JSON per cell.  Editing the file (new mtime) invalidates the cache;
+    an unreadable path fails loudly with the env var named."""
+    import repro.uvm.adaptive as adaptive
+
+    adaptive.clear_memo()
+    table = tmp_path / "table.json"
+    table.write_text(json.dumps({"ATAX": "hotcold"}))
+    monkeypatch.setenv("REPRO_ADAPTIVE_TABLE", str(table))
+
+    opens = []
+    real_open = open
+
+    def counting_open(path, *a, **kw):
+        if str(path) == str(table):
+            opens.append(path)
+        return real_open(path, *a, **kw)
+
+    # adaptive._table reads via the open builtin resolved in its module
+    monkeypatch.setattr(adaptive, "open", counting_open, raising=False)
+    for _ in range(5):
+        assert adaptive.resolve_eviction("adaptive", "ATAX") == "hotcold"
+    assert len(opens) == 1                 # parsed once, served 5x
+
+    # content change (bump mtime explicitly: coarse filesystem
+    # timestamps could otherwise collide) -> one re-parse
+    table.write_text(json.dumps({"ATAX": "random"}))
+    st = os.stat(table)
+    os.utime(table, ns=(st.st_atime_ns, st.st_mtime_ns + 1))
+    assert adaptive.resolve_eviction("adaptive", "ATAX") == "random"
+    assert adaptive.resolve_eviction("adaptive", "ATAX") == "random"
+    assert len(opens) == 2
+
+    monkeypatch.setenv("REPRO_ADAPTIVE_TABLE", str(tmp_path / "gone.json"))
+    with pytest.raises(FileNotFoundError, match="REPRO_ADAPTIVE_TABLE"):
+        adaptive.resolve_eviction("adaptive", "ATAX")
+    adaptive.clear_memo()
+
+
+def test_adaptive_probe_keyed_by_prefetcher_family(monkeypatch):
+    """The probe replays under the cell's prefetcher-family proxy and the
+    memo keys on it: a tree cell must not be resolved from demand-paging
+    behavior, while oracle and learned cells share one oracle probe."""
+    from repro.uvm import adaptive
+    from repro.uvm.eviction import EVICTION_POLICIES
+
+    assert adaptive.probe_proxy(None) == "none"
+    assert adaptive.probe_proxy("none") == "none"
+    assert adaptive.probe_proxy("block") == "block"
+    assert adaptive.probe_proxy("tree") == "tree"
+    assert adaptive.probe_proxy("oracle") == "oracle"
+    assert adaptive.probe_proxy("learned") == "oracle"
+
+    trace = load_trace("ATAX", 0.25, 0, 0.6)
+    cap = trace.working_set_pages // 2
+    probes = []
+    orig_probe = adaptive._probe
+
+    def counting_probe(tr, device_pages, probe_accesses, proxy="none"):
+        probes.append(proxy)
+        return orig_probe(tr, device_pages, probe_accesses, proxy)
+
+    monkeypatch.setattr(adaptive, "_probe", counting_probe)
+    monkeypatch.delenv("REPRO_ADAPTIVE_TABLE", raising=False)
+    adaptive.clear_memo()
+    kw = dict(trace=trace, device_pages=cap, probe_accesses=2000)
+    for pf in ("none", "tree", "oracle", "learned", "tree", "none"):
+        got = adaptive.resolve_eviction("adaptive", "ATAX", prefetcher=pf,
+                                        **kw)
+        assert got in EVICTION_POLICIES
+    # one probe per distinct proxy family; learned reused oracle's and
+    # the repeats hit the memo
+    assert probes == ["none", "tree", "oracle"]
+    adaptive.clear_memo()
+
+
 # ---------------------------------------------------------------------------
 # serve rows: SLO columns come from in-band step clocks (slo_source)
 # ---------------------------------------------------------------------------

@@ -64,6 +64,11 @@ def _assert_stats_match(got, want, *, rel, context):
     for f in FLOAT_FIELDS:
         assert got[f] == pytest.approx(want[f], rel=rel, abs=1e-9), (
             f"{context}: {f} {got[f]} != {want[f]}")
+    # multi-tenant cells additionally pin the per-tenant accounting
+    # (exact: integer counters per tenant)
+    for f in ("tenant_hits", "tenant_accesses"):
+        assert list(got.get(f) or []) == list(want.get(f) or []), (
+            f"{context}: {f} {got.get(f)} != {want.get(f)}")
 
 
 @pytest.mark.parametrize("cell_id", golden_cell_ids())
